@@ -1,0 +1,53 @@
+"""Shared benchmark fixtures: corpus/index/query construction + timing."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as index_mod
+from repro.data import synthetic as syn
+
+
+@functools.lru_cache(maxsize=4)
+def corpus_and_index(n_docs: int, dim: int = 128, nbits: int = 2, seed: int = 0):
+    docs, _ = syn.embedding_corpus(n_docs, dim=dim, seed=seed)
+    index = index_mod.build_index(docs, nbits=nbits, kmeans_iters=4, seed=seed)
+    return docs, index
+
+
+def queries(docs, n: int, q_len: int = 16, seed: int = 1):
+    qs, gold = syn.queries_from_docs(docs, n, q_len=q_len, seed=seed)
+    return jnp.asarray(qs), gold
+
+
+def time_batched(fn, qs, batch: int = 16, trials: int = 3):
+    """Paper protocol: average per-query latency, min over trials."""
+    fn(qs[:batch])  # warmup/compile
+    jax.block_until_ready(fn(qs[:batch]))
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for i in range(0, qs.shape[0], batch):
+            out = fn(qs[i : i + batch])
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / qs.shape[0])
+    return best * 1e3  # ms/query
+
+
+def success_at_1(pids, gold) -> float:
+    return float((np.asarray(pids)[:, 0] == gold).mean())
+
+
+def recall_vs(pids, ref_pids, k: int) -> float:
+    return float(
+        np.mean(
+            [
+                len(set(np.asarray(p)[:k]) & set(np.asarray(r)[:k])) / k
+                for p, r in zip(pids, ref_pids)
+            ]
+        )
+    )

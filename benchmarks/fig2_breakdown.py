@@ -1,0 +1,104 @@
+"""Fig. 2 analog: per-stage latency breakdown, vanilla vs PLAID.
+
+The paper's headline diagnosis: vanilla ColBERTv2 spends its time in index
+lookup + residual decompression; PLAID's centroid stages eliminate most of
+it.  We time jitted sub-pipelines per stage (stage-boundary tensors forced
+with block_until_ready).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plaid, scoring
+from repro.core import residual_codec as rc
+
+from benchmarks import common
+
+N_DOCS = 8000
+
+
+def _timeit(fn, *args, reps=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def run(emit):
+    docs, index = common.corpus_and_index(N_DOCS)
+    qs, _ = common.queries(docs, 8)
+    q, q_mask = qs[0], jnp.ones(qs.shape[1])
+    p = plaid.params_for_k(100)
+    cap = min(p.candidate_cap, index.num_passages)
+
+    # ---- PLAID stages
+    s1 = jax.jit(
+        lambda q: plaid.candidate_generation(
+            index, scoring.centroid_scores(q, index.centroids), p.nprobe, cap
+        )
+    )
+    t1 = _timeit(s1, q)
+    cands = s1(q)
+
+    def stage23(q, cands):
+        s_cq = scoring.centroid_scores(q, index.centroids)
+        keep = scoring.prune_mask(s_cq, p.t_cs)
+        codes_blk, tok_valid = scoring.gather_doc_tokens(
+            index.codes, index.doc_offsets, index.doc_lens, cands,
+            index.doc_maxlen, fill=-1,
+        )
+        a2 = scoring.centroid_interaction(s_cq, codes_blk, q_mask, keep)
+        _, idx2 = jax.lax.top_k(a2, min(p.ndocs, cap))
+        a3 = scoring.centroid_interaction(s_cq, codes_blk[idx2], q_mask)
+        _, idx3 = jax.lax.top_k(a3, max(p.ndocs // 4, p.k))
+        return cands[idx2][idx3]
+
+    s23 = jax.jit(stage23)
+    t23 = _timeit(s23, q, cands) - t1 * 0  # includes s_cq recompute (small)
+    final = s23(q, cands)
+
+    def stage4(q, final):
+        codes_blk, tok_valid = scoring.gather_doc_tokens(
+            index.codes, index.doc_offsets, index.doc_lens, final,
+            index.doc_maxlen, fill=-1,
+        )
+        res_blk, _ = scoring.gather_doc_tokens(
+            index.residuals, index.doc_offsets, index.doc_lens, final,
+            index.doc_maxlen, fill=jnp.uint8(0),
+        )
+        return plaid.decompress_and_score_ref(
+            index, q, q_mask, codes_blk, res_blk, tok_valid
+        )
+
+    t4 = _timeit(jax.jit(stage4), q, final)
+    emit("fig2", "plaid_stage1_candidates", ms=round(t1, 3))
+    emit("fig2", "plaid_stage23_interaction", ms=round(t23, 3))
+    emit("fig2", "plaid_stage4_decompress_score", ms=round(t4, 3))
+
+    # ---- vanilla: lookup+decompress of the big embedding candidate set
+    nc = min(2**13, index.num_tokens)
+
+    def vanilla_lookup_decompress(q):
+        s_cq = scoring.centroid_scores(q, index.centroids)
+        _, cids = jax.lax.top_k(s_cq.T, 4)
+        starts = index.eivf_offsets[cids.reshape(-1)]
+        lens = index.eivf_lens[cids.reshape(-1)]
+        pos = jnp.arange(index.eivf_list_cap, dtype=jnp.int32)
+        idx = jnp.where(pos[None] < lens[:, None], starts[:, None] + pos[None], 0)
+        eids = jnp.unique(
+            jnp.where(pos[None] < lens[:, None], index.eivf_eids[idx], -1).reshape(-1),
+            size=nc, fill_value=-1,
+        )
+        safe = jnp.where(eids >= 0, eids, 0)
+        return rc.decompress(
+            index.codec, index.codes[safe], index.residuals[safe], index.centroids
+        )
+
+    tv = _timeit(jax.jit(vanilla_lookup_decompress), q)
+    emit("fig2", "vanilla_lookup_decompress", ms=round(tv, 3),
+         note="the paper's Fig2a bottleneck PLAID removes")

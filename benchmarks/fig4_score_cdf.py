@@ -1,0 +1,30 @@
+"""Fig. 4 analog: per-query distribution of max centroid relevance scores —
+validates §3.4 (only a small tail of centroids matters, motivating
+centroid pruning with t_cs)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import scoring
+
+from benchmarks import common
+
+
+def run(emit):
+    docs, index = common.corpus_and_index(4000)
+    qs, _ = common.queries(docs, 15)
+    fracs_above = {0.3: [], 0.4: [], 0.5: []}
+    quantiles = []
+    for q in qs:
+        s_cq = scoring.centroid_scores(q, index.centroids)  # (K, nq)
+        mx = np.asarray(s_cq.max(axis=-1))
+        quantiles.append(np.percentile(mx, [50, 90, 99, 100]))
+        for t in fracs_above:
+            fracs_above[t].append(float((mx >= t).mean()))
+    med, p90, p99, p100 = np.mean(quantiles, axis=0)
+    emit(
+        "fig4", "centroid_score_dist",
+        median=round(float(med), 4), p90=round(float(p90), 4),
+        p99=round(float(p99), 4), max=round(float(p100), 4),
+        **{f"frac_ge_{t}": round(float(np.mean(v)), 4) for t, v in fracs_above.items()},
+    )

@@ -1,0 +1,50 @@
+"""Fig. 6 analog: ablation of PLAID's optimizations at k=1000-equivalent
+settings.  Stages: vanilla -> + centroid interaction (stage 3 only) ->
++ centroid pruning (stage 2) -> + kernels (pallas interpret on CPU; on TPU
+the same kernels lower through Mosaic)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import plaid, vanilla
+
+from benchmarks import common
+
+N_DOCS = 8000
+
+
+def run(emit):
+    docs, index = common.corpus_and_index(N_DOCS)
+    qs, _ = common.queries(docs, 48)
+    k = 100
+
+    vs = vanilla.VanillaSearcher(
+        index, vanilla.VanillaParams(k=k, nprobe=4, ncandidates=2**13)
+    )
+    t_vanilla = common.time_batched(lambda q: vs.search_batch(q)[1], qs)
+    emit("fig6", "vanilla", ms_per_query=round(t_vanilla, 3), speedup=1.0)
+
+    # + centroid interaction, no pruning (t_cs very low disables stage-2 cut)
+    sp1 = dataclasses.replace(plaid.params_for_k(k), t_cs=-1e9)
+    t_inter = common.time_batched(
+        lambda q: plaid.PlaidSearcher(index, sp1).search_batch(q)[1], qs
+    )
+    emit("fig6", "centroid_interaction", ms_per_query=round(t_inter, 3),
+         speedup=round(t_vanilla / t_inter, 2))
+
+    # + centroid pruning (paper t_cs)
+    sp2 = plaid.params_for_k(k)
+    t_prune = common.time_batched(
+        lambda q: plaid.PlaidSearcher(index, sp2).search_batch(q)[1], qs
+    )
+    emit("fig6", "plus_pruning", ms_per_query=round(t_prune, 3),
+         speedup=round(t_vanilla / t_prune, 2))
+
+    # + kernels (interpret mode on CPU: correctness-true, perf indicative
+    # only on real TPU — recorded for completeness)
+    sp3 = plaid.params_for_k(k, impl="pallas")
+    t_kern = common.time_batched(
+        lambda q: plaid.PlaidSearcher(index, sp3).search_batch(q)[1], qs
+    )
+    emit("fig6", "plus_kernels_interpret", ms_per_query=round(t_kern, 3),
+         speedup=round(t_vanilla / t_kern, 2))

@@ -1,0 +1,32 @@
+"""Fig. 7 analog: PLAID latency vs corpus size (log-log slope ~ sqrt per the
+paper, because #centroids scales with sqrt(#embeddings))."""
+from __future__ import annotations
+
+import math
+
+from repro.core import plaid
+
+from benchmarks import common
+
+
+def run(emit):
+    sizes = [1000, 4000, 16000]
+    points = []
+    for n in sizes:
+        docs, index = common.corpus_and_index(n)
+        qs, gold = common.queries(docs, 32)
+        ps = plaid.PlaidSearcher(index, plaid.params_for_k(100))
+        ms = common.time_batched(lambda q: ps.search_batch(q)[1], qs)
+        _, pids = ps.search_batch(qs)
+        emit(
+            "fig7", f"n{n}",
+            n_docs=n, n_embeddings=index.num_tokens,
+            n_centroids=index.num_centroids,
+            ms_per_query=round(ms, 3),
+            success_at_1=common.success_at_1(pids, gold),
+        )
+        points.append((index.num_tokens, ms))
+    # fitted log-log slope (paper reports ~0.5)
+    (x1, y1), (x2, y2) = points[0], points[-1]
+    slope = (math.log(y2) - math.log(y1)) / (math.log(x2) - math.log(x1))
+    emit("fig7", "loglog_slope", slope=round(slope, 3))

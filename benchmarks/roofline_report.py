@@ -1,0 +1,97 @@
+"""Render the dry-run JSONL into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(path):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                recs.append(json.loads(line))
+    # keep the LAST record per (arch, shape, mesh) — reruns supersede
+    dedup = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def table(recs, mesh):
+    rows = [r for r in recs if r["mesh"] == mesh]
+    out = [
+        "| arch | shape | status | mem/dev | compute | memory | collective |"
+        " dominant | useful | roofline |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skip":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | SKIP | - | - | - | - | - | - | - |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | **FAIL** | - | - | - | - | - | - | - |"
+            )
+            continue
+        mem = (r.get("mem_args") or 0) + (r.get("mem_temp") or 0) - (
+            r.get("mem_alias") or 0
+        )
+        out.append(
+            "| {arch} | {shape} | ok | {mem} | {c} | {m} | {x} | {dom} |"
+            " {useful:.2f} | {rf:.3f} |".format(
+                arch=r["arch"], shape=r["shape"], mem=fmt_b(mem),
+                c=fmt_s(r["compute_s"]), m=fmt_s(r["memory_s"]),
+                x=fmt_s(r["collective_s"]), dom=r["dominant"],
+                useful=r.get("useful_ratio", 0),
+                rf=r.get("roofline_fraction", 0),
+            )
+        )
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.jsonl"
+    recs = load(path)
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skip = sum(1 for r in recs if r["status"] == "skip")
+    fail = sum(1 for r in recs if r["status"] == "fail")
+    print(f"## Dry-run summary: {ok} ok / {skip} skip / {fail} fail\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"### Mesh {mesh}\n")
+        print(table(recs, mesh))
+        print()
+    if fail:
+        print("### Failures\n")
+        for r in recs:
+            if r["status"] == "fail":
+                print(f"- {r['arch']}/{r['shape']}/{r['mesh']}: {r['error'][:300]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only table3]`` prints
+``bench,case,key=value,...`` CSV-ish lines (machine-greppable) and a summary.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = [
+    "table3_endtoend",
+    "fig2_breakdown",
+    "fig3_centroid_recall",
+    "fig4_score_cdf",
+    "fig6_ablation",
+    "fig7_scaling",
+    "fig8_parallel",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    rows = []
+
+    def emit(bench, case, **kv):
+        parts = ",".join(f"{k}={v}" for k, v in kv.items())
+        line = f"{bench},{case},{parts}"
+        rows.append(line)
+        print(line, flush=True)
+
+    import importlib
+
+    for name in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        mod.run(emit)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    print(f"# total {len(rows)} results")
+
+
+if __name__ == "__main__":
+    main()

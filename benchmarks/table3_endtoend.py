@@ -1,0 +1,43 @@
+"""Table 3 analog: end-to-end latency + quality, PLAID k∈{10,100,1000} vs
+vanilla ColBERTv2 (same index, same substrate, CPU) on a synthetic corpus.
+
+Reported: ms/query (min-of-3 averages, paper protocol), success@1 against
+the generating document, recall@10 vs vanilla's top-10, and the speedup.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import plaid, vanilla
+
+from benchmarks import common
+
+N_DOCS = 8000
+N_QUERIES = 64
+
+
+def run(emit):
+    docs, index = common.corpus_and_index(N_DOCS)
+    qs, gold = common.queries(docs, N_QUERIES)
+
+    vs = vanilla.VanillaSearcher(
+        index, vanilla.VanillaParams(k=1000, nprobe=4, ncandidates=2**13)
+    )
+    v_ms = common.time_batched(lambda q: vs.search_batch(q)[1], qs)
+    _, v_pids = vs.search_batch(qs)
+    emit("table3", "vanilla_p4_c8192", ms_per_query=round(v_ms, 3),
+         success_at_1=common.success_at_1(v_pids, gold))
+
+    for k in (10, 100, 1000):
+        params = plaid.params_for_k(k)
+        ps = plaid.PlaidSearcher(index, params)
+        p_ms = common.time_batched(lambda q: ps.search_batch(q)[1], qs)
+        _, p_pids = ps.search_batch(qs)
+        emit(
+            "table3",
+            f"plaid_k{k}",
+            ms_per_query=round(p_ms, 3),
+            success_at_1=common.success_at_1(p_pids, gold),
+            recall10_vs_vanilla=round(common.recall_vs(p_pids, v_pids, min(k, 10)), 4),
+            speedup_vs_vanilla=round(v_ms / p_ms, 2),
+        )

@@ -1,0 +1,30 @@
+"""Quickstart: build a PLAID index and search it, in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as index_mod
+from repro.core.plaid import PlaidSearcher, params_for_k
+from repro.data.synthetic import embedding_corpus, queries_from_docs
+
+# 1. a corpus of token-level embedding matrices (one per passage) — in a real
+#    deployment these come from the ColBERT encoder (examples/serve_retrieval.py)
+docs, _ = embedding_corpus(n_docs=5000, dim=128, seed=0)
+
+# 2. index it: k-means centroids + 2-bit residual compression + centroid->pid IVF
+index = index_mod.build_index(docs, nbits=2)
+print(
+    f"index: {index.num_passages} passages, {index.num_tokens} tokens, "
+    f"{index.num_centroids} centroids"
+)
+
+# 3. search with the PLAID 4-stage pipeline (paper Table 2 settings for k=10)
+searcher = PlaidSearcher(index, params_for_k(10))
+queries, gold = queries_from_docs(docs, n_queries=16)
+scores, pids = searcher.search_batch(jnp.asarray(queries))
+
+hits = (np.asarray(pids[:, 0]) == gold).mean()
+print(f"top-1 = gold passage for {hits:.0%} of queries")
+print("first query top-5:", np.asarray(pids[0][:5]), np.asarray(scores[0][:5]).round(3))

@@ -1,0 +1,39 @@
+"""Arch registry: ``--arch <id>`` resolves through here."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    # LM family
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "yi-34b": "repro.configs.yi_34b",
+    "granite-34b": "repro.configs.granite_34b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    # GNN
+    "schnet": "repro.configs.schnet",
+    # RecSys
+    "xdeepfm": "repro.configs.xdeepfm",
+    "bst": "repro.configs.bst",
+    "bert4rec": "repro.configs.bert4rec",
+    "wide-deep": "repro.configs.wide_deep",
+    # the paper's own architecture
+    "plaid-colbertv2": "repro.configs.colbertv2",
+}
+
+ARCH_IDS = list(_MODULES)
+ASSIGNED_ARCH_IDS = [a for a in ARCH_IDS if a != "plaid-colbertv2"]
+
+
+def get(arch_id: str):
+    """Return the arch config module for ``--arch <id>``."""
+    if arch_id not in _MODULES:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {', '.join(ARCH_IDS)}"
+        )
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def cells_of(arch_id: str):
+    mod = get(arch_id)
+    return {c.name: c for c in mod.CELLS}

@@ -1,0 +1,48 @@
+"""plaid-colbertv2 — the paper's own architecture: a BERT-base-class
+late-interaction encoder (~110M params) trained with ColBERTv2 supervision,
+served through the PLAID engine (document-sharded, DESIGN §3)."""
+import jax.numpy as jnp
+
+from repro.configs import common
+from repro.models.colbert import ColBERTConfig
+from repro.models.transformer import TransformerConfig
+
+FAMILY = "retrieval"
+
+
+def full_config() -> ColBERTConfig:
+    backbone = TransformerConfig(
+        name="colbert-backbone",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_ff=3072,
+        vocab=30528,  # bert-base vocab padded to /16
+        causal=False,
+        tp_multiple=16,
+        dtype=jnp.bfloat16,
+        q_chunk=256,
+        k_chunk=256,
+    )
+    return ColBERTConfig(backbone=backbone, out_dim=128, nway=4)
+
+
+def reduced_config() -> ColBERTConfig:
+    backbone = TransformerConfig(
+        name="colbert-backbone-reduced",
+        n_layers=2,
+        d_model=32,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=64,
+        vocab=128,
+        causal=False,
+        dtype=jnp.float32,
+        q_chunk=8,
+        k_chunk=8,
+    )
+    return ColBERTConfig(backbone=backbone, out_dim=16, nway=2)
+
+
+CELLS = common.retrieval_cells()

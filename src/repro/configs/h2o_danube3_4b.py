@@ -1,0 +1,45 @@
+"""h2o-danube-3-4b [arXiv:2401.16818]: llama+mistral mix with sliding-window
+attention — the only assigned LM arch that runs ``long_500k`` (window-bounded
+KV cache)."""
+import jax.numpy as jnp
+
+from repro.configs import common
+from repro.models.transformer import TransformerConfig
+
+FAMILY = "lm"
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="h2o-danube-3-4b",
+        n_layers=24,
+        d_model=3840,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=10240,
+        vocab=32000,
+        window=4096,  # Mistral-style SWA
+        tp_multiple=16,
+        dtype=jnp.bfloat16,
+        q_chunk=1024,
+        k_chunk=1024,
+    )
+
+
+def reduced_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="h2o-danube-3-4b-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=160,
+        vocab=256,
+        window=16,
+        dtype=jnp.float32,
+        q_chunk=16,
+        k_chunk=16,
+    )
+
+
+CELLS = common.lm_cells(long_skip=None)  # SWA -> long_500k runs

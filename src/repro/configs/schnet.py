@@ -1,0 +1,33 @@
+"""schnet [arXiv:1706.08566]: continuous-filter message passing.
+
+The paper's technique (PLAID retrieval) is INAPPLICABLE to a molecular-
+energy model — implemented without it (DESIGN §Arch-applicability).  Graph-
+regime cells (cora/reddit/products shapes) use the node-feature projection
+adaptation; ``molecule`` is the faithful SchNet."""
+from repro.configs import common
+from repro.models.schnet import SchNetConfig
+
+FAMILY = "gnn"
+
+
+def full_config() -> SchNetConfig:
+    return SchNetConfig(
+        name="schnet",
+        n_interactions=3,
+        d_hidden=64,
+        n_rbf=300,
+        cutoff=10.0,
+    )
+
+
+def reduced_config() -> SchNetConfig:
+    return SchNetConfig(
+        name="schnet-reduced",
+        n_interactions=2,
+        d_hidden=16,
+        n_rbf=20,
+        cutoff=10.0,
+    )
+
+
+CELLS = common.gnn_cells()

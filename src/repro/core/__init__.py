@@ -1,0 +1,15 @@
+"""PLAID core: late-interaction retrieval engine (the paper's contribution)."""
+from repro.core.index import PlaidIndex, build_index
+from repro.core.plaid import PAPER_PARAMS, PlaidSearcher, SearchParams, params_for_k
+from repro.core.vanilla import VanillaParams, VanillaSearcher
+
+__all__ = [
+    "PlaidIndex",
+    "build_index",
+    "PlaidSearcher",
+    "SearchParams",
+    "PAPER_PARAMS",
+    "params_for_k",
+    "VanillaSearcher",
+    "VanillaParams",
+]

@@ -1,0 +1,165 @@
+"""PLAID index: packed token arrays + centroid->passage inverted file (CSR).
+
+Layout decisions (vs. vanilla ColBERTv2, paper §4.1):
+  * The IVF maps centroids to *unique passage ids* (int32), not embedding
+    ids — smaller lists, and stage 2+ operates on passages directly.
+  * Token payloads (codes, packed residuals) are stored packed, ordered by
+    passage, with a CSR ``doc_offsets`` array — the padding-free layout that
+    PLAID's kernels consume.
+  * Static caps (``ivf_list_cap``, ``doc_maxlen``) are recorded at build time
+    so the search program has fixed shapes (TPU requirement, see DESIGN §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans as _kmeans
+from repro.core import residual_codec as rc
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlaidIndex:
+    # --- centroid space ---
+    centroids: jax.Array  # (K, d) f32
+    # --- packed token payload (ordered by passage) ---
+    codes: jax.Array  # (Nt,) i32  centroid id per token
+    residuals: jax.Array  # (Nt, d*b/8) u8
+    tok_pid: jax.Array  # (Nt,) i32  owning passage per token
+    # --- passage table ---
+    doc_offsets: jax.Array  # (Nd+1,) i32
+    doc_lens: jax.Array  # (Nd,) i32
+    # --- inverted file: centroid -> passage ids (CSR) ---
+    ivf_pids: jax.Array  # (nnz,) i32
+    ivf_offsets: jax.Array  # (K+1,) i32
+    ivf_lens: jax.Array  # (K,) i32
+    # --- vanilla-ColBERTv2 inverted file: centroid -> embedding ids (CSR) ---
+    eivf_eids: jax.Array  # (Nt,) i32
+    eivf_offsets: jax.Array  # (K+1,) i32
+    eivf_lens: jax.Array  # (K,) i32
+    # --- codec tables ---
+    cutoffs: jax.Array  # (2^b - 1,)
+    weights: jax.Array  # (2^b,)
+    # --- static metadata ---
+    dim: int = dataclasses.field(metadata=dict(static=True), default=128)
+    nbits: int = dataclasses.field(metadata=dict(static=True), default=2)
+    doc_maxlen: int = dataclasses.field(metadata=dict(static=True), default=128)
+    ivf_list_cap: int = dataclasses.field(metadata=dict(static=True), default=256)
+    eivf_list_cap: int = dataclasses.field(metadata=dict(static=True), default=512)
+
+    @property
+    def num_passages(self) -> int:
+        return self.doc_lens.shape[0]
+
+    @property
+    def num_tokens(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def num_centroids(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def codec(self) -> rc.ResidualCodec:
+        return rc.ResidualCodec(self.cutoffs, self.weights, self.nbits)
+
+    def reconstruct_tokens(self, token_ids: jax.Array) -> jax.Array:
+        """Decompress a set of token embeddings (reference path)."""
+        codes = self.codes[token_ids]
+        packed = self.residuals[token_ids]
+        return rc.decompress(self.codec, codes, packed, self.centroids)
+
+
+def build_index(
+    doc_embeddings: list[np.ndarray] | np.ndarray,
+    doc_lens: np.ndarray | None = None,
+    *,
+    num_centroids: int | None = None,
+    nbits: int = 2,
+    seed: int = 0,
+    kmeans_iters: int = 8,
+    ivf_list_cap: int | None = None,
+) -> PlaidIndex:
+    """Build a PLAID index from per-document token embeddings.
+
+    ``doc_embeddings`` is either a list of (len_i, d) arrays or a packed
+    (Nt, d) array with ``doc_lens`` giving per-document token counts.
+    One-time host-side work (CSR construction) uses numpy; all quantization
+    math runs through the jitted codec/kmeans paths.
+    """
+    if isinstance(doc_embeddings, (list, tuple)):
+        doc_lens = np.asarray([len(d) for d in doc_embeddings], np.int32)
+        packed_emb = np.concatenate([np.asarray(d) for d in doc_embeddings], 0)
+    else:
+        assert doc_lens is not None, "packed input requires doc_lens"
+        doc_lens = np.asarray(doc_lens, np.int32)
+        packed_emb = np.asarray(doc_embeddings)
+    packed_emb = packed_emb.astype(np.float32)
+    n_tokens, dim = packed_emb.shape
+    assert int(doc_lens.sum()) == n_tokens
+
+    doc_offsets = np.zeros(len(doc_lens) + 1, np.int32)
+    np.cumsum(doc_lens, out=doc_offsets[1:])
+    tok_pid = np.repeat(np.arange(len(doc_lens), dtype=np.int32), doc_lens)
+
+    # 1. centroids (k ~ 16*sqrt(Nt) unless overridden)
+    if num_centroids is None:
+        num_centroids = _kmeans.num_centroids_for(n_tokens)
+    centroids = _kmeans.train_centroids(
+        packed_emb, num_centroids, seed=seed, iters=kmeans_iters
+    )
+
+    # 2. assignment + residual codec
+    emb_j = jnp.asarray(packed_emb)
+    codes, _ = _kmeans._assign_chunked(emb_j, centroids)
+    residuals = emb_j - centroids[codes]
+    codec = rc.fit_codec(residuals, nbits)
+    packed_res = rc.compress_residuals(codec, residuals)
+
+    # 3. IVF: centroid -> sorted unique passage ids (host-side CSR build)
+    codes_np = np.asarray(codes)
+    pairs = np.unique(
+        np.stack([codes_np.astype(np.int64), tok_pid.astype(np.int64)], 1),
+        axis=0,
+    )
+    ivf_lens = np.bincount(pairs[:, 0], minlength=num_centroids).astype(np.int32)
+    ivf_offsets = np.zeros(num_centroids + 1, np.int32)
+    np.cumsum(ivf_lens, out=ivf_offsets[1:])
+    ivf_pids = pairs[:, 1].astype(np.int32)
+
+    if ivf_list_cap is None:
+        # p100 by default at laptop scale; production sizes this at p99.9.
+        ivf_list_cap = int(max(ivf_lens.max(initial=1), 1))
+
+    # 4. vanilla-ColBERTv2 IVF: centroid -> embedding ids (argsort by code)
+    eivf_eids = np.argsort(codes_np, kind="stable").astype(np.int32)
+    eivf_lens = np.bincount(codes_np, minlength=num_centroids).astype(np.int32)
+    eivf_offsets = np.zeros(num_centroids + 1, np.int32)
+    np.cumsum(eivf_lens, out=eivf_offsets[1:])
+    eivf_list_cap = int(max(eivf_lens.max(initial=1), 1))
+
+    return PlaidIndex(
+        centroids=centroids,
+        codes=jnp.asarray(codes_np),
+        residuals=packed_res,
+        tok_pid=jnp.asarray(tok_pid),
+        doc_offsets=jnp.asarray(doc_offsets),
+        doc_lens=jnp.asarray(doc_lens),
+        ivf_pids=jnp.asarray(ivf_pids),
+        ivf_offsets=jnp.asarray(ivf_offsets),
+        ivf_lens=jnp.asarray(ivf_lens),
+        eivf_eids=jnp.asarray(eivf_eids),
+        eivf_offsets=jnp.asarray(eivf_offsets),
+        eivf_lens=jnp.asarray(eivf_lens),
+        cutoffs=codec.cutoffs,
+        weights=codec.weights,
+        dim=dim,
+        nbits=nbits,
+        doc_maxlen=int(doc_lens.max(initial=1)),
+        ivf_list_cap=ivf_list_cap,
+        eivf_list_cap=eivf_list_cap,
+    )

@@ -1,0 +1,125 @@
+"""Production indexer: corpus -> encoded shards -> PLAID index on disk.
+
+Wraps the build pipeline (encode in chunks -> k-means -> residual compress
+-> CSR IVFs) with persistence: an index directory holds one ``.npz`` of
+arrays + a JSON manifest of static metadata, and can be loaded whole
+(single-host) or partitioned into per-shard sub-indexes for the
+document-sharded engine (each serving host loads only its shard — the
+fault-tolerance story of DESIGN §4).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.core import engine_sharded, index as index_mod
+from repro.core.index import PlaidIndex
+
+_ARRAY_FIELDS = [
+    "centroids", "codes", "residuals", "tok_pid", "doc_offsets", "doc_lens",
+    "ivf_pids", "ivf_offsets", "ivf_lens", "eivf_eids", "eivf_offsets",
+    "eivf_lens", "cutoffs", "weights",
+]
+
+
+def save_index(path: str, index: PlaidIndex) -> None:
+    os.makedirs(path, exist_ok=True)
+    arrays = {f: np.asarray(getattr(index, f)) for f in _ARRAY_FIELDS}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(
+            dict(
+                engine_sharded.static_meta_of(index),
+                num_passages=index.num_passages,
+                num_tokens=index.num_tokens,
+                num_centroids=index.num_centroids,
+                format_version=1,
+            ),
+            f,
+        )
+
+
+def load_index(path: str) -> PlaidIndex:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    meta = {
+        k: manifest[k]
+        for k in ("dim", "nbits", "doc_maxlen", "ivf_list_cap", "eivf_list_cap")
+    }
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        import jax.numpy as jnp
+
+        arrays = {f: jnp.asarray(data[f]) for f in _ARRAY_FIELDS}
+    return PlaidIndex(**arrays, **meta)
+
+
+def save_sharded(path: str, index: PlaidIndex, n_shards: int) -> None:
+    """Partition a global index into per-shard directories (deploy layout).
+
+    Shard s loads ``<path>/shard_<s>``; the stacked arrays for the sharded
+    engine are the concatenation in shard order (``load_sharded``)."""
+    idx_dict, meta, per = engine_sharded.shard_index(index, n_shards)
+    os.makedirs(path, exist_ok=True)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(dict(meta, n_shards=n_shards, docs_per_shard=per), f)
+    for s in range(n_shards):
+        sd = os.path.join(path, f"shard_{s:04d}")
+        os.makedirs(sd, exist_ok=True)
+        arrays = {}
+        for k, v in idx_dict.items():
+            v = np.asarray(v)
+            if k in ("centroids", "cutoffs", "weights"):
+                arrays[k] = v  # replicated
+            else:
+                n = v.shape[0] // n_shards
+                arrays[k] = v[s * n : (s + 1) * n]
+        np.savez(os.path.join(sd, "arrays.npz"), **arrays)
+
+
+def load_sharded(path: str):
+    """Reassemble (index_dict, meta, docs_per_shard) from a shard layout."""
+    import jax.numpy as jnp
+
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    n_shards = manifest["n_shards"]
+    parts = []
+    for s in range(n_shards):
+        with np.load(os.path.join(path, f"shard_{s:04d}", "arrays.npz")) as d:
+            parts.append({k: d[k] for k in d.files})
+    out = {}
+    for k in parts[0]:
+        if k in ("centroids", "cutoffs", "weights"):
+            out[k] = jnp.asarray(parts[0][k])
+        else:
+            out[k] = jnp.asarray(np.concatenate([p[k] for p in parts]))
+    meta = {
+        k: manifest[k]
+        for k in ("dim", "nbits", "doc_maxlen", "ivf_list_cap", "eivf_list_cap")
+    }
+    return out, meta, manifest["docs_per_shard"]
+
+
+def build_from_encoder(
+    encode_fn,  # (tokens (B, L) i32) -> (B, L, dim) f32 unit-norm
+    corpus_tokens: np.ndarray,  # (N, L) i32
+    *,
+    chunk: int = 256,
+    doc_lens: np.ndarray | None = None,
+    **build_kwargs,
+) -> PlaidIndex:
+    """Offline encode (chunked, bounded host memory) then build."""
+    import jax.numpy as jnp
+
+    N, L = corpus_tokens.shape
+    embs = []
+    for i in range(0, N, chunk):
+        e = encode_fn(jnp.asarray(corpus_tokens[i : i + chunk]))
+        embs.append(np.asarray(e, np.float32))
+    packed = np.concatenate(embs).reshape(-1, embs[0].shape[-1])
+    if doc_lens is None:
+        doc_lens = np.full(N, L, np.int32)
+    return index_mod.build_index(packed, doc_lens=doc_lens, **build_kwargs)

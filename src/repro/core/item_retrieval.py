@@ -1,0 +1,77 @@
+"""PLAID as an ANN engine for recsys item catalogs (beyond-paper transfer).
+
+BERT4Rec's ``retrieval_cand`` cell scores one user state against a 1M-item
+catalog.  Treating every item embedding as a single-token document, the
+PLAID pipeline degenerates to a centroid-pruned ANN index: stage 1 probes
+the centroid space, centroid interaction ranks items by their centroid's
+score, stage 4 re-ranks the survivors with exact (decompressed) dot
+products — the paper's technique applied verbatim to a different family
+(DESIGN §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as index_mod
+from repro.core import plaid
+
+
+def build_item_index(
+    item_table: np.ndarray | jax.Array,
+    *,
+    nbits: int = 2,
+    num_centroids: int | None = None,
+    kmeans_iters: int = 4,
+    seed: int = 0,
+) -> index_mod.PlaidIndex:
+    """Index a (V, d) item-embedding table as V one-token documents."""
+    emb = np.asarray(item_table, np.float32)
+    norms = np.linalg.norm(emb, axis=-1, keepdims=True)
+    emb = emb / np.maximum(norms, 1e-6)
+    return index_mod.build_index(
+        emb,
+        doc_lens=np.ones(emb.shape[0], np.int32),
+        nbits=nbits,
+        num_centroids=num_centroids,
+        kmeans_iters=kmeans_iters,
+        seed=seed,
+    )
+
+
+def retrieve_items(
+    index: index_mod.PlaidIndex,
+    user_state: jax.Array,  # (d,) or (B, d)
+    *,
+    k: int = 100,
+    nprobe: int = 8,
+    candidate_cap: int = 4096,
+):
+    """Top-k items by dot product via the PLAID pipeline.
+
+    The user state acts as a 1-token query; ndocs = 4k so stage 4 exactly
+    re-ranks 1x the final depth of candidates surviving centroid selection.
+    """
+    q = jnp.atleast_2d(user_state)  # (B, d) -> per-row 1-token queries
+    norms = jnp.linalg.norm(q, axis=-1, keepdims=True)
+    qn = q / jnp.maximum(norms, 1e-6)
+    # For 1-token documents the stage-2/3 approximate scores are PER-CENTROID
+    # CONSTANTS (every item in a cluster ties) — staged cutting would select
+    # arbitrary tie members.  ndocs = 4*candidate_cap makes stages 2-3 pass
+    # everything through: the pipeline degenerates to classic IVF probing +
+    # compressed exact re-rank, which is the correct ANN specialization of
+    # PLAID (recorded in DESIGN §Arch-applicability).
+    params = plaid.SearchParams(
+        k=k,
+        nprobe=nprobe,
+        t_cs=-1e9,
+        ndocs=4 * candidate_cap,
+        candidate_cap=candidate_cap,
+    )
+    searcher = plaid.PlaidSearcher(index, params)
+    scores, pids = searcher.search_batch(qn[:, None, :])  # (B, 1, d) queries
+    # rescale: searcher scored against unit-normalized user state
+    return scores * norms, pids

@@ -1,0 +1,230 @@
+"""The PLAID 4-stage scoring pipeline (paper Fig. 5), as one jit program.
+
+Stage 1  candidate generation: top-``nprobe`` centroids per query token ->
+         union of passages from the centroid->pid inverted lists.
+Stage 2  *pruned* centroid interaction (threshold ``t_cs``) -> top ``ndocs``.
+Stage 3  full centroid interaction -> top ``ndocs // 4``.
+Stage 4  residual decompression + exact MaxSim -> final top-``k``.
+
+Static-shape discipline (DESIGN §7): candidate sets are padded to
+``candidate_cap`` with ``-1`` sentinels; all per-stage shapes are compile-time
+constants so the whole pipeline is a single fused XLA program that also
+lowers for sharded execution (one shard = one sub-corpus).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import residual_codec as rc
+from repro.core import scoring
+from repro.core.index import PlaidIndex
+
+NEG = scoring.NEG
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Hyperparameters (paper Table 2) + static engine caps."""
+
+    k: int = 10
+    nprobe: int = 1
+    t_cs: float = 0.5
+    ndocs: int = 256
+    candidate_cap: int = 4096  # C_max: static bound on |stage-1 candidates|
+    impl: str = "ref"  # "ref" (pure jnp) | "pallas" (kernels, interpret on CPU)
+    score_dtype: str = "float32"  # stage 1-3 approximate-score dtype. §Perf
+    # S2: "bfloat16" halves score-matrix + gather traffic on TPU with no
+    # measured recall change; default stays f32 because the CPU dry-run
+    # metric can't see the win (bf16 emulation inserts f32 copies).
+
+    def stage3_docs(self) -> int:
+        return max(self.ndocs // 4, self.k)
+
+
+#: Paper Table 2 settings, keyed by final k.
+PAPER_PARAMS = {
+    10: SearchParams(k=10, nprobe=1, t_cs=0.5, ndocs=256),
+    100: SearchParams(k=100, nprobe=2, t_cs=0.45, ndocs=1024),
+    1000: SearchParams(k=1000, nprobe=4, t_cs=0.4, ndocs=4096),
+}
+
+
+def params_for_k(k: int, candidate_cap: int = 8192, impl: str = "ref"):
+    base = PAPER_PARAMS.get(k, SearchParams(k=k))
+    return dataclasses.replace(base, candidate_cap=candidate_cap, impl=impl)
+
+
+# --------------------------------------------------------------------------
+# Stage 1 — candidate generation
+# --------------------------------------------------------------------------
+def candidate_generation(
+    index: PlaidIndex, s_cq: jax.Array, nprobe: int, candidate_cap: int
+) -> jax.Array:
+    """Return (candidate_cap,) sorted unique passage ids, padded with -1."""
+    nq = s_cq.shape[1]
+    # top-nprobe centroids per query token (scores are (K, nq))
+    _, cids = jax.lax.top_k(s_cq.T, nprobe)  # (nq, nprobe)
+    cids = cids.reshape(-1)  # (nq*nprobe,)
+    starts = index.ivf_offsets[cids]  # (nq*nprobe,)
+    lens = index.ivf_lens[cids]
+    pos = jnp.arange(index.ivf_list_cap, dtype=jnp.int32)
+    idx = starts[:, None] + pos[None, :]
+    valid = pos[None, :] < lens[:, None]
+    idx = jnp.where(valid, idx, 0)
+    pids = jnp.where(valid, index.ivf_pids[idx], -1)  # (nq*nprobe, cap)
+    return jnp.unique(pids.reshape(-1), size=candidate_cap, fill_value=-1)
+
+
+# --------------------------------------------------------------------------
+# Stage 4 — decompress + exact MaxSim (reference path)
+# --------------------------------------------------------------------------
+def decompress_and_score_ref(
+    index: PlaidIndex,
+    q: jax.Array,  # (nq, dim)
+    q_mask: jax.Array,  # (nq,)
+    codes_blk: jax.Array,  # (nd, L) i32, -1 pad
+    res_blk: jax.Array,  # (nd, L, packed_dim) u8
+    tok_valid: jax.Array,  # (nd, L) bool
+) -> jax.Array:
+    codec = index.codec
+    safe = jnp.where(codes_blk >= 0, codes_blk, 0)
+    emb = index.centroids[safe] + rc.decompress_residuals(codec, res_blk)
+    return scoring.maxsim(q, emb, q_mask=q_mask, d_mask=tok_valid)
+
+
+# --------------------------------------------------------------------------
+# Full pipeline (single query matrix)
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "nprobe", "ndocs", "candidate_cap", "impl", "t_cs", "score_dtype",
+    ),
+)
+def _search(
+    index: PlaidIndex,
+    q: jax.Array,
+    q_mask: jax.Array,
+    s_cq: jax.Array | None = None,  # precomputed (K, nq) stage-1 scores —
+    # batched engines compute C.Q^T ONCE for all queries (§Perf S1: the
+    # centroid matrix is read once per batch instead of once per query)
+    *,
+    k: int,
+    nprobe: int,
+    t_cs: float,
+    ndocs: int,
+    candidate_cap: int,
+    impl: str,
+    score_dtype: str = "bfloat16",
+):
+    if impl == "pallas":
+        from repro.kernels import ops as K
+
+        interaction = functools.partial(K.centroid_interaction, interpret=True)
+        decompress_score = functools.partial(
+            K.decompress_and_score, interpret=True
+        )
+    else:
+        interaction = scoring.centroid_interaction
+        decompress_score = None
+
+    # ---- Stage 1: query-centroid scores + candidate generation
+    if s_cq is None:
+        s_cq = scoring.centroid_scores(
+            q, index.centroids, dtype=jnp.dtype(score_dtype)
+        )  # (K, nq)
+    else:
+        s_cq = s_cq.astype(jnp.dtype(score_dtype))
+    candidates = candidate_generation(index, s_cq, nprobe, candidate_cap)
+
+    # ---- Stage 2: pruned centroid interaction
+    keep = scoring.prune_mask(s_cq, t_cs)  # (K,)
+    codes_blk, tok_valid = scoring.gather_doc_tokens(
+        index.codes,
+        index.doc_offsets,
+        index.doc_lens,
+        candidates,
+        index.doc_maxlen,
+        fill=-1,
+    )
+    approx2 = interaction(s_cq, codes_blk, q_mask=q_mask, keep_centroid=keep)
+    approx2 = jnp.where(candidates >= 0, approx2, NEG)
+    n2 = min(ndocs, candidate_cap)
+    _, idx2 = jax.lax.top_k(approx2, n2)
+
+    # ---- Stage 3: full centroid interaction on the survivors
+    codes3 = codes_blk[idx2]
+    approx3 = interaction(s_cq, codes3, q_mask=q_mask, keep_centroid=None)
+    approx3 = jnp.where(candidates[idx2] >= 0, approx3, NEG)
+    n3 = min(max(ndocs // 4, k), n2)
+    _, idx3 = jax.lax.top_k(approx3, n3)
+    final_pids = candidates[idx2][idx3]  # (n3,)
+
+    # ---- Stage 4: residual decompression + exact MaxSim
+    codes4 = codes3[idx3]
+    tok_valid4 = tok_valid[idx2][idx3]
+    res_blk, _ = scoring.gather_doc_tokens(
+        index.residuals,
+        index.doc_offsets,
+        index.doc_lens,
+        final_pids,
+        index.doc_maxlen,
+        fill=jnp.uint8(0),
+    )
+    if decompress_score is None:
+        exact = decompress_and_score_ref(
+            index, q, q_mask, codes4, res_blk, tok_valid4
+        )
+    else:
+        exact = decompress_score(
+            q,
+            q_mask,
+            codes4,
+            res_blk,
+            tok_valid4,
+            index.centroids,
+            index.weights,
+            nbits=index.nbits,
+        )
+    exact = jnp.where(final_pids >= 0, exact, NEG)
+    kk = min(k, n3)
+    top_scores, idxk = jax.lax.top_k(exact, kk)
+    return top_scores, final_pids[idxk]
+
+
+class PlaidSearcher:
+    """User-facing engine handle: ``searcher.search(Q)`` / ``search_batch``."""
+
+    def __init__(self, index: PlaidIndex, params: SearchParams | None = None):
+        self.index = index
+        self.params = params or SearchParams()
+
+    def _kwargs(self):
+        p = self.params
+        cap = min(p.candidate_cap, max(self.index.num_passages, 2))
+        return dict(
+            k=p.k,
+            nprobe=p.nprobe,
+            t_cs=p.t_cs,
+            ndocs=min(p.ndocs, cap),
+            candidate_cap=cap,
+            impl=p.impl,
+            score_dtype=p.score_dtype,
+        )
+
+    def search(self, q: jax.Array, q_mask: jax.Array | None = None):
+        """q: (nq, dim) one query matrix -> (scores (k,), pids (k,))."""
+        if q_mask is None:
+            q_mask = jnp.ones(q.shape[0], jnp.float32)
+        return _search(self.index, q, q_mask, **self._kwargs())
+
+    def search_batch(self, qs: jax.Array, q_masks: jax.Array | None = None):
+        """qs: (B, nq, dim) -> (scores (B, k), pids (B, k))."""
+        if q_masks is None:
+            q_masks = jnp.ones(qs.shape[:2], jnp.float32)
+        fn = functools.partial(_search, **self._kwargs())
+        return jax.vmap(fn, in_axes=(None, 0, 0))(self.index, qs, q_masks)

@@ -1,0 +1,139 @@
+"""ColBERTv2 residual codec: b-bit bucket quantization of (vector - centroid).
+
+Each token embedding ``v`` is stored as ``(code, packed_residual)`` where
+``code`` is the id of its nearest centroid and the residual ``r = v -
+centroids[code]`` is quantized per-dimension into ``2**nbits`` buckets.
+Bucket boundaries (``cutoffs``) are quantiles of the residual distribution
+estimated at index-build time; reconstruction values (``weights``) are the
+midpoints-in-probability of each bucket (also quantiles).  ``8 // nbits``
+bucket indices are packed per byte, most-significant bits first.
+
+This mirrors ColBERTv2's codec (Santhanam et al. 2021, §Compression) with
+nbits in {1, 2} (the paper's MS MARCO v1 / v2 settings) plus 4 for headroom.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+SUPPORTED_NBITS = (1, 2, 4)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ResidualCodec:
+    """Quantization tables. A pytree so it can live inside jit programs."""
+
+    cutoffs: jax.Array  # (2**nbits - 1,) ascending bucket boundaries
+    weights: jax.Array  # (2**nbits,)     reconstruction value per bucket
+    nbits: int = dataclasses.field(metadata=dict(static=True), default=2)
+
+    @property
+    def vals_per_byte(self) -> int:
+        return 8 // self.nbits
+
+    def packed_dim(self, dim: int) -> int:
+        return dim // self.vals_per_byte
+
+
+def fit_codec(residuals: jax.Array, nbits: int) -> ResidualCodec:
+    """Estimate bucket cutoffs/weights from a sample of residuals.
+
+    Matches ColBERTv2: cutoffs are the (i/2^b)-quantiles for i in 1..2^b-1;
+    weights are the ((i + .5)/2^b)-quantiles for i in 0..2^b-1.
+    """
+    if nbits not in SUPPORTED_NBITS:
+        raise ValueError(f"nbits must be one of {SUPPORTED_NBITS}, got {nbits}")
+    flat = residuals.reshape(-1).astype(jnp.float32)
+    nbuckets = 2**nbits
+    cut_q = jnp.arange(1, nbuckets) / nbuckets
+    w_q = (jnp.arange(nbuckets) + 0.5) / nbuckets
+    cutoffs = jnp.quantile(flat, cut_q)
+    weights = jnp.quantile(flat, w_q)
+    return ResidualCodec(cutoffs=cutoffs, weights=weights, nbits=nbits)
+
+
+def bucketize(codec: ResidualCodec, residuals: jax.Array) -> jax.Array:
+    """Map residual floats -> bucket indices in [0, 2**nbits)."""
+    return jnp.searchsorted(codec.cutoffs, residuals, side="right").astype(
+        jnp.uint8
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def pack_indices(indices: jax.Array, nbits: int) -> jax.Array:
+    """Pack b-bit indices along the last axis into uint8, MSB-first.
+
+    indices: (..., dim) uint8 with values < 2**nbits; dim % (8//nbits) == 0.
+    returns: (..., dim * nbits // 8) uint8.
+    """
+    vpb = 8 // nbits
+    *lead, dim = indices.shape
+    if dim % vpb:
+        raise ValueError(f"dim {dim} not divisible by values-per-byte {vpb}")
+    grouped = indices.reshape(*lead, dim // vpb, vpb).astype(jnp.uint32)
+    shifts = jnp.arange(vpb - 1, -1, -1, dtype=jnp.uint32) * nbits
+    packed = (grouped << shifts).sum(axis=-1)
+    return packed.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def unpack_indices(packed: jax.Array, nbits: int) -> jax.Array:
+    """Inverse of :func:`pack_indices` via vector shift/mask (no LUT gather).
+
+    This is the TPU-native analogue of PLAID's 2^8-entry lookup table: the
+    unpack is pure VPU integer arithmetic, so the "table" lives in registers.
+    """
+    vpb = 8 // nbits
+    mask = jnp.uint32(2**nbits - 1)
+    shifts = jnp.arange(vpb - 1, -1, -1, dtype=jnp.uint32) * nbits
+    vals = (packed[..., None].astype(jnp.uint32) >> shifts) & mask
+    return vals.reshape(*packed.shape[:-1], packed.shape[-1] * vpb).astype(
+        jnp.uint8
+    )
+
+
+def compress_residuals(codec: ResidualCodec, residuals: jax.Array) -> jax.Array:
+    """residuals (..., dim) float -> packed (..., dim*nbits//8) uint8."""
+    return pack_indices(bucketize(codec, residuals), codec.nbits)
+
+
+def decompress_residuals(codec: ResidualCodec, packed: jax.Array) -> jax.Array:
+    """packed (..., dim*nbits//8) uint8 -> residuals (..., dim) float32."""
+    idx = unpack_indices(packed, codec.nbits)
+    return codec.weights.astype(jnp.float32)[idx]
+
+
+def compress(
+    codec: ResidualCodec, embeddings: jax.Array, centroids: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Full encode: embeddings (n, d) -> (codes (n,), packed (n, d*b/8))."""
+    # Nearest centroid by L2 == max dot for unit-norm embeddings; use true L2
+    # to match faiss-style assignment on possibly non-unit centroids.
+    codes = assign_codes(embeddings, centroids)
+    residuals = embeddings - centroids[codes]
+    return codes, compress_residuals(codec, residuals)
+
+
+def decompress(
+    codec: ResidualCodec,
+    codes: jax.Array,
+    packed: jax.Array,
+    centroids: jax.Array,
+) -> jax.Array:
+    """Reconstruct embeddings: centroids[codes] + dequantized residual."""
+    return centroids[codes].astype(jnp.float32) + decompress_residuals(
+        codec, packed
+    )
+
+
+@jax.jit
+def assign_codes(embeddings: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest-centroid assignment, chunk-free (callers chunk if needed)."""
+    # ||e - c||^2 = ||e||^2 - 2 e.c + ||c||^2 ; ||e||^2 constant per row.
+    dots = embeddings.astype(jnp.float32) @ centroids.T.astype(jnp.float32)
+    c_sq = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=-1)
+    return jnp.argmin(c_sq[None, :] - 2.0 * dots, axis=-1).astype(jnp.int32)

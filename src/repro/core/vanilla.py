@@ -1,0 +1,127 @@
+"""Vanilla ColBERTv2 retrieval — the baseline PLAID is measured against.
+
+Pipeline (Santhanam et al. 2021, retained faithfully including its costs):
+  1. top-``nprobe`` centroids per query token -> *embedding ids* from the
+     centroid->eid inverted file (note: embedding-level, not passage-level).
+  2. decompress those candidate embeddings, score vs. the query tokens, and
+     if the set exceeds ``ncandidates`` keep the best-scoring embeddings.
+  3. map surviving embeddings to passages; gather **all** tokens of every
+     candidate passage into a padded (nd, L, dim) tensor, decompress all
+     residuals, and run exact padded MaxSim.
+
+Steps 2-3 are the index-lookup + decompression bottleneck of paper Fig. 2a:
+the padded 3-D tensor and the full decompression are exactly what PLAID's
+centroid interaction + packed kernels eliminate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import residual_codec as rc
+from repro.core import scoring
+from repro.core.index import PlaidIndex
+
+NEG = scoring.NEG
+
+
+@dataclasses.dataclass(frozen=True)
+class VanillaParams:
+    k: int = 10
+    nprobe: int = 2
+    ncandidates: int = 2**13  # candidate *embeddings* cap (paper: 2^13..2^16)
+    ndocs_cap: int = 4096  # static bound on candidate passages
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "nprobe", "ncandidates", "ndocs_cap")
+)
+def _vanilla_search(
+    index: PlaidIndex,
+    q: jax.Array,
+    q_mask: jax.Array,
+    *,
+    k: int,
+    nprobe: int,
+    ncandidates: int,
+    ndocs_cap: int,
+):
+    codec = index.codec
+    # ---- 1. candidate embedding ids from the embedding-level IVF
+    s_cq = scoring.centroid_scores(q, index.centroids)  # (K, nq)
+    _, cids = jax.lax.top_k(s_cq.T, nprobe)  # (nq, nprobe)
+    cids = cids.reshape(-1)
+    starts = index.eivf_offsets[cids]
+    lens = index.eivf_lens[cids]
+    pos = jnp.arange(index.eivf_list_cap, dtype=jnp.int32)
+    idx = starts[:, None] + pos[None, :]
+    valid = pos[None, :] < lens[:, None]
+    idx = jnp.where(valid, idx, 0)
+    eids = jnp.where(valid, index.eivf_eids[idx], -1).reshape(-1)
+    eids = jnp.unique(eids, size=ncandidates, fill_value=-1)
+
+    # ---- 2. decompress candidate embeddings & rank them (the costly prune)
+    safe = jnp.where(eids >= 0, eids, 0)
+    emb = rc.decompress(
+        codec, index.codes[safe], index.residuals[safe], index.centroids
+    )  # (ncandidates, dim)
+    e_scores = emb @ q.T  # (ncandidates, nq)
+    e_best = jnp.where(eids >= 0, e_scores.max(axis=-1), NEG)
+    n_keep = min(ncandidates, ndocs_cap * 4)
+    _, keep_idx = jax.lax.top_k(e_best, n_keep)
+    kept_eids = eids[keep_idx]
+
+    # ---- 3. passage set + full padded decompression + exact MaxSim
+    pids = jnp.where(kept_eids >= 0, index.tok_pid[kept_eids], -1)
+    pids = jnp.unique(pids, size=ndocs_cap, fill_value=-1)
+    codes_blk, tok_valid = scoring.gather_doc_tokens(
+        index.codes,
+        index.doc_offsets,
+        index.doc_lens,
+        pids,
+        index.doc_maxlen,
+        fill=-1,
+    )
+    res_blk, _ = scoring.gather_doc_tokens(
+        index.residuals,
+        index.doc_offsets,
+        index.doc_lens,
+        pids,
+        index.doc_maxlen,
+        fill=jnp.uint8(0),
+    )
+    safe_codes = jnp.where(codes_blk >= 0, codes_blk, 0)
+    d_emb = index.centroids[safe_codes] + rc.decompress_residuals(
+        codec, res_blk
+    )  # (ndocs_cap, L, dim) — the padded 3-D tensor PLAID avoids
+    exact = scoring.maxsim(q, d_emb, q_mask=q_mask, d_mask=tok_valid)
+    exact = jnp.where(pids >= 0, exact, NEG)
+    kk = min(k, ndocs_cap)
+    top_scores, idxk = jax.lax.top_k(exact, kk)
+    return top_scores, pids[idxk]
+
+
+class VanillaSearcher:
+    def __init__(self, index: PlaidIndex, params: VanillaParams | None = None):
+        self.index = index
+        self.params = params or VanillaParams()
+
+    def _kwargs(self):
+        p = self.params
+        nd = min(p.ndocs_cap, max(index_np := self.index.num_passages, 2))
+        nc = min(p.ncandidates, max(self.index.num_tokens, 2))
+        return dict(k=p.k, nprobe=p.nprobe, ncandidates=nc, ndocs_cap=nd)
+
+    def search(self, q: jax.Array, q_mask: jax.Array | None = None):
+        if q_mask is None:
+            q_mask = jnp.ones(q.shape[0], jnp.float32)
+        return _vanilla_search(self.index, q, q_mask, **self._kwargs())
+
+    def search_batch(self, qs: jax.Array, q_masks: jax.Array | None = None):
+        if q_masks is None:
+            q_masks = jnp.ones(qs.shape[:2], jnp.float32)
+        fn = functools.partial(_vanilla_search, **self._kwargs())
+        return jax.vmap(fn, in_axes=(None, 0, 0))(self.index, qs, q_masks)

@@ -1,0 +1,30 @@
+"""Distributed top-k merge for sharded retrieval.
+
+Each shard searches its local sub-corpus and produces (scores, local pids);
+the merge all-gathers only the (k, 2)-sized tuples — collective bytes are
+``n_shards * k * 8`` per query, INDEPENDENT of corpus size (DESIGN §3,
+beyond-paper optimization vs. gathering candidate scores).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_topk(scores: jax.Array, pids: jax.Array, k: int, axis_name: str):
+    """Inside shard_map: local (k,) scores/pids -> global top-k (replicated).
+
+    pids are shard-local; the caller offsets them to global ids before or
+    after (we take a ``shard_offset`` approach: pass global pids in)."""
+    all_scores = jax.lax.all_gather(scores, axis_name, axis=0, tiled=True)
+    all_pids = jax.lax.all_gather(pids, axis_name, axis=0, tiled=True)
+    top, idx = jax.lax.top_k(all_scores, k)
+    return top, all_pids[idx]
+
+
+def local_to_global_pids(local_pids: jax.Array, axis_name: str, shard_size: int):
+    """Offset shard-local passage ids into the global id space."""
+    shard = jax.lax.axis_index(axis_name)
+    return jnp.where(
+        local_pids >= 0, local_pids + shard * shard_size, local_pids
+    )

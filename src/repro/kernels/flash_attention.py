@@ -1,0 +1,129 @@
+"""Pallas TPU flash attention (causal/GQA) — the prefill memory-term fix.
+
+EXPERIMENTS §Perf cell 2: at 32k prefill the dominant HBM traffic is the
+(q_blk x kv) score/probability tiles written and re-read between the two
+attention matmuls (~13 TB/device for granite-34b).  This kernel keeps the
+online-softmax state (m, l, acc) and every score tile in VMEM: HBM traffic
+collapses to q + k + v + o.
+
+Layout: grid over (batch, q-head, q-block).  K/V for the head are resident
+in VMEM per grid step (S=32k, dh=128, bf16 -> 8 MB each; v5e VMEM 128 MB).
+GQA maps q-head h to kv-head h // group (kv-group-major, matching the
+model's padded head layout).  The causal kv bound is rounded to whole
+blocks; only the diagonal block applies the triangle mask (same insight as
+the pure-JAX OPT-A, executed in-register here).
+
+On this CPU container the kernel runs in interpret mode for correctness
+only; it lowers through Mosaic on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, q_blk, dh)
+    k_ref,  # (1, S, dh)  — this q-head's kv head, resident
+    v_ref,  # (1, S, dh)
+    o_ref,  # (1, q_blk, dh)
+    *,
+    q_blk: int,
+    kv_blk: int,
+    causal: bool,
+):
+    qi = pl.program_id(2)
+    q = q_ref[0].astype(jnp.float32)  # (q_blk, dh)
+    S = k_ref.shape[1]
+    dh = q.shape[-1]
+    scale = dh**-0.5
+    n_kv = S // kv_blk
+    if causal:
+        # kv blocks fully below the diagonal + the diagonal block(s)
+        hi = jax.lax.min(((qi + 1) * q_blk + kv_blk - 1) // kv_blk, n_kv)
+    else:
+        hi = n_kv
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0], (ki * kv_blk, 0), (kv_blk, dh)
+        ).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0], (ki * kv_blk, 0), (kv_blk, dh)
+        ).astype(jnp.float32)
+        s = q @ k.T * scale  # (q_blk, kv_blk) — lives in VMEM/registers
+        if causal:
+            q_pos = qi * q_blk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_blk, kv_blk), 0
+            )
+            k_pos = ki * kv_blk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_blk, kv_blk), 1
+            )
+            # off-diagonal blocks (ki*kv_blk + kv_blk <= qi*q_blk) need no
+            # mask; the select is cheap in-register either way on the VPU
+            s = jnp.where(q_pos >= k_pos, s, NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((q_blk,), NEG, jnp.float32)
+    l0 = jnp.zeros((q_blk,), jnp.float32)
+    a0 = jnp.zeros((q_blk, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, dh)
+    k: jax.Array,  # (B, S, Hkv, dh)
+    v: jax.Array,  # (B, S, Hkv, dh)
+    *,
+    causal: bool = True,
+    q_blk: int = 512,
+    kv_blk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv  # kv-group-major: q head h -> kv head h // g
+    q_blk = min(q_blk, S)
+    kv_blk = min(kv_blk, S)
+    assert S % q_blk == 0 and S % kv_blk == 0, "pad S to block multiples"
+    grid = (B, H, S // q_blk)
+    # layouts: heads leading so a (1, blk, dh) window is contiguous-ish
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, q_blk=q_blk, kv_blk=kv_blk, causal=causal
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_blk, dh), lambda b, h, i, H=H: (b * H + h, i, 0)),
+            pl.BlockSpec(
+                (1, S, dh),
+                lambda b, h, i, g=g, Hkv=Hkv: (b * Hkv + h // g, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, S, dh),
+                lambda b, h, i, g=g, Hkv=Hkv: (b * Hkv + h // g, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, q_blk, dh), lambda b, h, i, H=H: (b * H + h, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, S, dh).transpose(0, 2, 1, 3)

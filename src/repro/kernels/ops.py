@@ -1,0 +1,85 @@
+"""Jit'd public wrappers around the Pallas kernels (+ engine adapters).
+
+The engine (``repro.core.plaid``) calls these when ``SearchParams.impl ==
+"pallas"``.  On this CPU container kernels run in ``interpret=True`` mode;
+on TPU hardware the same code lowers through Mosaic (``interpret=False``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decompress as _dec
+from repro.kernels import maxsim as _ms
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "doc_block"))
+def centroid_interaction(
+    s_cq: jax.Array,
+    codes: jax.Array,
+    q_mask: jax.Array | None = None,
+    keep_centroid: jax.Array | None = None,
+    *,
+    interpret: bool = True,
+    doc_block: int = 32,
+) -> jax.Array:
+    """Engine-compatible signature (matches ``scoring.centroid_interaction``)."""
+    if q_mask is None:
+        q_mask = jnp.ones(s_cq.shape[1], jnp.float32)
+    if keep_centroid is None:
+        keep_centroid = jnp.ones(s_cq.shape[0], bool)
+    return _ms.centroid_interaction_pallas(
+        s_cq,
+        codes,
+        keep_centroid,
+        q_mask,
+        doc_block=doc_block,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "interpret", "row_block"))
+def decompress_residuals(
+    packed: jax.Array,
+    weights: jax.Array,
+    *,
+    nbits: int,
+    interpret: bool = True,
+    row_block: int = 256,
+) -> jax.Array:
+    lead = packed.shape[:-1]
+    flat = packed.reshape(-1, packed.shape[-1])
+    out = _dec.decompress_residuals_pallas(
+        flat, weights, nbits=nbits, row_block=row_block, interpret=interpret
+    )
+    return out.reshape(*lead, out.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "interpret", "doc_block"))
+def decompress_and_score(
+    q: jax.Array,
+    q_mask: jax.Array,
+    codes: jax.Array,
+    packed_res: jax.Array,
+    tok_valid: jax.Array,
+    centroids: jax.Array,
+    weights: jax.Array,
+    *,
+    nbits: int,
+    interpret: bool = True,
+    doc_block: int = 8,
+) -> jax.Array:
+    return _dec.decompress_and_score_pallas(
+        q,
+        q_mask,
+        codes,
+        packed_res,
+        tok_valid,
+        centroids,
+        weights,
+        nbits=nbits,
+        doc_block=doc_block,
+        interpret=interpret,
+    )

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These delegate to the engine's reference scoring/codec so the kernels are
+validated against the exact math the engine uses in ``impl="ref"`` mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import residual_codec as rc
+from repro.core import scoring
+
+
+def centroid_interaction_ref(s_cq, codes, keep, q_mask):
+    return scoring.centroid_interaction(
+        s_cq, codes, q_mask=q_mask, keep_centroid=keep
+    )
+
+
+def decompress_residuals_ref(packed, weights, *, nbits: int):
+    idx = rc.unpack_indices(packed, nbits)
+    return weights.astype(jnp.float32)[idx]
+
+
+def decompress_and_score_ref(
+    q, q_mask, codes, packed_res, tok_valid, centroids, weights, *, nbits: int
+):
+    safe = jnp.where(codes >= 0, codes, 0)
+    resid = decompress_residuals_ref(packed_res, weights, nbits=nbits)
+    emb = centroids.astype(jnp.float32)[safe] + resid
+    return scoring.maxsim(q, emb, q_mask=q_mask, d_mask=tok_valid)

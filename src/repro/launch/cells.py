@@ -1,0 +1,702 @@
+"""Cell builder: one (arch x input-shape) cell -> a jit-able step + inputs.
+
+Used by BOTH:
+  * the multi-pod dry-run (``mode="dry"``): FULL config, inputs are
+    ShapeDtypeStructs carrying NamedShardings — lower + compile only;
+  * the per-arch smoke tests (``mode="smoke"``): REDUCED config, concrete
+    arrays, one real step on CPU.
+
+Must be called under ``sharding.use_mesh(mesh, rules)`` for dry mode (the
+models emit sharding constraints through that context).
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as config_registry
+from repro.configs.common import ShapeCell
+from repro.core import plaid
+from repro.core import engine_sharded
+from repro.distributed import sharding
+from repro.models import colbert as colbert_lib
+from repro.models import recsys as recsys_lib
+from repro.models import schnet as schnet_lib
+from repro.models import transformer as T
+from repro.training import loop as train_loop
+from repro.training import optimizer as opt_lib
+
+
+@dataclasses.dataclass
+class BuiltCell:
+    arch: str
+    cell: str
+    kind: str
+    fn: typing.Callable
+    args: tuple
+    donate: tuple = ()
+    model_flops: float = 0.0
+    skip: str | None = None
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+def _sds(tree_sds, axes_tree):
+    """Attach NamedShardings (from logical axes) to a ShapeDtypeStruct tree."""
+
+    def one(ax, s):
+        ns = sharding.named_sharding(*ax, shape=s.shape)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns)
+
+    return jax.tree.map(
+        one, axes_tree, tree_sds, is_leaf=lambda t: isinstance(t, tuple)
+    )
+
+
+def _leaf_sds(shape, dtype, *axes):
+    ns = sharding.named_sharding(*axes, shape=shape)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=ns)
+
+
+def _batch_axes_like(batch_sds, lead="batch"):
+    return {
+        k: (lead,) + (None,) * (len(v.shape) - 1) for k, v in batch_sds.items()
+    }
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating)
+        else s,
+        tree,
+    )
+
+
+def _default_optimizer():
+    return opt_lib.adamw(
+        opt_lib.AdamWConfig(schedule=opt_lib.cosine_schedule(3e-4, 100, 10000))
+    )
+
+
+def _train_pieces(
+    loss_fn, init_fn, axes, n_micro, dry: bool, batch_sds_or_arr,
+    cast_dtype=None,
+):
+    """Common train-cell assembly for every family."""
+    optimizer = _default_optimizer()
+    step = train_loop.make_train_step(
+        loss_fn, optimizer, n_micro=n_micro,
+        param_axes=axes if dry else None, cast_dtype=cast_dtype,
+    )
+    if dry:
+        params_sds = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+        params_in = _sds(params_sds, axes)
+        opt_in = _sds(opt_sds, opt_lib.opt_state_axes(axes))
+        batch_in = _sds(batch_sds_or_arr, _batch_axes_like(batch_sds_or_arr))
+        return step, (params_in, opt_in, batch_in), (0, 1)
+    params = init_fn(jax.random.PRNGKey(0))
+    opt_state = optimizer.init(params)
+    return step, (params, opt_state, batch_sds_or_arr), (0, 1)
+
+
+# --------------------------------------------------------------------------
+# LM family
+# --------------------------------------------------------------------------
+def _lm_attn_flops(cfg: T.TransformerConfig, B, Sq, Skv_avg):
+    return cfg.n_layers * 4.0 * B * Sq * Skv_avg * cfg.n_heads * cfg.d_head
+
+
+def _batch_shards() -> int:
+    """Number of mesh shards the batch axis spans under the ACTIVE rules."""
+    mesh = sharding.active_mesh()
+    if mesh is None:
+        return 1
+    phys = sharding.active_rules().get("batch") or ()
+    axes = (phys,) if isinstance(phys, str) else phys
+    n = 1
+    for ax in axes:
+        n *= mesh.shape.get(ax, 1)
+    return n
+
+
+def _lm_cell(arch, cfg: T.TransformerConfig, cell: ShapeCell, p, dry):
+    S, B = p["seq_len"], p["global_batch"]
+    kind = cell.kind
+    if kind == "train":
+        s_eff = min(S, cfg.window) if cfg.window else S
+        flops = 6.0 * cfg.active_params() * B * S + 3 * _lm_attn_flops(
+            cfg, B, S, s_eff / 2
+        )
+        loss_fn = lambda params, b: T.lm_loss(
+            params, cfg, b["tokens"], b["targets"]
+        )
+        if dry:
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        else:
+            rng = np.random.default_rng(0)
+            batch = {
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab, (B, S)), jnp.int32
+                ),
+                "targets": jnp.asarray(
+                    rng.integers(0, cfg.vocab, (B, S)), jnp.int32
+                ),
+            }
+        # microbatch = exactly one row per batch shard (minimum activations)
+        n_micro = p.get("n_micro", 1)
+        if dry:
+            n_micro = max(B // _batch_shards(), 1)
+        fn, args, donate = _train_pieces(
+            loss_fn,
+            lambda k: T.init_params(k, cfg),
+            T.param_axes(cfg),
+            n_micro,
+            dry,
+            batch,
+            cast_dtype=cfg.dtype,
+        )
+        return BuiltCell(arch, cell.name, kind, fn, args, donate, flops)
+
+    if kind == "prefill":
+        s_eff = min(S, cfg.window) if cfg.window else S
+        flops = 2.0 * cfg.active_params() * B * S + _lm_attn_flops(
+            cfg, B, S, s_eff / 2
+        )
+        fn = lambda params, tokens: T.prefill(params, cfg, tokens)
+        if dry:
+            params = _cast_tree(
+                jax.eval_shape(lambda k: T.init_params(k, cfg), jax.random.PRNGKey(0)),
+                cfg.dtype,
+            )
+            params = _sds(params, T.param_axes(cfg))
+            tokens = _leaf_sds((B, S), jnp.int32, "batch", None)
+            return BuiltCell(arch, cell.name, kind, fn, (params, tokens), (), flops)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab, (B, S)), jnp.int32
+        )
+        return BuiltCell(arch, cell.name, kind, fn, (params, tokens), (), flops)
+
+    if kind == "decode":
+        Sc = T.cache_seq_len(cfg, S)
+        flops = 2.0 * cfg.active_params() * B + cfg.n_layers * 4.0 * B * Sc * (
+            cfg.n_heads * cfg.d_head
+        )
+        fn = lambda params, cache, tokens, n: T.decode_step(
+            params, cfg, cache, tokens, n
+        )
+        if dry:
+            params = _cast_tree(
+                jax.eval_shape(lambda k: T.init_params(k, cfg), jax.random.PRNGKey(0)),
+                cfg.dtype,
+            )
+            params = _sds(params, T.param_axes(cfg))
+            cax = T._cache_axes(cfg)
+            cshape = (cfg.n_layers, B, Sc, cfg.n_kv_heads, cfg.d_head)
+            cache = {
+                "k": _leaf_sds(cshape, cfg.dtype, None, *cax),
+                "v": _leaf_sds(cshape, cfg.dtype, None, *cax),
+            }
+            tokens = _leaf_sds((B,), jnp.int32, "batch")
+            n = _leaf_sds((), jnp.int32)
+            return BuiltCell(
+                arch, cell.name, kind, fn, (params, cache, tokens, n), (1,), flops
+            )
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        cache = T.init_cache(cfg, B, S)
+        tokens = jnp.zeros((B,), jnp.int32)
+        return BuiltCell(
+            arch,
+            cell.name,
+            kind,
+            fn,
+            (params, cache, tokens, jnp.int32(min(S - 1, 5))),
+            (),
+            flops,
+        )
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# GNN family (SchNet)
+# --------------------------------------------------------------------------
+def _schnet_flops(cfg: schnet_lib.SchNetConfig, N, E, train=True):
+    d, r = cfg.d_hidden, cfg.n_rbf
+    per_edge = 2 * r * d + 2 * d * d + 2 * d  # filter mlp + mult
+    per_node = 3 * 2 * d * d  # w_in/w_out/w_post
+    inter = cfg.n_interactions * (E * per_edge + N * per_node)
+    head = N * (2 * d * (d // 2) + 2 * (d // 2) * max(cfg.n_classes, 1))
+    fwd = inter + head + E * r * 3
+    return (3.0 if train else 1.0) * fwd
+
+
+def _gnn_cell(arch, base_cfg, cell: ShapeCell, p, dry):
+    from repro.data import graphs as graph_data
+
+    kind = cell.kind
+    if kind in ("full_graph", "minibatch"):
+        d_feat, n_classes = p["d_feat"], p["n_classes"]
+        cfg = dataclasses.replace(
+            base_cfg, d_feat=d_feat, n_classes=n_classes
+        )
+        if kind == "full_graph":
+            N, E = p["n_nodes"], p["n_edges"]
+            if dry:  # pad edges to the max shard count (masked, shard_map)
+                E = -(-E // 512) * 512
+            label_n = N
+        else:
+            seeds, fanout = p["batch_nodes"], tuple(p["fanout"])
+            N = seeds
+            E = 0
+            f_cum = seeds
+            for f in fanout:
+                E += f_cum * f
+                f_cum *= f
+                N += f_cum
+            label_n = N
+        flops = _schnet_flops(cfg, N, E)
+        loss_fn = lambda params, b: schnet_lib.train_loss(params, cfg, b)
+        if dry:
+            batch = {
+                "feat": _leaf_sds((N, d_feat), jnp.float32, "nodes", None),
+                "edge_src": _leaf_sds((E,), jnp.int32, "edges"),
+                "edge_dst": _leaf_sds((E,), jnp.int32, "edges"),
+                "edge_dist": _leaf_sds((E,), jnp.float32, "edges"),
+                "edge_mask": _leaf_sds((E,), jnp.float32, "edges"),
+                "labels": _leaf_sds((label_n,), jnp.int32, "nodes"),
+                "label_mask": _leaf_sds((label_n,), jnp.float32, "nodes"),
+            }
+            optimizer = _default_optimizer()
+            step = train_loop.make_train_step(loss_fn, optimizer, n_micro=1)
+            params_sds = jax.eval_shape(
+                lambda k: schnet_lib.init_params(k, cfg), jax.random.PRNGKey(0)
+            )
+            axes = schnet_lib.param_axes(cfg)
+            args = (
+                _sds(params_sds, axes),
+                _sds(jax.eval_shape(optimizer.init, params_sds), opt_lib.opt_state_axes(axes)),
+                batch,
+            )
+            return BuiltCell(arch, cell.name, kind, step, args, (0, 1), flops)
+        # smoke: real graph (+ real sampler for minibatch)
+        rng = np.random.default_rng(0)
+        if kind == "full_graph":
+            g = graph_data.random_graph(
+                p["n_nodes"], p["n_edges"], d_feat, n_classes
+            )
+            batch = {
+                "feat": jnp.asarray(g.feat),
+                "edge_src": jnp.asarray(g.edge_src, jnp.int32),
+                "edge_dst": jnp.asarray(g.edge_dst, jnp.int32),
+                "edge_dist": jnp.asarray(
+                    rng.uniform(0.5, 9.5, p["n_edges"]), jnp.float32
+                ),
+                "edge_mask": jnp.ones((p["n_edges"],), jnp.float32),
+                "labels": jnp.asarray(g.labels, jnp.int32),
+                "label_mask": jnp.ones((p["n_nodes"],), jnp.float32),
+            }
+        else:
+            g = graph_data.random_graph(
+                p["n_nodes"], p["n_edges"], d_feat, n_classes
+            )
+            blk = graph_data.neighbor_sample(
+                g, np.arange(p["batch_nodes"]), tuple(p["fanout"])
+            )
+            feat = g.feat[blk["nodes"]]
+            labels = g.labels[blk["nodes"]]
+            lmask = np.zeros(len(blk["nodes"]), np.float32)
+            lmask[: p["batch_nodes"]] = 1.0
+            batch = {
+                "feat": jnp.asarray(feat),
+                "edge_src": jnp.asarray(blk["edge_src"]),
+                "edge_dst": jnp.asarray(blk["edge_dst"]),
+                "edge_dist": jnp.asarray(
+                    rng.uniform(0.5, 9.5, len(blk["edge_src"])), jnp.float32
+                ),
+                "edge_mask": jnp.asarray(blk["edge_mask"]),
+                "labels": jnp.asarray(labels, jnp.int32),
+                "label_mask": jnp.asarray(lmask),
+            }
+        optimizer = _default_optimizer()
+        step = train_loop.make_train_step(loss_fn, optimizer, n_micro=1)
+        params = schnet_lib.init_params(jax.random.PRNGKey(0), cfg)
+        return BuiltCell(
+            arch, cell.name, kind, step,
+            (params, optimizer.init(params), batch), (0, 1), flops,
+        )
+
+    if kind == "molecule":
+        cfg = base_cfg  # faithful SchNet (z + positions)
+        B, nat, ne = p["batch"], p["n_nodes"], p["n_edges"]
+        N, E = B * nat, B * ne
+        flops = _schnet_flops(cfg, N, E)
+        loss_fn = lambda params, b: schnet_lib.train_loss(params, cfg, b)
+        if dry:
+            batch = {
+                "z": _leaf_sds((N,), jnp.int32, "nodes"),
+                "pos": _leaf_sds((N, 3), jnp.float32, "nodes", None),
+                "edge_src": _leaf_sds((E,), jnp.int32, "edges"),
+                "edge_dst": _leaf_sds((E,), jnp.int32, "edges"),
+                "edge_mask": _leaf_sds((E,), jnp.float32, "edges"),
+                "node_mask": _leaf_sds((N,), jnp.float32, "nodes"),
+                "graph_id": _leaf_sds((N,), jnp.int32, "nodes"),
+                "energy": _leaf_sds((B,), jnp.float32, "batch"),
+            }
+        else:
+            from repro.data.graphs import molecule_batch
+
+            batch = {
+                k: jnp.asarray(v) for k, v in molecule_batch(B, nat, ne).items()
+            }
+        optimizer = _default_optimizer()
+        step = train_loop.make_train_step(loss_fn, optimizer, n_micro=1)
+        if dry:
+            params_sds = jax.eval_shape(
+                lambda k: schnet_lib.init_params(k, cfg), jax.random.PRNGKey(0)
+            )
+            axes = schnet_lib.param_axes(cfg)
+            args = (
+                _sds(params_sds, axes),
+                _sds(jax.eval_shape(optimizer.init, params_sds), opt_lib.opt_state_axes(axes)),
+                batch,
+            )
+            return BuiltCell(arch, cell.name, kind, step, args, (0, 1), flops)
+        params = schnet_lib.init_params(jax.random.PRNGKey(0), cfg)
+        return BuiltCell(
+            arch, cell.name, kind, step,
+            (params, optimizer.init(params), batch), (0, 1), flops,
+        )
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# RecSys family
+# --------------------------------------------------------------------------
+def _recsys_example_flops(cfg: recsys_lib.RecSysConfig):
+    f = 0.0
+    dims = (cfg._mlp_in(),) + cfg.mlp + (1,)
+    if cfg.interaction != "bidir-seq":
+        f += sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+    if cfg.cin_layers:
+        h_prev = cfg.n_sparse
+        for h in cfg.cin_layers:
+            f += h_prev * cfg.n_sparse * cfg.embed_dim  # outer products
+            f += 2 * h_prev * cfg.n_sparse * cfg.embed_dim * h  # 1x1 conv
+            h_prev = h
+    if cfg.n_blocks:
+        S, d = cfg.seq_len + (1 if cfg.interaction == "transformer-seq" else 0), cfg.embed_dim
+        f += cfg.n_blocks * (8 * S * d * d + 4 * S * S * d + 16 * S * d * d)
+    return f
+
+
+def _recsys_batch_sds(cfg, B, dry, with_labels=True, rng=None):
+    out = {}
+    if cfg.interaction in ("cin", "concat"):
+        out["sparse_ids"] = ((B, cfg.n_sparse), jnp.int32, cfg.hash_size)
+        out["dense_feats"] = ((B, cfg.n_dense), jnp.float32, None)
+    if cfg.seq_len:
+        out["seq_ids"] = ((B, cfg.seq_len), jnp.int32, cfg.item_vocab)
+        out["target_id"] = ((B,), jnp.int32, cfg.item_vocab)
+        if cfg.n_dense:
+            out["dense_feats"] = ((B, cfg.n_dense), jnp.float32, None)
+    if with_labels:
+        out["labels"] = ((B,), jnp.int32, 2)
+    batch = {}
+    for k, (shape, dt, hi) in out.items():
+        if dry:
+            batch[k] = jax.ShapeDtypeStruct(shape, dt)
+        elif dt == jnp.int32:
+            batch[k] = jnp.asarray(rng.integers(0, hi, shape), jnp.int32)
+        else:
+            batch[k] = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    return batch
+
+
+def _recsys_cell(arch, cfg: recsys_lib.RecSysConfig, cell: ShapeCell, p, dry):
+    kind = cell.kind
+    rng = np.random.default_rng(0)
+    if kind == "train":
+        B = p["batch"]
+        flops = 3.0 * B * _recsys_example_flops(cfg)
+        if cfg.interaction == "bidir-seq":
+            # masked-position CE: ~2*mask_frac*S positions score the catalog
+            m_pos = max(int(2 * cfg.mask_frac * cfg.seq_len), 1)
+            flops = 3.0 * B * (
+                _recsys_example_flops(cfg)
+                + 2 * m_pos * (cfg.item_vocab + 2) * cfg.embed_dim
+            )
+        loss_fn = lambda params, b: recsys_lib.train_loss(params, cfg, b)
+        batch = _recsys_batch_sds(cfg, B, dry, rng=rng)
+        if dry and cfg.interaction == "bidir-seq":
+            # bound per-device logits (B_local, M, V/TP) to ~0.5GB
+            p = dict(p, n_micro=max(B // (_batch_shards() * 32), 1))
+        if not dry and cfg.interaction == "bidir-seq":
+            mask = rng.random((B, cfg.seq_len)) < cfg.mask_frac
+            labels = np.where(mask, np.asarray(batch["seq_ids"]), -1)
+            batch["labels"] = jnp.asarray(labels, jnp.int32)
+        elif dry and cfg.interaction == "bidir-seq":
+            batch["labels"] = jax.ShapeDtypeStruct((B, cfg.seq_len), jnp.int32)
+        fn, args, donate = _train_pieces(
+            loss_fn,
+            lambda k: recsys_lib.init_params(k, cfg),
+            recsys_lib.param_axes(cfg),
+            p.get("n_micro", 1),
+            dry,
+            batch,
+        )
+        return BuiltCell(arch, cell.name, kind, fn, args, donate, flops)
+
+    if kind == "serve":
+        B = p["batch"]
+        flops = B * _recsys_example_flops(cfg)
+        fn = lambda params, b: recsys_lib.serve_scores(params, cfg, b)
+        batch = _recsys_batch_sds(cfg, B, dry, with_labels=False, rng=rng)
+        if dry:
+            params = _sds(
+                jax.eval_shape(lambda k: recsys_lib.init_params(k, cfg), jax.random.PRNGKey(0)),
+                recsys_lib.param_axes(cfg),
+            )
+            batch = _sds(batch, _batch_axes_like(batch))
+            return BuiltCell(arch, cell.name, kind, fn, (params, batch), (), flops)
+        params = recsys_lib.init_params(jax.random.PRNGKey(0), cfg)
+        return BuiltCell(arch, cell.name, kind, fn, (params, batch), (), flops)
+
+    if kind == "retrieval":
+        n_cand, top_k = p["n_candidates"], p["top_k"]
+        if cfg.interaction == "bidir-seq":
+            per = 2 * cfg.embed_dim  # dot product per candidate
+        else:
+            per = _recsys_example_flops(cfg)
+        flops = float(n_cand) * per
+        fn = lambda params, b: recsys_lib.retrieval_scores(
+            params, cfg, b, top_k=top_k
+        )
+        batch = _recsys_batch_sds(cfg, 1, dry, with_labels=False, rng=rng)
+        if dry:
+            batch["candidate_ids"] = _leaf_sds((n_cand,), jnp.int32, "candidates")
+            params = _sds(
+                jax.eval_shape(lambda k: recsys_lib.init_params(k, cfg), jax.random.PRNGKey(0)),
+                recsys_lib.param_axes(cfg),
+            )
+            b2 = {
+                k: (v if k == "candidate_ids" else _sds({k: v}, _batch_axes_like({k: v}))[k])
+                for k, v in batch.items()
+            }
+            return BuiltCell(arch, cell.name, kind, fn, (params, b2), (), flops)
+        vocab = cfg.item_vocab or cfg.hash_size
+        batch["candidate_ids"] = jnp.asarray(
+            rng.integers(0, vocab, (n_cand,)), jnp.int32
+        )
+        params = recsys_lib.init_params(jax.random.PRNGKey(0), cfg)
+        return BuiltCell(arch, cell.name, kind, fn, (params, batch), (), flops)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Retrieval family (the paper's arch: ColBERTv2 + PLAID)
+# --------------------------------------------------------------------------
+def _colbert_fwd_flops(cfg: colbert_lib.ColBERTConfig, n_tokens):
+    bb = cfg.backbone
+    return 2.0 * bb.active_params() * n_tokens + _lm_attn_flops(
+        bb, 1, n_tokens, min(n_tokens, 512)
+    )
+
+
+def _plaid_search_flops(p, n_shards):
+    """Per-query useful flops of the 4-stage pipeline, summed over shards."""
+    K, nq = p["n_centroids"], p["q_len"]
+    dim = 128
+    s1 = 2.0 * K * nq * dim  # S_cq = C . Q^T (replicated per shard? no: once)
+    cand, L = p["candidate_cap"], p["doc_maxlen"]
+    ndocs = min(4096, cand)
+    s23 = (cand + ndocs) * L * nq  # centroid interaction gathers+max
+    s4 = (ndocs // 4) * L * (2.0 * dim * nq + dim)  # decompress + exact maxsim
+    return p["n_queries"] * (s1 + n_shards * (s23 + s4))
+
+
+def _retrieval_cell(arch, cfg: colbert_lib.ColBERTConfig, cell, p, dry, mesh):
+    kind = cell.kind
+    bb = cfg.backbone
+    rng = np.random.default_rng(0)
+    if kind == "train":
+        B, nway, qL, dL = (
+            p["global_batch"],
+            p["nway"],
+            p["q_len"],
+            p["d_len"],
+        )
+        ccfg = dataclasses.replace(cfg, nway=nway)
+        tokens_total = B * (qL + nway * dL)
+        flops = 3.0 * _colbert_fwd_flops(ccfg, tokens_total)
+        loss_fn = lambda params, b: colbert_lib.train_loss(params, ccfg, b)
+        if dry:
+            batch = {
+                "q_tokens": jax.ShapeDtypeStruct((B, qL), jnp.int32),
+                "q_mask": jax.ShapeDtypeStruct((B, qL), jnp.float32),
+                "d_tokens": jax.ShapeDtypeStruct((B, nway, dL), jnp.int32),
+                "d_mask": jax.ShapeDtypeStruct((B, nway, dL), jnp.float32),
+                "target_scores": jax.ShapeDtypeStruct((B, nway), jnp.float32),
+            }
+        else:
+            from repro.data.synthetic import colbert_batches
+
+            batch = {
+                k: jnp.asarray(v)
+                for k, v in next(
+                    colbert_batches(bb.vocab, B, q_len=qL, d_len=dL, nway=nway)
+                ).items()
+            }
+        fn, args, donate = _train_pieces(
+            loss_fn,
+            lambda k: colbert_lib.init_params(k, ccfg),
+            colbert_lib.param_axes(ccfg),
+            p.get("n_micro", 1),
+            dry,
+            batch,
+            cast_dtype=bb.dtype,
+        )
+        return BuiltCell(arch, cell.name, kind, fn, args, donate, flops)
+
+    if kind == "encode":
+        B, dL = p["batch"], p["d_len"]
+        flops = _colbert_fwd_flops(cfg, B * dL)
+        fn = lambda params, tokens: colbert_lib.encode(params, cfg, tokens)
+        if dry:
+            params = _cast_tree(
+                jax.eval_shape(lambda k: colbert_lib.init_params(k, cfg), jax.random.PRNGKey(0)),
+                bb.dtype,
+            )
+            params = _sds(params, colbert_lib.param_axes(cfg))
+            tokens = _leaf_sds((B, dL), jnp.int32, "batch", None)
+            return BuiltCell(arch, cell.name, kind, fn, (params, tokens), (), flops)
+        params = colbert_lib.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jnp.asarray(rng.integers(0, bb.vocab, (B, dL)), jnp.int32)
+        return BuiltCell(arch, cell.name, kind, fn, (params, tokens), (), flops)
+
+    if kind == "search":
+        assert mesh is not None, "search cells need a mesh (1-device ok)"
+        n_shards = 1
+        for v in mesh.shape.values():
+            n_shards *= v
+        nbits = p.get("nbits", 2)
+        dim = 128
+        pd = dim * nbits // 8
+        Nd, L = p["docs_per_shard"], p["doc_maxlen"]
+        Nt = Nd * p["avg_doclen"]
+        K = p["n_centroids"]
+        sp = plaid.SearchParams(
+            k=p["k"],
+            nprobe=4,
+            t_cs=0.4,
+            ndocs=min(4096, p["candidate_cap"]),
+            candidate_cap=p["candidate_cap"],
+            impl="ref",
+        )
+        meta = dict(
+            dim=dim,
+            nbits=nbits,
+            doc_maxlen=L,
+            ivf_list_cap=p["ivf_list_cap"],
+            eivf_list_cap=2 * p["ivf_list_cap"],
+        )
+        search = engine_sharded.make_sharded_search(
+            mesh, sp, docs_per_shard=Nd, static_meta=meta
+        )
+        flops = _plaid_search_flops(p, n_shards)
+        ns = n_shards
+        if dry:
+            doc = lambda shape, dt: _leaf_sds(
+                (shape[0] * ns,) + shape[1:], dt, "docs", *([None] * (len(shape) - 1))
+            )
+            rep = lambda shape, dt: _leaf_sds(shape, dt)
+            index = {
+                "centroids": rep((K, dim), jnp.float32),
+                "codes": doc((Nt,), jnp.int32),
+                "residuals": doc((Nt, pd), jnp.uint8),
+                "tok_pid": doc((Nt,), jnp.int32),
+                "doc_offsets": doc((Nd + 1,), jnp.int32),
+                "doc_lens": doc((Nd,), jnp.int32),
+                "ivf_pids": doc((Nt,), jnp.int32),
+                "ivf_offsets": doc((K + 1,), jnp.int32),
+                "ivf_lens": doc((K,), jnp.int32),
+                "eivf_eids": doc((Nt,), jnp.int32),
+                "eivf_offsets": doc((K + 1,), jnp.int32),
+                "eivf_lens": doc((K,), jnp.int32),
+                "cutoffs": rep((2**nbits - 1,), jnp.float32),
+                "weights": rep((2**nbits,), jnp.float32),
+            }
+            qs = rep((p["n_queries"], p["q_len"], dim), jnp.float32)
+            masks = rep((p["n_queries"], p["q_len"]), jnp.float32)
+            return BuiltCell(
+                arch, cell.name, kind, search, (index, qs, masks), (), flops
+            )
+        # smoke: build a real index, run the sharded search, compare below
+        from repro.core import index as index_mod
+        from repro.data.synthetic import embedding_corpus, queries_from_docs
+
+        docs, _ = embedding_corpus(
+            Nd * ns, dim=dim, min_len=4, max_len=p["avg_doclen"], seed=0
+        )
+        idx = index_mod.build_index(
+            docs, num_centroids=K, nbits=nbits, kmeans_iters=3
+        )
+        meta_real = engine_sharded.static_meta_of(idx)
+        sp2 = dataclasses.replace(
+            sp,
+            candidate_cap=min(sp.candidate_cap, max(idx.num_passages, 2)),
+            ndocs=min(sp.ndocs, max(idx.num_passages, 2)),
+        )
+        search = engine_sharded.make_sharded_search(
+            mesh, sp2, docs_per_shard=idx.num_passages, static_meta=meta_real
+        )
+        qs, _ = queries_from_docs(docs, p["n_queries"], q_len=p["q_len"])
+        masks = np.ones((p["n_queries"], p["q_len"]), np.float32)
+        return BuiltCell(
+            arch,
+            cell.name,
+            kind,
+            search,
+            (idx, jnp.asarray(qs), jnp.asarray(masks)),
+            (),
+            flops,
+        )
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Entry point
+# --------------------------------------------------------------------------
+def build_cell(
+    arch_id: str,
+    cell_name: str,
+    *,
+    mode: str = "dry",
+    mesh=None,
+) -> BuiltCell:
+    mod = config_registry.get(arch_id)
+    cell = config_registry.cells_of(arch_id)[cell_name]
+    dry = mode == "dry"
+    if dry and cell.skip:
+        return BuiltCell(arch_id, cell_name, cell.kind, None, (), skip=cell.skip)
+    cfg = mod.full_config() if dry else mod.reduced_config()
+    p = cell.full if dry else cell.reduced
+    fam = mod.FAMILY
+    if fam == "lm":
+        return _lm_cell(arch_id, cfg, cell, p, dry)
+    if fam == "gnn":
+        return _gnn_cell(arch_id, cfg, cell, p, dry)
+    if fam == "recsys":
+        return _recsys_cell(arch_id, cfg, cell, p, dry)
+    if fam == "retrieval":
+        return _retrieval_cell(arch_id, cfg, cell, p, dry, mesh)
+    raise ValueError(fam)

@@ -1,0 +1,149 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("EXTRA_XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (sharding
+propagates, no OOM at compile, collectives lower) and extracts the roofline
+terms (compiled.cost_analysis + collective bytes parsed from the partitioned
+HLO).  Results stream to JSONL for EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+
+# REPRO_F32_ACCUM=1 reverts the §Perf C1/C3/C5 optimizations (f32 einsum
+# accumulation, no fwd param cast, unconstrained grad accumulator) so the
+# paper-faithful/naive baseline can be re-measured under the final cost model.
+
+import jax
+
+from repro import configs as config_registry
+from repro.distributed import sharding
+from repro.launch import cells as cells_mod
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh, num_chips
+
+SERVE_KINDS = {"prefill", "decode", "serve", "retrieval", "search", "encode"}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = num_chips(mesh)
+    cell_meta = config_registry.cells_of(arch)[shape]
+    rules = dict(sharding.SERVE_RULES) if cell_meta.kind in SERVE_KINDS else {}
+    if os.environ.get("REPRO_STRATEGY") == "zero3":
+        rules.update(sharding.ZERO3_RULES)
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": cell_meta.kind,
+    }
+    t0 = time.time()
+    try:
+        with sharding.use_mesh(mesh, rules):
+            built = cells_mod.build_cell(arch, shape, mode="dry", mesh=mesh)
+            if built.skip:
+                rec["status"] = "skip"
+                rec["skip_reason"] = built.skip
+                return rec
+            fn = built.fn
+            if hasattr(fn, "lower"):  # already jit'd (sharded search)
+                jitted = fn
+            else:
+                jitted = jax.jit(fn, donate_argnums=built.donate)
+            lowered = jitted.lower(*built.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            hlo = compiled.as_text()
+            mc = hlo_analysis.analyze(hlo)
+
+        rl = hlo_analysis.roofline_terms(
+            per_chip_flops=mc.flops,
+            per_chip_bytes=mc.hbm_bytes,
+            per_chip_coll_bytes=mc.coll_bytes,
+            model_flops=built.model_flops,
+            n_chips=chips,
+        )
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            # memory (per device)
+            mem_args=getattr(mem, "argument_size_in_bytes", None),
+            mem_out=getattr(mem, "output_size_in_bytes", None),
+            mem_temp=getattr(mem, "temp_size_in_bytes", None),
+            mem_alias=getattr(mem, "alias_size_in_bytes", None),
+            # roofline terms (our HLO cost model; xla_flops = body-once ref)
+            hlo_flops=mc.flops,
+            hlo_bytes=mc.hbm_bytes,
+            xla_flops=float(cost.get("flops", 0.0)),
+            coll_bytes=mc.coll_bytes,
+            coll_detail={k: round(v) for k, v in mc.coll_by_kind.items()},
+            coll_counts=mc.coll_counts,
+            cost_notes=mc.notes,
+            compute_s=rl.compute_s,
+            memory_s=rl.memory_s,
+            collective_s=rl.collective_s,
+            dominant=rl.dominant,
+            model_flops=built.model_flops,
+            model_flops_per_chip=rl.model_flops,
+            useful_ratio=round(rl.useful_ratio, 4),
+            roofline_fraction=round(rl.roofline_fraction, 4),
+        )
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        if verbose:
+            traceback.print_exc()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+
+    pairs = []
+    archs = config_registry.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        for c in config_registry.cells_of(a):
+            if args.shape and c != args.shape:
+                continue
+            pairs.append((a, c))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in pairs:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp)
+            line = json.dumps(rec)
+            print(line, flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(line + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,498 @@
+"""Post-SPMD HLO cost model: flops / HBM bytes / collective bytes.
+
+XLA's built-in ``compiled.cost_analysis()`` counts while-loop bodies ONCE —
+useless for scan-over-layers programs (a 60-layer scan reports 1/60th of the
+flops).  This module parses the optimized (partitioned) HLO text and builds
+its own accounting:
+
+* **exec multiplier** per computation: ENTRY=1; while body/condition inherit
+  caller x trip count (``backend_config known_trip_count``, falling back to
+  the loop-condition constant); fusion/call/reduce callees inherit the
+  caller's multiplier.
+* **flops**: 2*M*N*K per ``dot`` (shapes resolved through a per-computation
+  symbol table incl. parameter types), weighted by exec multiplier.
+* **HBM bytes**: post-fusion HLO fusion boundaries approximate memory
+  traffic — sum (operand + result bytes) of every top-level op in every
+  non-fusion-internal computation, weighted by exec multiplier.  Control ops
+  (tuple/gte/parameter/constant/bitcast/while) are skipped.
+* **collective bytes**: per-device wire bytes with ring-algorithm factors
+  (all-reduce 2x result, all-gather result, reduce-scatter result x group,
+  all-to-all / permute result), weighted by exec multiplier.
+
+All quantities are PER DEVICE (the partitioned module is one device's
+program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    rtype: str
+    op: str
+    operands: list[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict  # param name -> type str
+    instrs: list[Instr]
+
+
+_DEF_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\s]*?))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*([\w\[\],{}/ ]+?)(?:,|$)")
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                params = {}
+                for pm in _PARAM_RE.finditer(m.group(2)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(1), params, [])
+                comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        m = _DEF_RE.match(s)
+        if not m:
+            continue
+        name, rtype, op, rest = m.groups()
+        # operands: %refs before the closing paren of the op call
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        ops_str = rest[: i - 1] if depth == 0 else rest
+        operands = re.findall(r"%([\w\.\-]+)", ops_str)
+        cur.instrs.append(Instr(name, rtype, op, operands, s))
+    return comps
+
+
+def _trip_count(instr: Instr, comps) -> float:
+    m = re.search(r'known_trip_count[":{\s]*n["\s:]*"?(\d+)', instr.raw)
+    if m:
+        return float(m.group(1))
+    mc = re.search(r"condition=%?([\w\.\-]+)", instr.raw)
+    if mc and mc.group(1) in comps:
+        consts = []
+        for ins in comps[mc.group(1)].instrs:
+            consts += [int(x) for x in re.findall(r"constant\((\d+)\)", ins.raw)]
+        if consts:
+            return float(max(consts))
+    return 1.0
+
+
+def _multipliers(comps: dict[str, Computation]):
+    """Returns (exec_mult, hbm_visible) per computation."""
+    exec_mult = {name: None for name in comps}
+    hbm_visible = {name: True for name in comps}
+    callers: dict[str, list[tuple[str, float, bool]]] = {n: [] for n in comps}
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            if ins.op == "while":
+                tc = _trip_count(ins, comps)
+                for key in ("body", "condition"):
+                    m = re.search(rf"{key}=%?([\w\.\-]+)", ins.raw)
+                    if m and m.group(1) in comps:
+                        callers[m.group(1)].append((cname, tc, True))
+            else:
+                for key in ("calls", "to_apply"):
+                    m = re.search(rf"{key}=%?([\w\.\-]+)", ins.raw)
+                    if m and m.group(1) in comps:
+                        callers[m.group(1)].append((cname, 1.0, False))
+
+    # entry = computation nobody calls (prefer one literally named ENTRY-ish)
+    roots = [n for n in comps if not callers[n]]
+
+    def resolve(name, seen=()):
+        if exec_mult[name] is not None:
+            return exec_mult[name], hbm_visible[name]
+        if name in seen or not callers[name]:
+            exec_mult[name] = 1.0
+            hbm_visible[name] = True
+            return 1.0, True
+        cname, tc, is_while = callers[name][0]
+        pm, pv = resolve(cname, seen + (name,))
+        exec_mult[name] = pm * tc
+        # fusion/reduce-internal computations are not HBM-visible (their
+        # interior never round-trips HBM); while bodies are.
+        hbm_visible[name] = pv if is_while else False
+        return exec_mult[name], hbm_visible[name]
+
+    for n in comps:
+        resolve(n)
+    for r in roots:
+        exec_mult[r] = 1.0
+        hbm_visible[r] = True
+    return exec_mult, hbm_visible
+
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "while", "after-all", "add-dependency", "opt-barrier",
+}
+
+
+def _op_hbm_bytes(ins: Instr, symtab: dict, comps: dict) -> float:
+    """TPU-faithful HBM traffic estimate for one top-level op.
+
+    * fusions containing a dynamic-update-slice (scan ys writes) touch only
+      the update slice (XLA aliases the buffer): 2x update bytes.
+    * fusions containing dynamic-slice only (scan xs reads) touch the slice:
+      2x result bytes.
+    * pure dtype converts (same element count) are XLA:CPU bf16-emulation
+      artifacts — free on TPU (native bf16): 0 bytes.
+    * everything else: operands + result (post-fusion boundary = HBM trip).
+    """
+    op = ins.op
+    callee = None
+    if op == "fusion":
+        mcall = re.search(r"calls=%?([\w\.\-]+)", ins.raw)
+        callee = comps.get(mcall.group(1)) if mcall else None
+    if callee is not None:
+        callee_tab = dict(callee.params)
+        for i2 in callee.instrs:
+            callee_tab[i2.name] = i2.rtype
+        dus = [i2 for i2 in callee.instrs if i2.op == "dynamic-update-slice"]
+        if dus:
+            upd = max(
+                (
+                    _type_bytes(callee_tab.get(d.operands[1], ""))
+                    for d in dus
+                    if len(d.operands) >= 2
+                ),
+                default=0,
+            )
+            if upd:
+                return 2.0 * upd
+        has_ds = any(i2.op == "dynamic-slice" for i2 in callee.instrs)
+        if has_ds:
+            return 2.0 * _type_bytes(ins.rtype)
+        root = callee.instrs[-1] if callee.instrs else None
+        if root is not None and root.op == "convert" and len(ins.operands) == 1:
+            return 0.0
+    if op == "convert" and len(ins.operands) == 1:
+        return 0.0
+    if op == "dynamic-slice":
+        return 2.0 * _type_bytes(ins.rtype)
+    if op == "dynamic-update-slice" and len(ins.operands) >= 2:
+        return 2.0 * _type_bytes(symtab.get(ins.operands[1], ""))
+    b = float(_type_bytes(ins.rtype))
+    for o in ins.operands:
+        b += _type_bytes(symtab.get(o, ""))
+    return b
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+
+def _group_size(raw: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", raw)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", raw)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_kind: dict
+    coll_counts: dict
+    dot_count: int
+    notes: list
+
+
+def _users_of(name: str, comp: Computation) -> list[Instr]:
+    pat = f"%{name}"
+    out = []
+    for u in comp.instrs:
+        rhs = u.raw.split("=", 1)[-1]
+        if re.search(re.escape(pat) + r"\b", rhs):
+            out.append(u)
+    return out
+
+
+def _elem_count(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _is_narrow_convert(u: Instr, src_elems: int | None = None) -> bool:
+    """Consumer proves the f32 value immediately narrows to 16-bit: either
+    an explicit convert, or an elementwise fusion emitting a same-element-
+    count 16-bit result (e.g. the fused residual add after a TP psum)."""
+    narrow_t = "bf16" in u.rtype or "f16" in u.rtype
+    if not narrow_t:
+        return False
+    if u.op == "convert" or (u.op == "fusion" and "convert" in u.name):
+        return True
+    if u.op == "fusion" and src_elems is not None:
+        return _elem_count(u.rtype) == src_elems
+    return False
+
+
+def _bf16_wire_scale(ins: Instr, comp: Computation) -> float:
+    """XLA:CPU emulates bf16 dots in f32, so partial-sum collectives appear
+    as f32 even though on TPU (native bf16) they move bf16.  If every direct
+    consumer of an f32 collective (following one get-tuple-element hop) is a
+    convert to a 16-bit type, count the wire bytes at the converted width."""
+    if "f32" not in ins.rtype:
+        return 1.0
+    # exact signal: XLA:CPU's AllReducePromotion rewrites a bf16 all-reduce
+    # into convert->f32 AR->convert with a "*_promoted" reducer computation.
+    # On TPU the original bf16 all-reduce runs natively.
+    if re.search(r"to_apply=%?[\w\.\-]*promoted", ins.raw):
+        return 0.5
+    users = _users_of(ins.name, comp)
+    if not users:
+        return 1.0
+    for u in users:
+        if u.op == "get-tuple-element":
+            elems = _elem_count(u.rtype)
+            gte_users = _users_of(u.name, comp)
+            if not gte_users or not all(
+                _is_narrow_convert(w, elems) for w in gte_users
+            ):
+                return 1.0
+        elif not _is_narrow_convert(u, _elem_count(ins.rtype)):
+            return 1.0
+    return 0.5
+
+
+def analyze(hlo: str) -> ModuleCost:
+    comps = parse_module(hlo)
+    exec_mult, hbm_visible = _multipliers(comps)
+    flops = 0.0
+    hbm = 0.0
+    coll: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    notes: list[str] = []
+    dot_count = 0
+
+    for cname, comp in comps.items():
+        mult = exec_mult.get(cname) or 1.0
+        visible = hbm_visible.get(cname, True)
+        symtab = dict(comp.params)
+        for ins in comp.instrs:
+            symtab[ins.name] = ins.rtype
+        for ins in comp.instrs:
+            op = ins.op
+            # ---- flops: dot ops (counted wherever they live)
+            if op == "dot":
+                out_dims = _shape_dims(ins.rtype)
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+                k = 1
+                if m and ins.operands:
+                    lhs_t = symtab.get(ins.operands[0], "")
+                    lhs_dims = _shape_dims(lhs_t)
+                    for di in m.group(1).split(","):
+                        if di and int(di) < len(lhs_dims):
+                            k *= lhs_dims[int(di)]
+                out = 1
+                for d in out_dims:
+                    out *= d
+                flops += 2.0 * out * k * mult
+                dot_count += 1
+            elif op == "convolution":
+                notes.append(f"unmodeled convolution in {cname}")
+            # ---- collective bytes
+            base = op.replace("-start", "")
+            is_coll = base in ("all-reduce", "all-gather", "reduce-scatter",
+                               "all-to-all", "collective-permute")
+            if is_coll:
+                if op.endswith("-done"):
+                    continue
+                scale = _bf16_wire_scale(ins, comp)
+                rb = _type_bytes(ins.rtype) * scale
+                if base == "all-reduce":
+                    b = 2.0 * rb
+                elif base == "reduce-scatter":
+                    b = rb * _group_size(ins.raw)
+                else:
+                    b = rb
+                coll[base] = coll.get(base, 0.0) + b * mult
+                counts[base] = counts.get(base, 0) + 1
+            # ---- HBM bytes: top-level ops of HBM-visible computations
+            if visible and op not in _SKIP_BYTES_OPS:
+                if is_coll:
+                    b = _op_hbm_bytes(ins, symtab, comps) * _bf16_wire_scale(
+                        ins, comp
+                    )
+                else:
+                    b = _op_hbm_bytes(ins, symtab, comps)
+                hbm += b * mult
+    return ModuleCost(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=sum(coll.values()),
+        coll_by_kind=coll,
+        coll_counts=counts,
+        dot_count=dot_count,
+        notes=notes[:5],
+    )
+
+
+def top_ops(hlo: str, n: int = 20, kind: str = "hbm"):
+    """Largest ops by modeled traffic — the hillclimb profiling tool.
+
+    kind="hbm": top ops by HBM bytes x exec multiplier.
+    kind="coll": every collective with bytes x multiplier.
+    Returns list of (bytes, mult, computation, op, result_type, raw_prefix).
+    """
+    comps = parse_module(hlo)
+    exec_mult, hbm_visible = _multipliers(comps)
+    rows = []
+    for cname, comp in comps.items():
+        mult = exec_mult.get(cname) or 1.0
+        symtab = dict(comp.params)
+        for ins in comp.instrs:
+            symtab[ins.name] = ins.rtype
+        for ins in comp.instrs:
+            if kind == "coll":
+                base = ins.op.replace("-start", "")
+                if base in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute"):
+                    rb = _type_bytes(ins.rtype)
+                    b = 2.0 * rb if base == "all-reduce" else (
+                        rb * _group_size(ins.raw) if base == "reduce-scatter" else rb
+                    )
+                    rows.append(
+                        (b * mult, mult, cname, base, ins.rtype[:60], ins.raw[:160])
+                    )
+            else:
+                if not hbm_visible.get(cname, True):
+                    continue
+                if ins.op in _SKIP_BYTES_OPS:
+                    continue
+                b = _op_hbm_bytes(ins, symtab, comps)
+                rows.append(
+                    (b * mult, mult, cname, ins.op, ins.rtype[:60], ins.raw[:160])
+                )
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]
+
+
+# --------------------------------------------------------------------------
+# Roofline
+# --------------------------------------------------------------------------
+#: TPU v5e-class hardware constants (per chip).
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float  # per chip
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak the USEFUL flops achieve at the bound time."""
+        if self.bound_s <= 0:
+            return 0.0
+        return self.model_flops / (self.bound_s * PEAK_FLOPS)
+
+
+def roofline_terms(
+    *,
+    per_chip_flops: float,
+    per_chip_bytes: float,
+    per_chip_coll_bytes: float,
+    model_flops: float,
+    n_chips: int,
+) -> Roofline:
+    return Roofline(
+        compute_s=per_chip_flops / PEAK_FLOPS,
+        memory_s=per_chip_bytes / HBM_BW,
+        collective_s=per_chip_coll_bytes / ICI_BW,
+        hlo_flops=per_chip_flops,
+        hlo_bytes=per_chip_bytes,
+        coll_bytes=per_chip_coll_bytes,
+        model_flops=model_flops / n_chips,
+    )

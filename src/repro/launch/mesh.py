@@ -1,0 +1,28 @@
+"""Mesh factory for the production deployment.
+
+Single pod = 16x16 = 256 chips (TPU v5e pod slice); multi-pod adds a leading
+"pod" axis (2 pods = 512 chips).  A FUNCTION, not a module constant — merely
+importing this module never touches jax device state (the dry-run must set
+XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the standard axis names (tests / smoke runs)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def num_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,93 @@
+"""Serving driver: build a PLAID index over a synthetic corpus and serve
+batched retrieval requests.
+
+``python -m repro.launch.serve --docs 20000 --queries 256 --k 10 [--pallas]
+[--compare-vanilla]`` prints latency percentiles and (optionally) the
+speedup + agreement vs. the vanilla ColBERTv2 baseline — the paper's
+Table 3 protocol at laptop scale.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as index_mod
+from repro.core import plaid, vanilla
+from repro.data import synthetic as syn
+
+
+def percentile_ms(times, p):
+    return float(np.percentile(np.asarray(times) * 1e3, p))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=20000)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--nbits", type=int, default=2)
+    ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--compare-vanilla", action="store_true")
+    args = ap.parse_args()
+
+    print(f"building corpus: {args.docs} docs ...")
+    docs, _ = syn.embedding_corpus(args.docs, dim=args.dim)
+    t0 = time.perf_counter()
+    index = index_mod.build_index(docs, nbits=args.nbits)
+    jax.block_until_ready(index.centroids)
+    print(
+        f"index: {index.num_passages} docs / {index.num_tokens} tokens / "
+        f"{index.num_centroids} centroids ({time.perf_counter() - t0:.1f}s)"
+    )
+
+    qs, gold = syn.queries_from_docs(docs, args.queries)
+    qs = jnp.asarray(qs)
+
+    params = plaid.params_for_k(args.k, impl="pallas" if args.pallas else "ref")
+    searcher = plaid.PlaidSearcher(index, params)
+
+    # warmup (compile)
+    searcher.search_batch(qs[: args.batch])[0].block_until_ready()
+    times, hits = [], 0
+    for i in range(0, args.queries, args.batch):
+        chunk = qs[i : i + args.batch]
+        t0 = time.perf_counter()
+        scores, pids = searcher.search_batch(chunk)
+        pids.block_until_ready()
+        times.append((time.perf_counter() - t0) / len(chunk))
+        hits += int((np.asarray(pids[:, 0]) == gold[i : i + len(chunk)]).sum())
+
+    print(
+        f"PLAID  k={args.k}: mean {np.mean(times)*1e3:.2f} ms/q  "
+        f"p50 {percentile_ms(times, 50):.2f}  p99 {percentile_ms(times, 99):.2f}  "
+        f"success@1 {hits / args.queries:.3f}"
+    )
+
+    if args.compare_vanilla:
+        vs = vanilla.VanillaSearcher(
+            index, vanilla.VanillaParams(k=args.k, nprobe=4, ncandidates=2**13)
+        )
+        vs.search_batch(qs[: args.batch])[0].block_until_ready()
+        vt, vhits = [], 0
+        for i in range(0, args.queries, args.batch):
+            chunk = qs[i : i + args.batch]
+            t0 = time.perf_counter()
+            scores, pids = vs.search_batch(chunk)
+            pids.block_until_ready()
+            vt.append((time.perf_counter() - t0) / len(chunk))
+            vhits += int((np.asarray(pids[:, 0]) == gold[i : i + len(chunk)]).sum())
+        print(
+            f"vanilla k={args.k}: mean {np.mean(vt)*1e3:.2f} ms/q  "
+            f"success@1 {vhits / args.queries:.3f}  "
+            f"-> PLAID speedup {np.mean(vt) / np.mean(times):.1f}x"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--reduced]``.
+
+Trains any registry arch on the synthetic data pipeline with the full
+production substrate: AdamW + cosine schedule, microbatched grad
+accumulation, rolling checkpoints, straggler watchdog, and supervised
+restart on failure.  On a multi-chip runtime the same code runs under the
+production mesh (``--mesh single|multi``); on this CPU container use
+``--reduced`` for the scaled-down configs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as config_registry
+from repro.data import synthetic as syn
+from repro.distributed import sharding
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import colbert as colbert_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as T
+from repro.training import fault_tolerance as ft
+from repro.training import loop as train_loop
+from repro.training import optimizer as opt_lib
+
+
+def data_for(arch_mod, cfg, batch_size, family):
+    if family == "lm":
+        it = syn.lm_batches(cfg.vocab, batch_size, 64)
+        loss = lambda p, b: T.lm_loss(p, cfg, b["tokens"], b["targets"])
+        init = lambda k: T.init_params(k, cfg)
+    elif family == "retrieval":
+        bb = cfg.backbone
+        it = syn.colbert_batches(bb.vocab, batch_size, q_len=8, d_len=16, nway=cfg.nway)
+        loss = lambda p, b: colbert_lib.train_loss(p, cfg, b)
+        init = lambda k: colbert_lib.init_params(k, cfg)
+    elif family == "recsys":
+        it = syn.recsys_batches(cfg, batch_size)
+        loss = lambda p, b: recsys_lib.train_loss(p, cfg, b)
+        init = lambda k: recsys_lib.init_params(k, cfg)
+    else:
+        raise ValueError(f"use examples/ for family {family}")
+    return it, loss, init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--compression", choices=["none", "int8"], default="none")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", choices=["none", "local", "single", "multi"], default="none")
+    args = ap.parse_args()
+
+    mod = config_registry.get(args.arch)
+    cfg = mod.reduced_config() if args.reduced else mod.full_config()
+    if mod.FAMILY == "lm" and not args.reduced:
+        cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+
+    mesh = {
+        "none": None,
+        "local": make_local_mesh(),
+        "single": lambda: make_production_mesh(),
+        "multi": lambda: make_production_mesh(multi_pod=True),
+    }[args.mesh]
+    if callable(mesh):
+        mesh = mesh()
+
+    it, loss_fn, init_fn = data_for(mod, cfg, args.batch, mod.FAMILY)
+    optimizer = opt_lib.adamw(
+        opt_lib.AdamWConfig(
+            schedule=opt_lib.cosine_schedule(args.lr, 20, args.steps)
+        )
+    )
+    comp = None if args.compression == "none" else args.compression
+    step = train_loop.make_train_step(
+        loss_fn, optimizer, n_micro=args.n_micro, compression=comp
+    )
+    with sharding.use_mesh(mesh):
+        params = init_fn(jax.random.PRNGKey(0))
+        opt_state = train_loop.init_opt_state(optimizer, params, comp)
+        jit_step = jax.jit(step, donate_argnums=(0, 1))
+
+        n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        print(f"arch={args.arch} params={n_params:,} steps={args.steps}")
+
+        watchdog = ft.StepWatchdog()
+
+        def step_fn(state, batch):
+            p, o, m = jit_step(state["params"], state["opt"], batch)
+            state = {"params": p, "opt": o}
+            state["_loss"] = m["loss"]
+            return state
+
+        state = {"params": params, "opt": opt_state}
+        batches = (
+            {k: jnp.asarray(v) for k, v in next(it).items()}
+            for _ in range(args.steps)
+        )
+        t0 = time.perf_counter()
+        losses = []
+
+        def timed(state, batch):
+            s = step_fn(state, batch)
+            losses.append(float(s.pop("_loss")))
+            return s
+
+        state, final, restarts = ft.run_supervised(
+            timed,
+            state,
+            batches,
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every,
+            watchdog=watchdog,
+        )
+        dt = time.perf_counter() - t0
+        print(
+            f"done: {final} steps in {dt:.1f}s "
+            f"({dt / max(final, 1) * 1e3:.1f} ms/step), restarts={restarts}, "
+            f"stragglers={len(watchdog.stragglers)}"
+        )
+        print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

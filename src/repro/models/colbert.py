@@ -1,0 +1,108 @@
+"""ColBERT late-interaction encoder (the paper's own architecture).
+
+A bidirectional transformer backbone (reuses ``repro.models.transformer``
+with ``causal=False``) + linear projection to ``out_dim`` (128 default) +
+L2 normalization — exactly the token-level representation the PLAID engine
+indexes and searches.
+
+Training follows ColBERTv2 supervision: per query, one positive + sampled
+negatives scored with MaxSim; cross-entropy over the candidates, optionally
+with in-batch negatives and KL-distillation against teacher scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ColBERTConfig:
+    backbone: T.TransformerConfig = dataclasses.field(
+        default_factory=lambda: T.TransformerConfig(causal=False)
+    )
+    out_dim: int = 128
+    nway: int = 4  # passages scored per query during training (1 pos + negs)
+    use_ib_negatives: bool = True
+    distill: bool = True
+
+    @property
+    def name(self):
+        return "colbertv2"
+
+
+def init_params(key, cfg: ColBERTConfig):
+    kb, kp = jax.random.split(key)
+    scale = (2.0 / (cfg.backbone.d_model + cfg.out_dim)) ** 0.5
+    return {
+        "backbone": T.init_params(kb, cfg.backbone),
+        "proj": jax.random.normal(
+            kp, (cfg.backbone.d_model, cfg.out_dim), jnp.float32
+        )
+        * scale,
+    }
+
+
+def param_axes(cfg: ColBERTConfig):
+    return {
+        "backbone": T.param_axes(cfg.backbone),
+        "proj": ("embed_fsdp", None),
+    }
+
+
+def encode(params, cfg: ColBERTConfig, tokens, mask=None):
+    """tokens (B, S) -> unit-norm token embeddings (B, S, out_dim)."""
+    h, _ = T.forward(params["backbone"], cfg.backbone, tokens)
+    e = jnp.einsum(
+        "bsd,do->bso", h.astype(cfg.backbone.dtype), params["proj"].astype(cfg.backbone.dtype)
+    ).astype(jnp.float32)
+    e = e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-6)
+    if mask is not None:
+        e = e * mask[..., None]
+    return constrain(e, "batch", "seq", None)
+
+
+def maxsim_scores(q_emb, d_emb, d_mask=None):
+    """q (B, Lq, D) vs d (N, Ld, D) -> (B, N) late-interaction scores."""
+    s = jnp.einsum("bqd,ntd->bnqt", q_emb, d_emb)
+    if d_mask is not None:
+        s = jnp.where(d_mask[None, :, None, :] > 0, s, -1e4)
+    return s.max(axis=-1).sum(axis=-1)  # max over doc tokens, sum over q
+
+
+def train_loss(params, cfg: ColBERTConfig, batch):
+    """batch: q_tokens (B, Lq), d_tokens (B, nway, Ld), d_mask, q_mask,
+    target_scores (B, nway) teacher scores (optional zeros => disabled)."""
+    B, nway, Ld = batch["d_tokens"].shape
+    q = encode(params, cfg, batch["q_tokens"], batch.get("q_mask"))
+    d_tok = batch["d_tokens"].reshape(B * nway, Ld)
+    d_msk = batch["d_mask"].reshape(B * nway, Ld)
+    d = encode(params, cfg, d_tok, d_msk)
+
+    if cfg.use_ib_negatives:
+        scores = maxsim_scores(q, d, d_msk)  # (B, B*nway)
+        labels = jnp.arange(B) * nway  # each query's positive is slot 0
+    else:
+        dg = d.reshape(B, nway, Ld, -1)
+        scores = jnp.einsum("bqd,bntd->bnqt", q, dg)
+        scores = jnp.where(
+            batch["d_mask"][:, :, None, :] > 0, scores, -1e4
+        ).max(-1).sum(-1)
+        labels = jnp.zeros((B,), jnp.int32)
+    logz = jax.nn.logsumexp(scores, axis=-1)
+    pos = jnp.take_along_axis(scores, labels[:, None], axis=-1)[:, 0]
+    ce = (logz - pos).mean()
+
+    kd = jnp.zeros(())
+    if cfg.distill and "target_scores" in batch:
+        way = maxsim_scores(q, d, d_msk).reshape(B, B, nway)
+        way = way[jnp.arange(B), jnp.arange(B)]  # (B, nway) own candidates
+        logp = jax.nn.log_softmax(way, -1)
+        tgt = jax.nn.softmax(batch["target_scores"].astype(jnp.float32), -1)
+        kd = -(tgt * logp).sum(-1).mean()
+    loss = ce + kd
+    return loss, {"ce": ce, "kd": kd}

@@ -1,0 +1,354 @@
+"""Shared neural layers in pure JAX (no flax): params are nested dicts.
+
+Conventions:
+  * ``init_*`` returns a param pytree; matching ``apply`` fns are pure.
+  * Weight layout is (in, out) for matmuls; attention weights are fused QKV.
+  * Compute dtype is a config choice (bf16 on TPU); params stay f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else (2.0 / (d_in + d_out)) ** 0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+
+
+def dense(params, x, dtype=None):
+    w = params["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    # accumulate in the compute dtype: sharded-contraction psums then move
+    # bf16 on the wire instead of jnp's default f32 accumulator
+    # (REPRO_F32_ACCUM=1 restores the f32 default for baseline A/B)
+    import os as _os
+
+    pref = None if _os.environ.get("REPRO_F32_ACCUM") else x.dtype
+    return jnp.matmul(x, w, preferred_element_type=pref)
+
+
+def dense_bias_init(key, d_in, d_out, scale=None):
+    p = dense_init(key, d_in, d_out, scale)
+    p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_bias(params, x, dtype=None):
+    w, b = params["w"], params["b"]
+    if dtype is not None:
+        w, b, x = w.astype(dtype), b.astype(dtype), x.astype(dtype)
+    return x @ w + b
+
+
+def rmsnorm_init(d):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["g"]).astype(dt)
+
+
+def layernorm_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["g"] + params["b"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA; optional sliding window; chunked online-softmax prefill)
+# --------------------------------------------------------------------------
+def attention_init(key, d_model, n_heads, n_kv_heads, d_head):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * d_head),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * d_head),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model),
+    }
+
+
+def _group_q(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, H, dh) -> (B, S, Hkv, G, dh) — GQA without repeating K/V.
+
+    K/V stay at Hkv heads; scores are computed with grouped einsums so the
+    repeated-KV tensor (B,S,H,dh) never materializes (critical for MQA
+    decode, e.g. granite-34b kv=1 with a 32k cache).
+    """
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, S, H, dh) — already RoPE'd
+    k: jax.Array,  # (B, S, Hkv, dh)
+    v: jax.Array,  # (B, S, Hkv, dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,  # sliding-window size (None = full)
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """Memory-bounded attention: online-softmax over KV chunks per Q chunk.
+
+    Flash-attention-style in pure JAX (lax.scan): peak activation is
+    O(q_chunk * k_chunk) per (B, H) instead of O(S^2).  With ``window`` set,
+    each Q chunk only scans the KV chunks that intersect its window —
+    O(S * window) flops for sliding-window models.
+    """
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = dh**-0.5
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, S)
+    n_q = (S + q_chunk - 1) // q_chunk
+    n_k = (S + k_chunk - 1) // k_chunk
+    # Pad S to chunk multiples.
+    Sp = n_q * q_chunk
+    Skp = n_k * k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skp - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - S), (0, 0), (0, 0)))
+    qp = qp.reshape(B, n_q, q_chunk, Hkv, G, dh)
+
+    kv_pos = jnp.arange(Skp)
+    q_pos_base = jnp.arange(q_chunk)
+
+    def q_body(qi):
+        qc = qp[:, qi]  # (B, qc, Hkv, G, dh)
+        q_pos = qi * q_chunk + q_pos_base  # (qc,)
+
+        def kv_body(carry, ki, masked: bool):
+            # ``masked=False`` for fully-visible off-diagonal causal blocks:
+            # skips the (qc x kc) mask select + where traffic entirely —
+            # only the diagonal block pays masking (§Perf OPT-A).
+            m, l, acc = carry  # (B, Hkv, G, qc), ..., (B, Hkv, G, qc, dh)
+            ks = jax.lax.dynamic_slice_in_dim(kp, ki * k_chunk, k_chunk, 1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, ki * k_chunk, k_chunk, 1)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qc, ks, preferred_element_type=jnp.float32
+            )
+            s = s * scale
+            if masked:
+                kpos = jax.lax.dynamic_slice_in_dim(
+                    kv_pos, ki * k_chunk, k_chunk, 0
+                )
+                mask = kpos[None, :] < S  # padding
+                if causal:
+                    mask = mask & (q_pos[:, None] >= kpos[None, :])
+                if window is not None:
+                    mask = mask & (q_pos[:, None] - kpos[None, :] < window)
+                s = jnp.where(mask[None, None, None, :, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            # guard -inf rows (no valid kv yet)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            if masked:
+                p = jnp.where(mask[None, None, None, :, :], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd",
+                p.astype(vs.dtype),
+                vs,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, dh), jnp.float32)
+        carry = (m0, l0, a0)
+        if window is not None:
+            # static bound on kv chunks a (window + q_chunk) span covers
+            span = min((window + q_chunk + k_chunk - 2) // k_chunk + 1, n_k)
+            first = jnp.maximum(qi * q_chunk // k_chunk - (span - 1), 0)
+            first = jnp.minimum(first, n_k - span)
+            kis = first + jnp.arange(span)
+            carry, _ = jax.lax.scan(
+                lambda c, ki: kv_body(c, ki, masked=True), carry, kis
+            )
+        elif causal:
+            # off-diagonal blocks (ki < qi when chunk-aligned): mask-free
+            n_full = (qi * q_chunk) // k_chunk
+            diag_lo = n_full
+            diag_hi = min(((qi + 1) * q_chunk + k_chunk - 1) // k_chunk, n_k)
+            if n_full > 0:
+                carry, _ = jax.lax.scan(
+                    lambda c, ki: kv_body(c, ki, masked=False),
+                    carry,
+                    jnp.arange(n_full),
+                )
+            for ki in range(diag_lo, diag_hi):  # diagonal block(s)
+                carry, _ = kv_body(carry, jnp.int32(ki), masked=True)
+        else:
+            need_mask = Skp != S  # padding only
+            carry, _ = jax.lax.scan(
+                lambda c, ki: kv_body(c, ki, masked=need_mask),
+                carry,
+                jnp.arange(n_k),
+            )
+        m, l, acc = carry
+        out = acc / jnp.maximum(l, 1e-9)[..., None]  # (B, Hkv, G, qc, dh)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, dh)
+
+    outs = [q_body(qi) for qi in range(n_q)]  # unrolled: static kv bounds
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out[:, :S].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, dh)
+    k_cache: jax.Array,  # (B, S, Hkv, dh)
+    v_cache: jax.Array,  # (B, S, Hkv, dh)
+    cache_len,  # scalar or (B,) — valid prefix length
+) -> jax.Array:
+    B, S, Hkv, dh = k_cache.shape
+    H = q.shape[2]
+    qg = _group_q(q, Hkv)  # (B, 1, Hkv, G, dh)
+    # preferred_element_type: f32 accumulation WITHOUT materializing an f32
+    # copy of the (large) cache — the convert would double cache traffic.
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    s = s * dh**-0.5
+    pos = jnp.arange(S)
+    mask = pos[None, :] < jnp.asarray(cache_len).reshape(-1, 1)  # (B, S)
+    s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd",
+        p.astype(v_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# FFN: SwiGLU + MoE (GShard-style capacity dispatch)
+# --------------------------------------------------------------------------
+def swiglu_init(key, d_model, d_ff):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff),
+        "wg": dense_init(ks[1], d_model, d_ff),
+        "wo": dense_init(ks[2], d_ff, d_model),
+    }
+
+
+def swiglu(params, x, dtype=None):
+    h = dense(params["wi"], x, dtype) * jax.nn.silu(
+        dense(params["wg"], x, dtype)
+    )
+    return dense(params["wo"], h, dtype)
+
+
+def moe_init(key, d_model, d_ff, n_experts, n_shared=0):
+    ks = jax.random.split(key, 5)
+    scale = (2.0 / (d_model + d_ff)) ** 0.5
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, scale=0.02),
+        "wi": jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * scale,
+        "wg": jax.random.normal(ks[2], (n_experts, d_model, d_ff)) * scale,
+        "wo": jax.random.normal(ks[3], (n_experts, d_ff, d_model)) * scale,
+    }
+    if n_shared:
+        p["shared"] = swiglu_init(ks[4], d_model, d_ff * n_shared)
+    return p
+
+
+def moe_apply(
+    params,
+    x: jax.Array,  # (T, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    dtype=None,
+):
+    """Top-k token-choice MoE with static expert capacity (GShard dispatch).
+
+    Returns (out (T, d), aux_loss).  Tokens overflowing an expert's capacity
+    are dropped for that expert (standard capacity semantics).
+    """
+    T, d = x.shape
+    E = params["wi"].shape[0]
+    logits = dense(params["router"], x.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(int(capacity_factor * T * top_k / E), 1)
+    flat_e = expert_ids.reshape(-1)  # (T*k,)
+    flat_g = gate_vals.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    # position of each assignment within its expert queue
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot).max(
+        axis=-1, where=onehot > 0, initial=0
+    )
+    keep = pos_in_e < capacity
+    slot = flat_e * capacity + jnp.where(keep, pos_in_e, 0)
+    slot = jnp.where(keep, slot, E * capacity)  # overflow -> scratch slot
+    # dispatch: (E*capacity+1, d) buffer scatter
+    buf = jnp.zeros((E * capacity + 1, d), x.dtype).at[slot].set(x[flat_t])
+    gbuf = jnp.zeros((E * capacity + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, flat_g, 0.0)
+    )
+    tbuf = jnp.full((E * capacity + 1,), -1, jnp.int32).at[slot].set(
+        jnp.where(keep, flat_t, -1)
+    )
+    xe = buf[: E * capacity].reshape(E, capacity, d)
+    wi, wg, wo = params["wi"], params["wg"], params["wo"]
+    if dtype is not None:
+        xe, wi, wg, wo = (a.astype(dtype) for a in (xe, wi, wg, wo))
+    h = jnp.einsum("ecd,edf->ecf", xe, wi) * jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", xe, wg)
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, wo)  # (E, cap, d)
+    ye = ye.reshape(E * capacity, d) * gbuf[: E * capacity, None].astype(
+        ye.dtype
+    )
+    tok = tbuf[: E * capacity]
+    out = jnp.zeros((T + 1, d), ye.dtype).at[jnp.where(tok >= 0, tok, T)].add(ye)
+    out = out[:T]
+    if "shared" in params:
+        out = out + swiglu(params["shared"], x, dtype).astype(out.dtype)
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)  # (E,)
+    ce = jax.nn.one_hot(expert_ids[:, 0], E).mean(0)
+    aux = E * jnp.sum(me * ce)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,397 @@
+"""RecSys model family: xDeepFM, BST, BERT4Rec, Wide&Deep.
+
+The shared substrate is the sharded embedding lookup: JAX has no native
+EmbeddingBag, so we build it from ``jnp.take`` + ``jax.ops.segment_sum``
+(``embedding_bag`` below).  All categorical fields live in ONE row-major
+table of shape (n_fields * hash_size, dim) sharded over the ``model`` axis
+("table_rows" logical axis) — the lookup is a sharded gather, the memory
+hot-spot of every recsys deployment.
+
+Each model implements:
+  train_loss(params, cfg, batch)   — pointwise CTR logloss / masked-item CE
+  serve_scores(params, cfg, batch) — batched pointwise scoring (p99 / bulk)
+  retrieval_scores(params, cfg, batch) — 1 user vs n_candidates items,
+      batched-dot or target-aware MLP; never a python loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+
+# --------------------------------------------------------------------------
+# EmbeddingBag substrate
+# --------------------------------------------------------------------------
+def embedding_bag(
+    table: jax.Array,  # (rows, dim)
+    ids: jax.Array,  # (n,) int32 row ids
+    bag_ids: jax.Array,  # (n,) int32 output bag per id
+    n_bags: int,
+    weights: jax.Array | None = None,  # (n,) per-id weights
+    mode: str = "sum",
+) -> jax.Array:
+    """PyTorch-EmbeddingBag semantics via take + segment_sum."""
+    vecs = jnp.take(table, ids, axis=0)  # (n, dim)
+    if weights is not None:
+        vecs = vecs * weights[:, None]
+    out = jax.ops.segment_sum(vecs, bag_ids, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones(ids.shape, jnp.float32), bag_ids, num_segments=n_bags
+        )
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def field_lookup(table, ids, hash_size):
+    """ids (B, F) per-field local ids -> (B, F, dim) from the unified table."""
+    B, F = ids.shape
+    offsets = jnp.arange(F, dtype=jnp.int32) * hash_size
+    rows = ids + offsets[None, :]
+    emb = jnp.take(table, rows.reshape(-1), axis=0).reshape(B, F, -1)
+    return constrain(emb, "batch", None, None)
+
+
+def mlp_init(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        L.dense_bias_init(ks[i], dims[i], dims[i + 1])
+        for i in range(len(dims) - 1)
+    ]
+
+
+def mlp_apply(params, x, dtype=None, final_act=False):
+    for i, p in enumerate(params):
+        x = L.dense_bias(p, x, dtype)
+        if final_act or i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _mlp_axes(dims):
+    return [
+        {"w": ("embed_fsdp", "mlp"), "b": ("mlp",)}
+        for _ in range(len(dims) - 1)
+    ]
+
+
+# --------------------------------------------------------------------------
+# Config
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RecSysConfig:
+    name: str = "wide-deep"
+    interaction: str = "concat"  # cin | transformer-seq | bidir-seq | concat
+    n_sparse: int = 40
+    embed_dim: int = 32
+    hash_size: int = 1 << 20  # rows per categorical field
+    mlp: tuple[int, ...] = (1024, 512, 256)
+    n_dense: int = 13  # continuous features
+    # CIN (xDeepFM)
+    cin_layers: tuple[int, ...] = ()
+    # sequence models (BST / BERT4Rec)
+    seq_len: int = 0
+    n_blocks: int = 0
+    n_heads: int = 0
+    item_vocab: int = 0
+    mask_frac: float = 0.15  # BERT4Rec masking
+    dtype: jnp.dtype = jnp.float32
+
+    def num_params(self) -> int:
+        n = 0
+        if self.interaction in ("cin", "concat"):
+            n += self.n_sparse * self.hash_size * self.embed_dim
+            n += self.n_sparse * self.hash_size  # wide/linear weights
+        if self.item_vocab:
+            n += (self.item_vocab + 2) * self.embed_dim
+        d_in = self._mlp_in()
+        for a, b in zip((d_in,) + self.mlp, self.mlp + (1,)):
+            n += a * b + b
+        if self.cin_layers:
+            h_prev = self.n_sparse
+            for h in self.cin_layers:
+                n += h_prev * self.n_sparse * h
+                h_prev = h
+            n += sum(self.cin_layers)
+        if self.n_blocks:
+            d = self.embed_dim
+            n += self.n_blocks * (4 * d * d + 8 * d * d + 4 * d)
+        return n
+
+    def _mlp_in(self) -> int:
+        if self.interaction == "cin":
+            return self.n_sparse * self.embed_dim + self.n_dense
+        if self.interaction == "concat":
+            return self.n_sparse * self.embed_dim + self.n_dense
+        if self.interaction == "transformer-seq":
+            return (self.seq_len + 1) * self.embed_dim + self.n_dense
+        if self.interaction == "bidir-seq":
+            return self.embed_dim
+        raise ValueError(self.interaction)
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+def _encoder_block_init(key, d, n_heads, d_ff):
+    ks = jax.random.split(key, 4)
+    return {
+        "attn": L.attention_init(ks[0], d, n_heads, n_heads, d // n_heads),
+        "ln1": L.layernorm_init(d),
+        "ffn": {
+            "w1": L.dense_bias_init(ks[1], d, d_ff),
+            "w2": L.dense_bias_init(ks[2], d_ff, d),
+        },
+        "ln2": L.layernorm_init(d),
+    }
+
+
+def init_params(key, cfg: RecSysConfig):
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.interaction in ("cin", "concat"):
+        rows = cfg.n_sparse * cfg.hash_size
+        p["table"] = jax.random.normal(ks[0], (rows, cfg.embed_dim)) * 0.01
+        p["wide"] = jax.random.normal(ks[1], (rows, 1)) * 0.01
+    if cfg.item_vocab:
+        p["items"] = (
+            jax.random.normal(ks[0], (cfg.item_vocab + 2, cfg.embed_dim))
+            * 0.02
+        )
+        p["pos"] = (
+            jax.random.normal(ks[1], (cfg.seq_len + 1, cfg.embed_dim)) * 0.02
+        )
+    if cfg.cin_layers:
+        h_prev, cin = cfg.n_sparse, []
+        for i, h in enumerate(cfg.cin_layers):
+            cin.append(
+                {
+                    "w": jax.random.normal(
+                        jax.random.fold_in(ks[2], i), (h_prev * cfg.n_sparse, h)
+                    )
+                    * (2.0 / (h_prev * cfg.n_sparse)) ** 0.5
+                }
+            )
+            h_prev = h
+        p["cin"] = cin
+        p["cin_out"] = L.dense_bias_init(ks[3], sum(cfg.cin_layers), 1)
+    if cfg.n_blocks:
+        d_ff = 4 * cfg.embed_dim
+        p["blocks"] = [
+            _encoder_block_init(
+                jax.random.fold_in(ks[4], i), cfg.embed_dim, cfg.n_heads, d_ff
+            )
+            for i in range(cfg.n_blocks)
+        ]
+    d_in = cfg._mlp_in()
+    if cfg.interaction != "bidir-seq":
+        p["mlp"] = mlp_init(ks[5], (d_in,) + cfg.mlp + (1,))
+    return p
+
+
+def param_axes(cfg: RecSysConfig):
+    ax = {}
+    if cfg.interaction in ("cin", "concat"):
+        ax["table"] = ("table_rows", None)
+        ax["wide"] = ("table_rows", None)
+    if cfg.item_vocab:
+        ax["items"] = ("table_rows", None)
+        ax["pos"] = (None, None)
+    if cfg.cin_layers:
+        ax["cin"] = [{"w": (None, "mlp")} for _ in cfg.cin_layers]
+        ax["cin_out"] = {"w": ("mlp", None), "b": (None,)}
+    if cfg.n_blocks:
+        blk = {
+            "attn": {
+                "wq": {"w": (None, "mlp")},
+                "wk": {"w": (None, "mlp")},
+                "wv": {"w": (None, "mlp")},
+                "wo": {"w": ("mlp", None)},
+            },
+            "ln1": {"g": (None,), "b": (None,)},
+            "ffn": {
+                "w1": {"w": (None, "mlp"), "b": ("mlp",)},
+                "w2": {"w": ("mlp", None), "b": (None,)},
+            },
+            "ln2": {"g": (None,), "b": (None,)},
+        }
+        ax["blocks"] = [blk for _ in range(cfg.n_blocks)]
+    if cfg.interaction != "bidir-seq":
+        ax["mlp"] = _mlp_axes((cfg._mlp_in(),) + cfg.mlp + (1,))
+    return ax
+
+
+# --------------------------------------------------------------------------
+# Interactions
+# --------------------------------------------------------------------------
+def cin_apply(params, emb, dtype=None):
+    """Compressed Interaction Network (xDeepFM eq. 6-8).
+
+    emb: (B, m, D).  Layer k: z = outer(X_k, X_0) over fields, 1x1 conv.
+    Sum-pool each layer over D, concat, project to a logit.
+    """
+    x0 = emb  # (B, m, D)
+    xk = emb
+    pooled = []
+    for lp in params["cin"]:
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)  # (B, Hk, m, D)
+        B, Hk, m, D = z.shape
+        xk = jnp.einsum(
+            "bqd,qh->bhd", z.reshape(B, Hk * m, D), lp["w"].astype(z.dtype)
+        )  # (B, Hnext, D) — the 1x1 "conv" over field pairs
+        xk = jax.nn.relu(xk)
+        pooled.append(xk.sum(axis=-1))  # (B, Hnext)
+    feats = jnp.concatenate(pooled, axis=-1)
+    return L.dense_bias(params["cin_out"], feats)[:, 0]  # (B,)
+
+
+def encoder_block(p, x, n_heads, dtype=None):
+    """Post-LN transformer encoder block (BST / BERT4Rec style)."""
+    B, S, d = x.shape
+    dh = d // n_heads
+    q = L.dense(p["attn"]["wq"], x, dtype).reshape(B, S, -1, dh)
+    k = L.dense(p["attn"]["wk"], x, dtype).reshape(B, S, -1, dh)
+    v = L.dense(p["attn"]["wv"], x, dtype).reshape(B, S, -1, dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * dh**-0.5
+    a = jax.nn.softmax(s.astype(jnp.float32), -1).astype(q.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S, -1)
+    x = L.layernorm(p["ln1"], x + L.dense(p["attn"]["wo"], o, dtype))
+    h = jax.nn.gelu(L.dense_bias(p["ffn"]["w1"], x, dtype))
+    x = L.layernorm(p["ln2"], x + L.dense_bias(p["ffn"]["w2"], h, dtype))
+    return x
+
+
+def seq_encode(params, cfg: RecSysConfig, seq_ids, extra_emb=None):
+    """Embed + position + transformer blocks.  seq_ids (B, S)."""
+    x = jnp.take(params["items"], seq_ids, axis=0)  # (B, S, d)
+    if extra_emb is not None:
+        x = jnp.concatenate([x, extra_emb], axis=1)
+    x = x + params["pos"][None, : x.shape[1], :]
+    x = constrain(x, "batch", None, None)
+    for blk in params["blocks"]:
+        x = encoder_block(blk, x.astype(cfg.dtype), cfg.n_heads, cfg.dtype)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Pointwise scoring (train / serve_p99 / serve_bulk)
+# --------------------------------------------------------------------------
+def pointwise_logits(params, cfg: RecSysConfig, batch):
+    if cfg.interaction in ("cin", "concat"):
+        emb = field_lookup(params["table"], batch["sparse_ids"], cfg.hash_size)
+        flat = emb.reshape(emb.shape[0], -1)
+        if cfg.n_dense:
+            flat = jnp.concatenate([flat, batch["dense_feats"]], -1)
+        deep = mlp_apply(params["mlp"], flat.astype(cfg.dtype), cfg.dtype)[:, 0]
+        B, F = batch["sparse_ids"].shape
+        wide = embedding_bag(
+            params["wide"],
+            (batch["sparse_ids"] + jnp.arange(F, dtype=jnp.int32)[None, :] * cfg.hash_size).reshape(-1),
+            jnp.repeat(jnp.arange(B, dtype=jnp.int32), F),
+            B,
+        )[:, 0]
+        logit = deep + wide
+        if cfg.interaction == "cin":
+            logit = logit + cin_apply(params, emb.astype(cfg.dtype), cfg.dtype)
+        return logit
+    if cfg.interaction == "transformer-seq":  # BST
+        tgt = jnp.take(params["items"], batch["target_id"], axis=0)[:, None]
+        x = seq_encode(params, cfg, batch["seq_ids"], extra_emb=tgt)
+        flat = x.reshape(x.shape[0], -1)
+        if cfg.n_dense:
+            flat = jnp.concatenate([flat, batch["dense_feats"]], -1)
+        return mlp_apply(params["mlp"], flat.astype(cfg.dtype), cfg.dtype)[:, 0]
+    if cfg.interaction == "bidir-seq":  # BERT4Rec: score target at last pos
+        x = seq_encode(params, cfg, batch["seq_ids"])
+        state = x[:, -1]  # (B, d)
+        tgt = jnp.take(params["items"], batch["target_id"], axis=0)
+        return jnp.einsum("bd,bd->b", state, tgt.astype(state.dtype))
+    raise ValueError(cfg.interaction)
+
+
+def train_loss(params, cfg: RecSysConfig, batch, max_masked: int | None = None):
+    if cfg.interaction == "bidir-seq":
+        # BERT4Rec masked-item prediction: the full softmax over a 1M-item
+        # catalog is the memory hot-spot.  Gather the (few) masked positions
+        # FIRST — logits shrink from (B, S, V) to (B, M, V) with
+        # M = ceil(2 * mask_frac * S) (static cap; overflow positions beyond
+        # the cap are dropped, like expert-capacity semantics).
+        x = seq_encode(params, cfg, batch["seq_ids"])
+        labels = batch["labels"]  # (B, S) original ids (-1 = unmasked)
+        B, S = labels.shape
+        M = max_masked or max(int(2 * cfg.mask_frac * S), 1)
+        is_masked = labels >= 0
+        # indices of the first M masked slots per row (stable, padded)
+        order = jnp.argsort(~is_masked, axis=1, stable=True)[:, :M]  # (B, M)
+        sel_valid = jnp.take_along_axis(is_masked, order, axis=1)
+        xm = jnp.take_along_axis(x, order[..., None], axis=1)  # (B, M, d)
+        lab = jnp.take_along_axis(labels, order, axis=1)
+        logits = jnp.einsum(
+            "bmd,vd->bmv", xm.astype(jnp.float32), params["items"]
+        )
+        logits = constrain(logits, "batch", None, "table_rows")
+        lmask = sel_valid.astype(jnp.float32)
+        safe = jnp.where(lab >= 0, lab, 0)
+        logz = jax.nn.logsumexp(logits, -1)
+        tgt = jnp.take_along_axis(logits, safe[..., None], -1)[..., 0]
+        loss = ((logz - tgt) * lmask).sum() / jnp.maximum(lmask.sum(), 1.0)
+        return loss, {"loss": loss}
+    logit = pointwise_logits(params, cfg, batch)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+    return loss, {"loss": loss}
+
+
+def serve_scores(params, cfg: RecSysConfig, batch):
+    return jax.nn.sigmoid(pointwise_logits(params, cfg, batch))
+
+
+# --------------------------------------------------------------------------
+# Retrieval scoring: 1 user x n_candidates
+# --------------------------------------------------------------------------
+def retrieval_scores(params, cfg: RecSysConfig, batch, top_k: int = 100):
+    """batch: one user context + candidate_ids (n_cand,).  Returns top-k
+    (scores, ids).  Sequence models encode the user ONCE and reuse it."""
+    cand = batch["candidate_ids"]
+    if cfg.interaction == "bidir-seq":
+        x = seq_encode(params, cfg, batch["seq_ids"])  # (1, S, d)
+        state = x[0, -1]
+        emb = jnp.take(params["items"], cand, axis=0)  # (n, d)
+        emb = constrain(emb, "candidates", None)
+        scores = emb.astype(jnp.float32) @ state.astype(jnp.float32)
+    elif cfg.interaction == "transformer-seq":
+        # BST's target item ATTENDS to the history inside the block, so
+        # target-aware scoring must run the full encoder per candidate —
+        # batched over candidates (sharded), never a loop.
+        n = cand.shape[0]
+        pb = {
+            "seq_ids": jnp.broadcast_to(
+                batch["seq_ids"][0], (n, cfg.seq_len)
+            ),
+            "target_id": cand,
+        }
+        if cfg.n_dense:
+            pb["dense_feats"] = jnp.broadcast_to(
+                batch["dense_feats"][0], (n, cfg.n_dense)
+            )
+        scores = pointwise_logits(params, cfg, pb)
+    else:
+        # ctr models: vary ONE item field over candidates, user fields fixed
+        B = cand.shape[0]
+        ids = jnp.broadcast_to(
+            batch["sparse_ids"][0], (B, cfg.n_sparse)
+        )
+        ids = ids.at[:, 0].set(cand % cfg.hash_size)
+        dense = jnp.broadcast_to(batch["dense_feats"][0], (B, cfg.n_dense))
+        scores = pointwise_logits(
+            params, cfg, {"sparse_ids": ids, "dense_feats": dense}
+        )
+    scores = constrain(scores, "candidates")
+    return jax.lax.top_k(scores, top_k)

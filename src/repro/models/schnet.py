@@ -1,0 +1,207 @@
+"""SchNet (Schütt et al. 2017): continuous-filter convolutions in JAX.
+
+Message passing is built on ``jax.ops.segment_sum`` over an edge list — the
+JAX-native SpMM (no CSR kernels needed).  Edges are the hot axis and shard
+over ("data", "model"); per-shard partial aggregations meet in a psum when
+run under the production mesh (XLA inserts it from the sharding constraints).
+
+Two input regimes (see DESIGN §Arch-applicability):
+  * molecules: atomic numbers + 3-D positions -> RBF-expanded distances
+    (the faithful SchNet, ``molecule`` shape, energy regression);
+  * generic graphs (cora/products-style shapes): node features are projected
+    into the hidden space and edge distances are provided as an edge feature
+    (synthetic in our data pipeline), output is per-node classification.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import active_mesh, active_rules, constrain
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SchNetConfig:
+    name: str = "schnet"
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    max_z: int = 100  # atomic-number vocabulary (molecule regime)
+    d_feat: int = 0  # node-feature dim (graph regime; 0 = molecule regime)
+    n_classes: int = 0  # per-node classes (graph regime; 0 = energy head)
+    dtype: jnp.dtype = jnp.float32
+
+    def num_params(self) -> int:
+        d, r = self.d_hidden, self.n_rbf
+        inter = self.n_interactions * (d * d * 3 + r * d + d * d)
+        head = d * (d // 2) + (d // 2) * max(self.n_classes, 1)
+        inp = self.d_feat * d if self.d_feat else self.max_z * d
+        return inp + inter + head
+
+
+def shifted_softplus(x):
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def rbf_expand(dist: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """(E,) distances -> (E, n_rbf) Gaussian radial basis (SchNet eq. 5)."""
+    mu = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = 10.0 / cutoff
+    return jnp.exp(-gamma * (dist[:, None] - mu[None, :]) ** 2)
+
+
+def init_params(key, cfg: SchNetConfig):
+    ks = jax.random.split(key, 2 + cfg.n_interactions)
+    d = cfg.d_hidden
+    if cfg.d_feat:
+        inp = L.dense_init(ks[0], cfg.d_feat, d)
+    else:
+        inp = {"embed": jax.random.normal(ks[0], (cfg.max_z, d)) * 0.1}
+    inters = []
+    for i in range(cfg.n_interactions):
+        kk = jax.random.split(ks[1 + i], 5)
+        inters.append(
+            {
+                "w_in": L.dense_init(kk[0], d, d),
+                "filter1": L.dense_bias_init(kk[1], cfg.n_rbf, d),
+                "filter2": L.dense_bias_init(kk[2], d, d),
+                "w_out": L.dense_bias_init(kk[3], d, d),
+                "w_post": L.dense_bias_init(kk[4], d, d),
+            }
+        )
+    inters = jax.tree.map(lambda *xs: jnp.stack(xs), *inters)
+    kh = jax.random.split(ks[-1], 2)
+    head = {
+        "h1": L.dense_bias_init(kh[0], d, d // 2),
+        "h2": L.dense_bias_init(kh[1], d // 2, max(cfg.n_classes, 1)),
+    }
+    return {"input": inp, "interactions": inters, "head": head}
+
+
+def param_axes(cfg: SchNetConfig):
+    dd = {"w": (None, None), "b": (None,)}
+    inp = (
+        {"w": (None, None)}
+        if cfg.d_feat
+        else {"embed": (None, None)}
+    )
+    return {
+        "input": inp,
+        "interactions": {
+            "w_in": {"w": (None, None, None)},
+            "filter1": {"w": (None, None, None), "b": (None, None)},
+            "filter2": {"w": (None, None, None), "b": (None, None)},
+            "w_out": {"w": (None, None, None), "b": (None, None)},
+            "w_post": {"w": (None, None, None), "b": (None, None)},
+        },
+        "head": {"h1": dd, "h2": dd},
+    }
+
+
+def _edge_axes(mesh):
+    phys = active_rules().get("edges") or ()
+    axes = (phys,) if isinstance(phys, str) else tuple(phys)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def _cfconv_aggregate(p, xw, edge_src, edge_dst, rbf, n_nodes, edge_mask):
+    """filter-MLP + gather + multiply + segment_sum over one edge shard."""
+    w = L.dense_bias(
+        p["filter2"], shifted_softplus(L.dense_bias(p["filter1"], rbf))
+    )
+    w = shifted_softplus(w)  # (E, d) continuous filter
+    msg = xw[edge_src] * w * edge_mask[:, None]
+    return jax.ops.segment_sum(msg, edge_dst, num_segments=n_nodes)
+
+
+def interaction(p, x, edge_src, edge_dst, rbf, n_nodes, edge_mask):
+    """One continuous-filter convolution block (cfconv + atom-wise).
+
+    Under a multi-chip mesh the edge-space work (filter MLP, gather,
+    message multiply, local segment_sum) runs inside ``shard_map`` over the
+    edge axes with a single psum of the (N, d) partial aggregates — XLA's
+    SPMD partitioner otherwise replicates edge tensors around the scatter
+    (products-scale full-graph cells blew up 400GB/device without this).
+    """
+    xw = L.dense(p["w_in"], x)  # (N, d) node-space, replicated
+    mesh = active_mesh()
+    eaxes = _edge_axes(mesh) if mesh is not None else ()
+    n_edge_shards = 1
+    for a in eaxes:
+        n_edge_shards *= mesh.shape[a]
+    if n_edge_shards > 1:
+        espec = P(eaxes if len(eaxes) > 1 else eaxes[0])
+        rep = P()
+        filt = {"filter1": p["filter1"], "filter2": p["filter2"]}
+
+        def local(filt_l, xw_l, src_l, dst_l, rbf_l, mask_l):
+            agg = _cfconv_aggregate(
+                filt_l, xw_l, src_l, dst_l, rbf_l, n_nodes, mask_l
+            )
+            return jax.lax.psum(agg, eaxes)
+
+        agg = jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(rep, rep, espec, espec, espec, espec),
+            out_specs=rep,
+            check_vma=False,
+        )(filt, xw, edge_src, edge_dst, rbf, edge_mask)
+    else:
+        agg = _cfconv_aggregate(
+            {"filter1": p["filter1"], "filter2": p["filter2"]},
+            xw, edge_src, edge_dst, rbf, n_nodes, edge_mask,
+        )
+    v = L.dense_bias(p["w_out"], agg)
+    v = shifted_softplus(v)
+    v = L.dense_bias(p["w_post"], v)
+    return x + v
+
+
+def forward(params, cfg: SchNetConfig, batch):
+    """batch: either molecule regime {z (N,), pos (N,3), edge_src/dst (E,),
+    graph_id (N,), edge_mask (E,), node_mask (N,)} or graph regime
+    {feat (N, d_feat), edge_src/dst (E,), edge_dist (E,), ...}."""
+    src = batch["edge_src"]
+    dst = batch["edge_dst"]
+    edge_mask = batch.get("edge_mask", jnp.ones(src.shape[0], jnp.float32))
+    if cfg.d_feat:
+        x = L.dense(params["input"], batch["feat"].astype(cfg.dtype))
+        dist = batch["edge_dist"]
+    else:
+        x = params["input"]["embed"][batch["z"]]
+        diff = batch["pos"][src] - batch["pos"][dst]
+        dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-12)
+    n_nodes = x.shape[0]
+    rbf = rbf_expand(dist, cfg.n_rbf, cfg.cutoff).astype(cfg.dtype)
+    rbf = constrain(rbf, "edges", None)
+
+    def body(x, p):
+        return interaction(p, x, src, dst, rbf, n_nodes, edge_mask), None
+
+    x, _ = jax.lax.scan(body, x, params["interactions"])
+    h = shifted_softplus(L.dense_bias(params["head"]["h1"], x))
+    out = L.dense_bias(params["head"]["h2"], h)  # (N, n_classes or 1)
+    return out
+
+
+def train_loss(params, cfg: SchNetConfig, batch):
+    out = forward(params, cfg, batch)
+    if cfg.n_classes:  # node classification (graph regime)
+        labels = batch["labels"]
+        lmask = batch.get("label_mask", jnp.ones(labels.shape, jnp.float32))
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        loss = (nll * lmask).sum() / jnp.maximum(lmask.sum(), 1.0)
+    else:  # molecular energy regression: sum atom energies per graph
+        node_mask = batch.get("node_mask", jnp.ones(out.shape[0]))
+        atom_e = out[:, 0] * node_mask
+        n_graphs = batch["energy"].shape[0]
+        energy = jax.ops.segment_sum(atom_e, batch["graph_id"], n_graphs)
+        loss = jnp.mean((energy - batch["energy"]) ** 2)
+    return loss, {"loss": loss}

@@ -1,0 +1,619 @@
+"""Decoder-only LM family: dense / GQA / MQA / sliding-window / MoE.
+
+One implementation covers the five assigned LM architectures (h2o-danube-3,
+yi-34b, granite-34b, granite-moe-1b, deepseek-moe-16b) plus the ColBERT
+encoder backbone.  Design choices for the 512-chip production mesh:
+
+* **scan-over-layers**: per-layer params are stacked on a leading ``L`` axis
+  and the forward is a ``jax.lax.scan`` — HLO size is O(1) in depth (granite
+  is 88 layers), and remat is applied per scan body.
+* **TP head padding (kv-group-major)**: query heads are laid out grouped by
+  their KV head and padded per group so the flat head count divides the
+  ``model`` mesh axis (yi-34b: 56 -> 64 heads, see DESIGN §hardware).  Padded
+  heads have zero wq rows / zero wo columns: mathematically inert.
+* **post-shard KV repeat**: attention runs in flat-head layout; K/V are
+  repeated group-wise *after* sharding, so the repeat is local and free.
+  The KV cache stores true ``n_kv_heads``; if those divide the model axis
+  they are head-sharded, otherwise the cache shards its sequence axis
+  (sequence-parallel decode attention — the softmax reductions become small
+  all-reduces).
+* **MoE = GShard einsum dispatch** with group-blocked capacity: tokens are
+  split into groups of ``moe_group`` so the (g, E, C) dispatch tensor stays
+  ~ T * moe_group * k * cf bytes.  Experts shard over ``model`` (EP); since
+  activations are replicated across ``model``, dispatch needs no all-to-all
+  and the combine reduces over experts like a TP all-reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import active_mesh, constrain
+from repro.models import layers as L
+
+
+def _pref(cfg) -> jnp.dtype | None:
+    """Einsum accumulation dtype (§Perf C1): compute dtype so TP psums move
+    bf16 on the wire; REPRO_F32_ACCUM=1 restores jnp's f32 default for
+    baseline A/B measurements."""
+    return None if os.environ.get("REPRO_F32_ACCUM") else cfg.dtype
+
+
+def _sp() -> bool:
+    """Sequence-parallel norm/residual segments (§Perf OPT-B) — REFUTED on
+    this mesh: XLA SPMD answers the resharding constraints with involuntary
+    full remat + 2.6TB of all-gathers instead of the RS/AG pattern (compute
+    x1.9, collectives x3).  Kept opt-in (REPRO_SP=1) as the recorded negative
+    result; proper SP needs manual shard_map collectives."""
+    return bool(os.environ.get("REPRO_SP"))
+
+
+# --------------------------------------------------------------------------
+# Config
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 128
+    vocab: int = 256
+    # MoE (n_experts == 0 -> dense SwiGLU)
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    first_dense: int = 0  # leading layers that stay dense (DeepSeekMoE)
+    d_ff_dense: int = 0  # ffn width of those dense layers (0 -> d_ff)
+    capacity_factor: float = 1.25
+    moe_group: int = 256  # dispatch group size (tokens)
+    # attention
+    window: int | None = None  # sliding-window size (None = full causal)
+    rope_theta: float = 10000.0
+    causal: bool = True
+    # padding multiples for TP alignment (1 = no padding; prod configs use 16)
+    tp_multiple: int = 1
+    # compute dtype (params stay f32)
+    dtype: jnp.dtype = jnp.bfloat16
+    # attention backend: "chunked" (pure JAX online-softmax, runs anywhere)
+    # or "flash" (Pallas kernel — Mosaic on TPU, interpret on CPU; §Perf
+    # cell 2: removes the score-tile HBM traffic that dominates long-prefill)
+    attn_impl: str = "chunked"
+    q_chunk: int = 1024
+    k_chunk: int = 1024
+    remat: bool = True
+    tied_embeddings: bool = False
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def group_pad(self) -> int:
+        """Padded queries-per-KV-group so n_kv_heads*Gp % tp_multiple == 0."""
+        g = self.n_heads // self.n_kv_heads
+        gp = g
+        while (self.n_kv_heads * gp) % self.tp_multiple:
+            gp += 1
+        return gp
+
+    @property
+    def padded_heads(self) -> int:
+        return self.n_kv_heads * self.group_pad
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.tp_multiple
+        return (self.vocab + m - 1) // m * m
+
+    def num_params(self) -> int:
+        """Exact (unpadded) parameter count — used for MODEL_FLOPS."""
+        d, dh = self.d_model, self.d_head
+        attn = d * self.n_heads * dh * 2 + d * self.n_kv_heads * dh * 2
+        if self.n_experts:
+            ffn_moe = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+            if self.n_shared:
+                ffn_moe += 3 * d * self.d_ff * self.n_shared
+            ffn_dense = 3 * d * (self.d_ff_dense or self.d_ff)
+            ffn = (
+                ffn_moe * (self.n_layers - self.first_dense)
+                + ffn_dense * self.first_dense
+            )
+        else:
+            ffn = 3 * d * self.d_ff * self.n_layers
+        norms = self.n_layers * 2 * d + d
+        emb = self.vocab * d * (1 if self.tied_embeddings else 2)
+        return attn * self.n_layers + ffn + norms + emb
+
+    def active_params(self) -> int:
+        """Activated params per token (MoE counts top_k + shared experts)."""
+        if not self.n_experts:
+            return self.num_params()
+        d = self.d_model
+        dh = self.d_head
+        attn = d * self.n_heads * dh * 2 + d * self.n_kv_heads * dh * 2
+        ffn_act = 3 * d * self.d_ff * (self.top_k + self.n_shared)
+        ffn_dense = 3 * d * (self.d_ff_dense or self.d_ff)
+        ffn = (
+            ffn_act * (self.n_layers - self.first_dense)
+            + ffn_dense * self.first_dense
+        )
+        emb = self.vocab * d * (1 if self.tied_embeddings else 2)
+        return attn * self.n_layers + ffn + self.n_layers * 2 * d + d + emb
+
+
+# --------------------------------------------------------------------------
+# Init (params stacked over layers for lax.scan)
+# --------------------------------------------------------------------------
+def _layer_init(key, cfg: TransformerConfig, moe: bool):
+    ks = jax.random.split(key, 8)
+    d, dh, hp, hkv = cfg.d_model, cfg.d_head, cfg.padded_heads, cfg.n_kv_heads
+    g, gp = cfg.n_heads // hkv, cfg.group_pad
+    scale = (2.0 / (d + cfg.n_heads * dh)) ** 0.5
+    # kv-group-major layout: head (kvh, j) lives at flat index kvh*gp + j;
+    # padded slots (j >= g) stay zero -> inert.
+    wq = jnp.zeros((d, hkv, gp, dh), jnp.float32)
+    wq = wq.at[:, :, :g, :].set(
+        jax.random.normal(ks[0], (d, hkv, g, dh)) * scale
+    )
+    wo = jnp.zeros((hkv, gp, dh, d), jnp.float32)
+    wo = wo.at[:, :g, :, :].set(
+        jax.random.normal(ks[1], (hkv, g, dh, d)) * scale
+    )
+    p = {
+        "attn": {
+            "wq": wq.reshape(d, hp, dh),
+            "wk": jax.random.normal(ks[2], (d, hkv, dh)) * scale,
+            "wv": jax.random.normal(ks[3], (d, hkv, dh)) * scale,
+            "wo": wo.reshape(hp, dh, d),
+        },
+        "ln1": L.rmsnorm_init(d),
+        "ln2": L.rmsnorm_init(d),
+    }
+    if moe:
+        e, dff = cfg.n_experts, cfg.d_ff
+        fscale = (2.0 / (d + dff)) ** 0.5
+        p["moe"] = {
+            "router": jax.random.normal(ks[4], (d, e)) * 0.02,
+            "wi": jax.random.normal(ks[5], (e, d, dff)) * fscale,
+            "wg": jax.random.normal(ks[6], (e, d, dff)) * fscale,
+            "wo": jax.random.normal(ks[7], (e, dff, d)) * fscale,
+        }
+        if cfg.n_shared:
+            p["moe"]["shared"] = L.swiglu_init(
+                jax.random.fold_in(key, 99), d, dff * cfg.n_shared
+            )
+    else:
+        dff = (cfg.d_ff_dense or cfg.d_ff) if cfg.n_experts else cfg.d_ff
+        p["ffn"] = L.swiglu_init(ks[4], d, dff)
+    return p
+
+
+def init_params(key, cfg: TransformerConfig):
+    k_emb, k_head, k_layers, k_dense = jax.random.split(key, 4)
+    d, vp = cfg.d_model, cfg.padded_vocab
+    emb = jnp.zeros((vp, d), jnp.float32)
+    emb = emb.at[: cfg.vocab].set(
+        jax.random.normal(k_emb, (cfg.vocab, d)) * 0.02
+    )
+    params = {"embed": emb, "final_norm": L.rmsnorm_init(d)}
+    if not cfg.tied_embeddings:
+        head = jnp.zeros((d, vp), jnp.float32)
+        head = head.at[:, : cfg.vocab].set(
+            jax.random.normal(k_head, (d, cfg.vocab)) * 0.02
+        )
+        params["lm_head"] = head
+    n_moe = cfg.n_layers - cfg.first_dense if cfg.n_experts else 0
+    n_plain = cfg.n_layers - n_moe
+    if n_plain:
+        keys = jax.random.split(k_dense, n_plain)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, moe=False)
+        )(keys)
+    if n_moe:
+        keys = jax.random.split(k_layers, n_moe)
+        params["moe_layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, moe=True)
+        )(keys)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Param logical axes (for sharding; mirrors init_params structure)
+# --------------------------------------------------------------------------
+def _layer_axes(cfg: TransformerConfig, moe: bool):
+    ax = {
+        "attn": {
+            "wq": ("layers", "embed_fsdp", "heads", "head_dim"),
+            "wk": ("layers", "embed_fsdp", "kv_heads", "head_dim"),
+            "wv": ("layers", "embed_fsdp", "kv_heads", "head_dim"),
+            "wo": ("layers", "heads", "head_dim", "embed_fsdp"),
+        },
+        "ln1": {"g": ("layers", None)},
+        "ln2": {"g": ("layers", None)},
+    }
+    if moe:
+        ax["moe"] = {
+            "router": ("layers", "embed_fsdp", None),
+            "wi": ("layers", "experts", "embed_fsdp", None),
+            "wg": ("layers", "experts", "embed_fsdp", None),
+            "wo": ("layers", "experts", None, "embed_fsdp"),
+        }
+        if cfg.n_shared:
+            ax["moe"]["shared"] = {
+                "wi": {"w": ("layers", "embed_fsdp", "mlp")},
+                "wg": {"w": ("layers", "embed_fsdp", "mlp")},
+                "wo": {"w": ("layers", "mlp", "embed_fsdp")},
+            }
+    else:
+        ax["ffn"] = {
+            "wi": {"w": ("layers", "embed_fsdp", "mlp")},
+            "wg": {"w": ("layers", "embed_fsdp", "mlp")},
+            "wo": {"w": ("layers", "mlp", "embed_fsdp")},
+        }
+    return ax
+
+
+def param_axes(cfg: TransformerConfig):
+    axes = {
+        "embed": ("vocab", "embed_fsdp"),
+        "final_norm": {"g": (None,)},
+    }
+    if not cfg.tied_embeddings:
+        axes["lm_head"] = ("embed_fsdp", "vocab")
+    n_moe = cfg.n_layers - cfg.first_dense if cfg.n_experts else 0
+    if cfg.n_layers - n_moe:
+        axes["dense_layers"] = _layer_axes(cfg, moe=False)
+    if n_moe:
+        axes["moe_layers"] = _layer_axes(cfg, moe=True)
+    return axes
+
+
+# --------------------------------------------------------------------------
+# MoE: GShard einsum dispatch with group-blocked capacity
+# --------------------------------------------------------------------------
+def moe_einsum(params, x: jax.Array, cfg: TransformerConfig):
+    """x: (B, S, d) -> (out, aux_loss).  Groups of ``moe_group`` tokens."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    g = min(cfg.moe_group, S)
+    ng = (S + g - 1) // g
+    pad = ng * g - S
+    xg = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    xg = xg.reshape(B * ng, g, d)  # (G, g, d)
+    cap = max(int(math.ceil(g * k * cfg.capacity_factor / E)), 1)
+
+    logits = jnp.einsum(
+        "Ngd,de->Nge", xg.astype(jnp.float32), params["router"]
+    )
+    probs = jax.nn.softmax(logits, -1)  # (G, g, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # GShard positions: choices processed in priority order; running counts.
+    combine = jnp.zeros((B * ng, g, E, cap), jnp.float32)
+    counts = jnp.zeros((B * ng, E), jnp.int32)
+    for j in range(k):
+        oh = jax.nn.one_hot(expert_ids[:, :, j], E, dtype=jnp.int32)  # (G,g,E)
+        pos = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]  # (G,g,E)
+        pos_t = (pos * oh).sum(-1)  # (G, g) slot of this token's j-th choice
+        keep = pos_t < cap
+        slot_oh = jax.nn.one_hot(pos_t, cap, dtype=jnp.float32)  # (G,g,cap)
+        wj = gate_vals[:, :, j] * keep  # (G, g)
+        combine = combine + (
+            wj[..., None, None]
+            * oh.astype(jnp.float32)[..., None]
+            * slot_oh[:, :, None, :]
+        )
+        counts = counts + oh.sum(axis=1)
+
+    dt = cfg.dtype
+    dispatch = (combine > 0.0).astype(dt)  # (G, g, E, cap)
+    xe = jnp.einsum(
+        "Ngec,Ngd->Necd", dispatch, xg.astype(dt), preferred_element_type=_pref(cfg)
+    )
+    xe = constrain(xe, "batch", "experts", None, None)
+    wi, wg, wo = (params[n].astype(dt) for n in ("wi", "wg", "wo"))
+    h = jnp.einsum(
+        "Necd,edf->Necf", xe, wi, preferred_element_type=_pref(cfg)
+    ) * jax.nn.silu(jnp.einsum("Necd,edf->Necf", xe, wg, preferred_element_type=_pref(cfg)))
+    ye = jnp.einsum("Necf,efd->Necd", h, wo, preferred_element_type=_pref(cfg))
+    ye = constrain(ye, "batch", "experts", None, None)
+    out = jnp.einsum(
+        "Ngec,Necd->Ngd", combine.astype(dt), ye, preferred_element_type=_pref(cfg)
+    )  # (G, g, d) — the EP psum over experts travels in bf16
+    out = out.reshape(B, ng * g, d)[:, :S]
+    if "shared" in params:
+        out = out + L.swiglu(params["shared"], x, cfg.dtype).astype(out.dtype)
+    # Switch-style load-balance loss over all groups.
+    me = probs.mean(axis=(0, 1))  # (E,)
+    ce = jax.nn.one_hot(expert_ids[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return out.astype(x.dtype), aux
+
+
+# --------------------------------------------------------------------------
+# Layer bodies
+# --------------------------------------------------------------------------
+def _project_qkv(p, h, cfg: TransformerConfig, positions):
+    # preferred_element_type = compute dtype: partial sums that cross model
+    # shards (TP psums) travel in bf16 instead of jnp's default f32
+    # accumulator — halves activation collective bytes (§Perf C1).
+    dt = cfg.dtype
+    B, S, _ = h.shape
+    q = jnp.einsum(
+        "bsd,dhk->bshk", h.astype(dt), p["wq"].astype(dt),
+        preferred_element_type=_pref(cfg),
+    )
+    kk = jnp.einsum(
+        "bsd,dhk->bshk", h.astype(dt), p["wk"].astype(dt),
+        preferred_element_type=_pref(cfg),
+    )
+    v = jnp.einsum(
+        "bsd,dhk->bshk", h.astype(dt), p["wv"].astype(dt),
+        preferred_element_type=_pref(cfg),
+    )
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    kk = L.apply_rope(kk, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    return q, kk, v
+
+
+def _repeat_kv(x: jax.Array, gp: int) -> jax.Array:
+    """(B,S,Hkv,dh) -> (B,S,Hkv*gp,dh), group-major (matches wq layout)."""
+    if gp == 1:
+        return x
+    return jnp.repeat(x, gp, axis=2)
+
+
+def attention_block(p, h, cfg: TransformerConfig, positions):
+    q, kk, v = _project_qkv(p, h, cfg, positions)
+    if cfg.attn_impl == "flash" and cfg.window is None:
+        # Pallas flash kernel: grouped (no KV repeat), score tiles in VMEM.
+        from repro.kernels.flash_attention import flash_attention
+
+        S = q.shape[1]
+        blk = math.gcd(S, min(cfg.q_chunk, S))  # block size must divide S
+        o = flash_attention(
+            q, kk, v, causal=cfg.causal,
+            q_blk=blk,
+            kv_blk=blk,
+            interpret=jax.default_backend() != "tpu",
+        )
+        o = constrain(o, "batch", "seq", "heads", "head_dim")
+        out = jnp.einsum(
+            "bshk,hkd->bsd", o.astype(cfg.dtype), p["wo"].astype(cfg.dtype),
+            preferred_element_type=_pref(cfg),
+        )
+        return constrain(out, "batch", "seq", "embed")
+    gp = cfg.group_pad
+    kr = constrain(_repeat_kv(kk, gp), "batch", "seq", "heads", "head_dim")
+    vr = constrain(_repeat_kv(v, gp), "batch", "seq", "heads", "head_dim")
+    o = L.chunked_attention(
+        q,
+        kr,
+        vr,
+        causal=cfg.causal,
+        window=cfg.window,
+        q_chunk=cfg.q_chunk,
+        k_chunk=cfg.k_chunk,
+    )
+    o = constrain(o, "batch", "seq", "heads", "head_dim")
+    out = jnp.einsum(
+        "bshk,hkd->bsd", o.astype(cfg.dtype), p["wo"].astype(cfg.dtype),
+        preferred_element_type=_pref(cfg),
+    )
+    return constrain(out, "batch", "seq", "embed")
+
+
+def layer_apply(p, h, cfg: TransformerConfig, positions, moe: bool):
+    # OPT-B: the residual stream lives sequence-sharded over the model axis;
+    # norms/adds run on 1/TP of the tokens (TP ranks otherwise duplicate all
+    # elementwise work).  Blocks all-gather the sequence on entry (their TP
+    # einsums need full rows); their output psum becomes a reduce-scatter.
+    res_ax = ("batch", "act_seq", "embed") if _sp() else ("batch", "seq", "embed")
+    h = constrain(h, *res_ax)
+    x1 = constrain(L.rmsnorm(p["ln1"], h), "batch", "seq", "embed")
+    attn_out = attention_block(p["attn"], x1, cfg, positions)
+    attn_out = constrain(attn_out, *res_ax)
+    h = h + attn_out.astype(h.dtype)
+    h = constrain(h, *res_ax)
+    x2 = constrain(L.rmsnorm(p["ln2"], h), "batch", "seq", "embed")
+    if moe:
+        ffn_out, aux = moe_einsum(p["moe"], x2, cfg)
+    else:
+        ffn_out = L.swiglu(p["ffn"], x2, cfg.dtype)
+        aux = jnp.zeros((), jnp.float32)
+    h = h + constrain(ffn_out, *res_ax).astype(h.dtype)
+    return constrain(h, *res_ax), aux
+
+
+# --------------------------------------------------------------------------
+# Forward (scan over stacked layers, remat per body)
+# --------------------------------------------------------------------------
+def forward(params, cfg: TransformerConfig, tokens: jax.Array, positions=None):
+    """tokens (B, S) -> hidden states (B, S, d), aux loss."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    h = params["embed"].astype(cfg.dtype)[tokens]
+    h = constrain(h, "batch", "seq", "embed")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def scan_stack(h, aux_total, stacked, moe: bool):
+        def body(carry, lp):
+            hh, aux = carry
+            fn = functools.partial(layer_apply, cfg=cfg, moe=moe)
+            if cfg.remat:
+                fn = jax.checkpoint(
+                    fn, static_argnums=(), prevent_cse=False
+                )
+            hh, a = fn(lp, hh, positions=positions)
+            return (hh, aux + a), None
+
+        (h, aux_total), _ = jax.lax.scan(body, (h, aux_total), stacked)
+        return h, aux_total
+
+    if "dense_layers" in params:
+        h, aux_total = scan_stack(h, aux_total, params["dense_layers"], False)
+    if "moe_layers" in params:
+        h, aux_total = scan_stack(h, aux_total, params["moe_layers"], True)
+    h = L.rmsnorm(params["final_norm"], h)
+    return h, aux_total
+
+
+def logits_fn(params, cfg: TransformerConfig, h: jax.Array) -> jax.Array:
+    head = (
+        params["embed"].T if cfg.tied_embeddings else params["lm_head"]
+    ).astype(cfg.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(cfg.dtype), head)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    if cfg.padded_vocab != cfg.vocab:  # mask padded vocab slots
+        logits = jnp.where(
+            jnp.arange(cfg.padded_vocab) < cfg.vocab, logits, -1e9
+        )
+    return logits
+
+
+def lm_loss(params, cfg: TransformerConfig, tokens, targets, mask=None):
+    h, aux = forward(params, cfg, tokens)
+    logits = logits_fn(params, cfg, h).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - tgt
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + 0.01 * aux, {"nll": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + single-token decode with KV cache
+# --------------------------------------------------------------------------
+def cache_seq_len(cfg: TransformerConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.window) if cfg.window else seq_len
+
+
+def _cache_axes(cfg: TransformerConfig):
+    """Choose KV-cache sharding: head-sharded if kv_heads divide the model
+    axis, else sequence-parallel (see module docstring)."""
+    mesh = active_mesh()
+    if mesh is not None and cfg.n_kv_heads % mesh.shape.get("model", 1) == 0:
+        return ("batch", None, "kv_heads", "head_dim")
+    return ("batch", "cache_seq", None, "head_dim")
+
+
+def _cache_seq_sharded(cfg: TransformerConfig) -> bool:
+    mesh = active_mesh()
+    return (
+        mesh is not None
+        and mesh.shape.get("model", 1) > 1
+        and cfg.n_kv_heads % mesh.shape.get("model", 1) != 0
+    )
+
+
+def _cache_update(cache, new_kv, slot, seq_sharded: bool):
+    """Write (B,1,Hkv,dh) into (B,S,Hkv,dh) at seq index ``slot``.
+
+    When the cache's seq axis is sharded, ``dynamic_update_slice`` with a
+    dynamic start would force XLA to replicate the cache (a full reshard per
+    layer per step).  The masked-iota select is elementwise -> sharding is
+    preserved; cost is one read+write of the local cache shard, overlapping
+    the attention read of the same data.
+    """
+    new_kv = new_kv.astype(cache.dtype)
+    if not seq_sharded:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new_kv, slot, 1)
+    S = cache.shape[1]
+    hit = (jnp.arange(S, dtype=jnp.int32) == slot)[None, :, None, None]
+    return jnp.where(hit, new_kv, cache)
+
+
+def init_cache(cfg: TransformerConfig, batch: int, seq_len: int):
+    S = cache_seq_len(cfg, seq_len)
+    shape = (cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+    }
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens, cache_len):
+    """One decode step.  tokens (B,) i32; cache_len scalar i32 (tokens already
+    in cache).  Returns (logits (B, vocab_p), new_cache)."""
+    B = tokens.shape[0]
+    Sc = cache["k"].shape[2]
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    h = params["embed"].astype(cfg.dtype)[tokens][:, None, :]  # (B,1,d)
+    h = constrain(h, "batch", "seq", "embed")
+    cax = _cache_axes(cfg)
+    seq_sharded = _cache_seq_sharded(cfg)
+    # ring-buffer slot for sliding-window models; plain index otherwise
+    slot = cache_len % Sc if cfg.window else cache_len
+
+    stacks = []
+    if "dense_layers" in params:
+        nl = jax.tree.leaves(params["dense_layers"])[0].shape[0]
+        stacks.append(("dense_layers", False, 0, nl))
+    if "moe_layers" in params:
+        nl = jax.tree.leaves(params["moe_layers"])[0].shape[0]
+        off = stacks[-1][3] if stacks else 0
+        stacks.append(("moe_layers", True, off, nl))
+
+    new_k, new_v = [], []
+    for name, moe, off, nl in stacks:
+        def body(carry, xs, moe=moe):
+            hh = carry
+            lp, ck, cv = xs
+            hh = constrain(hh, "batch", "seq", "embed")
+            x = L.rmsnorm(lp["ln1"], hh)
+            q, kk, v = _project_qkv(lp["attn"], x, cfg, pos)
+            ck = _cache_update(ck, kk, slot, seq_sharded)
+            cv = _cache_update(cv, v, slot, seq_sharded)
+            ck = constrain(ck, *cax)
+            cv = constrain(cv, *cax)
+            n_valid = jnp.minimum(cache_len + 1, Sc)
+            # grouped-einsum attention: no KV repeat materialization — the
+            # cache is read exactly once (group-major head padding makes
+            # _group_q's (Hkv, Gp) view line up with the wq layout).
+            o = L.decode_attention(q, ck, cv, n_valid)
+            attn = jnp.einsum(
+                "bshk,hkd->bsd",
+                o.astype(cfg.dtype),
+                lp["attn"]["wo"].astype(cfg.dtype),
+            )
+            hh = hh + attn.astype(hh.dtype)
+            x2 = L.rmsnorm(lp["ln2"], hh)
+            if moe:
+                f, _ = moe_einsum(lp["moe"], x2, cfg)
+            else:
+                f = L.swiglu(lp["ffn"], x2, cfg.dtype)
+            hh = hh + f.astype(hh.dtype)
+            return hh, (ck, cv)
+
+        ck = jax.lax.dynamic_slice_in_dim(cache["k"], off, nl, 0)
+        cv = jax.lax.dynamic_slice_in_dim(cache["v"], off, nl, 0)
+        h, (ck2, cv2) = jax.lax.scan(body, h, (params[name], ck, cv))
+        new_k.append(ck2)
+        new_v.append(cv2)
+
+    h = L.rmsnorm(params["final_norm"], h)
+    logits = logits_fn(params, cfg, h)[:, 0]
+    new_cache = {
+        "k": jnp.concatenate(new_k, 0) if len(new_k) > 1 else new_k[0],
+        "v": jnp.concatenate(new_v, 0) if len(new_v) > 1 else new_v[0],
+    }
+    return logits, new_cache
+
+
+def prefill(params, cfg: TransformerConfig, tokens):
+    """Prefill forward: returns last-position logits (cache write elided —
+    the dry-run cost of cache construction is the proj einsums, included)."""
+    h, _ = forward(params, cfg, tokens)
+    return logits_fn(params, cfg, h[:, -1:])[:, 0]

@@ -1,0 +1,104 @@
+"""Micro-batching retrieval front-end.
+
+Production serving shape: requests arrive one at a time; the server coalesces
+them into fixed-size batches (padding the tail) so the jitted search runs at
+its compiled batch size, and tracks per-request latency percentiles.  A
+thread-safe queue + single dispatcher thread — the JAX compute itself is
+single-stream per device, which is exactly what a TPU serving binary does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class RetrievalResult:
+    pids: np.ndarray  # (k,)
+    scores: np.ndarray  # (k,)
+    latency_ms: float
+
+
+class BatchingServer:
+    """Coalesces single-query requests into fixed-size search batches."""
+
+    def __init__(
+        self,
+        searcher,  # exposes search_batch(qs (B, nq, dim)) -> (scores, pids)
+        batch_size: int = 16,
+        max_wait_ms: float = 2.0,
+    ):
+        self.searcher = searcher
+        self.batch_size = batch_size
+        self.max_wait = max_wait_ms / 1e3
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._latencies: list[float] = []
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    # ---- client API ------------------------------------------------------
+    def submit(self, q_emb: np.ndarray) -> "queue.Queue[RetrievalResult]":
+        """Non-blocking: returns a single-slot queue with the result."""
+        out: queue.Queue = queue.Queue(maxsize=1)
+        self._q.put((q_emb, time.perf_counter(), out))
+        return out
+
+    def search(self, q_emb: np.ndarray, timeout: float = 30.0) -> RetrievalResult:
+        return self.submit(q_emb).get(timeout=timeout)
+
+    def stats(self) -> dict:
+        lat = np.asarray(self._latencies) * 1e3
+        if not len(lat):
+            return {}
+        return {
+            "n": len(lat),
+            "mean_ms": float(lat.mean()),
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+        }
+
+    def shutdown(self):
+        self._stop.set()
+        self._thread.join(timeout=5)
+
+    # ---- dispatcher ------------------------------------------------------
+    def _loop(self):
+        while not self._stop.is_set():
+            batch = []
+            try:
+                batch.append(self._q.get(timeout=0.05))
+            except queue.Empty:
+                continue
+            deadline = time.perf_counter() + self.max_wait
+            while len(batch) < self.batch_size:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    batch.append(self._q.get(timeout=remaining))
+                except queue.Empty:
+                    break
+            self._dispatch(batch)
+
+    def _dispatch(self, batch):
+        n = len(batch)
+        qs = np.stack([b[0] for b in batch])
+        if n < self.batch_size:  # pad the tail to the compiled batch size
+            pad = np.repeat(qs[-1:], self.batch_size - n, axis=0)
+            qs = np.concatenate([qs, pad])
+        scores, pids = self.searcher.search_batch(jnp.asarray(qs))
+        jax.block_until_ready(pids)
+        now = time.perf_counter()
+        scores = np.asarray(scores)
+        pids = np.asarray(pids)
+        for i, (_, t0, out) in enumerate(batch):
+            lat = now - t0
+            self._latencies.append(lat)
+            out.put(RetrievalResult(pids[i], scores[i], lat * 1e3))

