@@ -1,0 +1,17 @@
+# One verify surface for this repo (see README "CI / verifying changes").
+# Targets assume they run from the repo root.
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test test-fast smoke ci
+
+test:  ## tier-1: the full test suite
+	$(PY) -m pytest -x -q
+
+test-fast:  ## skip @pytest.mark.slow (arch smoke cells, multi-device subprocesses)
+	$(PY) -m pytest -q -m "not slow"
+
+smoke:  ## benchmark pipeline smoke run at dry scale (numbers not meaningful)
+	$(PY) -m benchmarks.run --dry --only table3
+
+ci: test smoke

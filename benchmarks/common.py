@@ -24,6 +24,11 @@ def queries(docs, n: int, q_len: int = 16, seed: int = 1):
     return jnp.asarray(qs), gold
 
 
+def scaled(n: int, dry: bool, floor: int = 1) -> int:
+    """Dry-run scaling: ~1/16 of the configured size, at least ``floor``."""
+    return max(floor, n // 16) if dry else n
+
+
 def time_batched(fn, qs, batch: int = 16, trials: int = 3):
     """Paper protocol: average per-query latency, min over trials."""
     fn(qs[:batch])  # warmup/compile

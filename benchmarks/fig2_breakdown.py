@@ -12,6 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import retrieval
 from repro.core import plaid, scoring
 from repro.core import residual_codec as rc
 
@@ -29,11 +30,13 @@ def _timeit(fn, *args, reps=20):
     return (time.perf_counter() - t0) / reps * 1e3
 
 
-def run(emit):
-    docs, index = common.corpus_and_index(N_DOCS)
+def run(emit, dry: bool = False):
+    docs, index = common.corpus_and_index(common.scaled(N_DOCS, dry, 500))
     qs, _ = common.queries(docs, 8)
     q, q_mask = qs[0], jnp.ones(qs.shape[1])
-    p = plaid.params_for_k(100)
+    # the facade's params are the single source of stage settings; this bench
+    # times the pipeline's internals, so it unpacks them below
+    p = retrieval.params_for_k(100)
     cap = min(p.candidate_cap, index.num_passages)
 
     # ---- PLAID stages

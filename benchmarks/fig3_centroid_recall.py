@@ -1,41 +1,43 @@
 """Fig. 3 analog: recall of vanilla's top-k within centroid-ONLY retrieval
 at depth k' ∈ {k, 2k, 5k, 10k} — validates the paper's core hypothesis that
-centroids alone identify the strong candidates (§3.3)."""
+centroids alone identify the strong candidates (§3.3).  Engines come from
+the ``repro.retrieval`` registry."""
 from __future__ import annotations
 
-import dataclasses
+import numpy as np
 
-from repro.core import plaid, vanilla
+from repro import retrieval
 
 from benchmarks import common
 
 N_DOCS = 4000
 
 
-def run(emit):
-    docs, index = common.corpus_and_index(N_DOCS)
-    qs, _ = common.queries(docs, 48)
+def run(emit, dry: bool = False):
+    docs, index = common.corpus_and_index(common.scaled(N_DOCS, dry, 500))
+    qs, _ = common.queries(docs, common.scaled(48, dry, 8))
     for k in (10, 100):
-        vs = vanilla.VanillaSearcher(
-            index, vanilla.VanillaParams(k=k, nprobe=4, ncandidates=2**13)
+        vr = retrieval.from_index(
+            index,
+            backend="vanilla",
+            params=retrieval.SearchParams(
+                k=k, nprobe=4, candidate_cap=2**13, ndocs=4096
+            ),
         )
-        _, v_pids = vs.search_batch(qs)
+        v_pids = vr.search_batch(qs).pids
         for mult in (1, 2, 5, 10):
             kp = k * mult
             # centroid-only: no pruning, final ranking by stage-3 scores only
             # (ndocs=4*kp so stage 3 emits kp candidates; stage 4 re-ranks
             # within them, set membership is centroid-determined)
-            sp = dataclasses.replace(
-                plaid.params_for_k(kp),
-                nprobe=4,
-                t_cs=-1e9,
-                ndocs=4 * kp,
-                candidate_cap=8192,
+            pr = retrieval.from_index(
+                index,
+                backend="plaid",
+                params=retrieval.params_for_k(kp).replace(
+                    nprobe=4, t_cs=-1e9, ndocs=4 * kp, candidate_cap=8192
+                ),
             )
-            ps = plaid.PlaidSearcher(index, sp)
-            _, c_pids = ps.search_batch(qs)
-            import numpy as np
-
+            c_pids = pr.search_batch(qs).pids
             recall = float(
                 np.mean(
                     [

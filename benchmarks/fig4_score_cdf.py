@@ -10,9 +10,9 @@ from repro.core import scoring
 from benchmarks import common
 
 
-def run(emit):
-    docs, index = common.corpus_and_index(4000)
-    qs, _ = common.queries(docs, 15)
+def run(emit, dry: bool = False):
+    docs, index = common.corpus_and_index(common.scaled(4000, dry, 500))
+    qs, _ = common.queries(docs, common.scaled(15, dry, 5))
     fracs_above = {0.3: [], 0.4: [], 0.5: []}
     quantiles = []
     for q in qs:

@@ -1,50 +1,63 @@
 """Fig. 6 analog: ablation of PLAID's optimizations at k=1000-equivalent
-settings.  Stages: vanilla -> + centroid interaction (stage 3 only) ->
-+ centroid pruning (stage 2) -> + kernels (pallas interpret on CPU; on TPU
-the same kernels lower through Mosaic)."""
+settings, swept through the ``repro.retrieval`` registry.  Stages: vanilla
+-> + centroid interaction (stage 3 only) -> + centroid pruning (stage 2) ->
++ kernels (the ``plaid-pallas`` backend: interpret on CPU; on TPU the same
+kernels lower through Mosaic).
+
+The pruning step is a DYNAMIC sweep: disabling/enabling t_cs reuses the
+compiled program (the facade traces the threshold)."""
 from __future__ import annotations
 
-import dataclasses
-
-from repro.core import plaid, vanilla
+from repro import retrieval
 
 from benchmarks import common
 
 N_DOCS = 8000
 
 
-def run(emit):
-    docs, index = common.corpus_and_index(N_DOCS)
-    qs, _ = common.queries(docs, 48)
+def run(emit, dry: bool = False):
+    docs, index = common.corpus_and_index(common.scaled(N_DOCS, dry, 500))
+    qs, _ = common.queries(docs, common.scaled(48, dry, 8))
+    trials = 1 if dry else 3
     k = 100
 
-    vs = vanilla.VanillaSearcher(
-        index, vanilla.VanillaParams(k=k, nprobe=4, ncandidates=2**13)
+    vr = retrieval.from_index(
+        index,
+        backend="vanilla",
+        params=retrieval.SearchParams(
+            k=k, nprobe=4, candidate_cap=2**13, ndocs=4096
+        ),
     )
-    t_vanilla = common.time_batched(lambda q: vs.search_batch(q)[1], qs)
+    t_vanilla = common.time_batched(
+        lambda q: vr.search_batch(q).pids, qs, trials=trials
+    )
     emit("fig6", "vanilla", ms_per_query=round(t_vanilla, 3), speedup=1.0)
 
-    # + centroid interaction, no pruning (t_cs very low disables stage-2 cut)
-    sp1 = dataclasses.replace(plaid.params_for_k(k), t_cs=-1e9)
+    # + centroid interaction, no pruning: t_cs=-1e9 disables the stage-2 cut.
+    # Same retriever object serves both rows — t_cs is traced, no recompile.
+    pr = retrieval.from_index(
+        index, backend="plaid", params=retrieval.params_for_k(k)
+    )
     t_inter = common.time_batched(
-        lambda q: plaid.PlaidSearcher(index, sp1).search_batch(q)[1], qs
+        lambda q: pr.search_batch(q, t_cs=-1e9).pids, qs, trials=trials
     )
     emit("fig6", "centroid_interaction", ms_per_query=round(t_inter, 3),
          speedup=round(t_vanilla / t_inter, 2))
 
     # + centroid pruning (paper t_cs)
-    sp2 = plaid.params_for_k(k)
     t_prune = common.time_batched(
-        lambda q: plaid.PlaidSearcher(index, sp2).search_batch(q)[1], qs
+        lambda q: pr.search_batch(q).pids, qs, trials=trials
     )
     emit("fig6", "plus_pruning", ms_per_query=round(t_prune, 3),
          speedup=round(t_vanilla / t_prune, 2))
 
     # + kernels (interpret mode on CPU: correctness-true, perf indicative
     # only on real TPU — recorded for completeness)
-    sp3 = plaid.params_for_k(k, impl="pallas")
+    kr = retrieval.from_index(
+        index, backend="plaid-pallas", params=retrieval.params_for_k(k)
+    )
     t_kern = common.time_batched(
-        lambda q: plaid.PlaidSearcher(index, sp3).search_batch(q)[1], qs
+        lambda q: kr.search_batch(q).pids, qs, trials=trials
     )
     emit("fig6", "plus_kernels_interpret", ms_per_query=round(t_kern, 3),
          speedup=round(t_vanilla / t_kern, 2))

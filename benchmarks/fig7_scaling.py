@@ -4,20 +4,25 @@ from __future__ import annotations
 
 import math
 
-from repro.core import plaid
+from repro import retrieval
 
 from benchmarks import common
 
 
-def run(emit):
-    sizes = [1000, 4000, 16000]
+def run(emit, dry: bool = False):
+    sizes = [500, 1000, 2000] if dry else [1000, 4000, 16000]
+    trials = 1 if dry else 3
     points = []
     for n in sizes:
         docs, index = common.corpus_and_index(n)
-        qs, gold = common.queries(docs, 32)
-        ps = plaid.PlaidSearcher(index, plaid.params_for_k(100))
-        ms = common.time_batched(lambda q: ps.search_batch(q)[1], qs)
-        _, pids = ps.search_batch(qs)
+        qs, gold = common.queries(docs, common.scaled(32, dry, 8))
+        pr = retrieval.from_index(
+            index, backend="plaid", params=retrieval.params_for_k(100)
+        )
+        ms = common.time_batched(
+            lambda q: pr.search_batch(q).pids, qs, trials=trials
+        )
+        pids = pr.search_batch(qs).pids
         emit(
             "fig7", f"n{n}",
             n_docs=n, n_embeddings=index.num_tokens,

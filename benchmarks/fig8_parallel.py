@@ -8,27 +8,22 @@ hardware: per-shard work (candidates scored, tokens gathered — scales down
 ~1/n) and merge collective bytes (constant per query)."""
 from __future__ import annotations
 
-import jax
-import numpy as np
-
-from repro.core import engine_sharded, plaid
+from repro import retrieval
+from repro.core import engine_sharded
 
 from benchmarks import common
 
 
-def run(emit):
-    docs, index = common.corpus_and_index(4000)
-    qs, _ = common.queries(docs, 8)
-    masks = np.ones(qs.shape[:2], np.float32)
-    sp = plaid.SearchParams(k=100, nprobe=4, t_cs=0.4, ndocs=1024, candidate_cap=2048)
+def run(emit, dry: bool = False):
+    docs, index = common.corpus_and_index(common.scaled(4000, dry, 500))
+    sp = retrieval.SearchParams(
+        k=100, nprobe=4, t_cs=0.4, ndocs=1024, candidate_cap=2048
+    )
     for n_shards in (1, 2, 4, 8):
         idx_dict, meta, per = engine_sharded.shard_index(index, n_shards)
         # per-shard candidate cap shrinks with the shard's corpus slice
+        # (same clamp the "plaid-sharded" backend applies)
         cap = min(sp.candidate_cap, max(per, 2))
-        spn = plaid.SearchParams(
-            k=sp.k, nprobe=sp.nprobe, t_cs=sp.t_cs, ndocs=sp.ndocs,
-            candidate_cap=cap,
-        )
         merge_bytes = n_shards * sp.k * 8  # (score f32 + pid i32) per shard
         emit(
             "fig8", f"shards{n_shards}",

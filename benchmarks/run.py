@@ -1,7 +1,9 @@
 """Benchmark driver: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only table3]`` prints
+``PYTHONPATH=src python -m benchmarks.run [--only table3] [--dry]`` prints
 ``bench,case,key=value,...`` CSV-ish lines (machine-greppable) and a summary.
+``--dry`` shrinks corpora/query counts to smoke-test the full pipeline in CI
+(numbers are NOT meaningful at dry scale).
 """
 from __future__ import annotations
 
@@ -23,6 +25,8 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--dry", action="store_true",
+                    help="tiny corpora / single trial: CI smoke run")
     args = ap.parse_args()
 
     rows = []
@@ -41,7 +45,7 @@ def main() -> None:
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
-        mod.run(emit)
+        mod.run(emit, dry=args.dry)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
 
     print(f"# total {len(rows)} results")

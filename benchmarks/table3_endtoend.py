@@ -1,14 +1,15 @@
 """Table 3 analog: end-to-end latency + quality, PLAID k∈{10,100,1000} vs
 vanilla ColBERTv2 (same index, same substrate, CPU) on a synthetic corpus.
 
+All engines are constructed through the ``repro.retrieval`` registry, so the
+sweep is a pure parameter sweep: swap ``backend=`` to benchmark a new engine.
+
 Reported: ms/query (min-of-3 averages, paper protocol), success@1 against
 the generating document, recall@10 vs vanilla's top-10, and the speedup.
 """
 from __future__ import annotations
 
-import dataclasses
-
-from repro.core import plaid, vanilla
+from repro import retrieval
 
 from benchmarks import common
 
@@ -16,23 +17,33 @@ N_DOCS = 8000
 N_QUERIES = 64
 
 
-def run(emit):
-    docs, index = common.corpus_and_index(N_DOCS)
-    qs, gold = common.queries(docs, N_QUERIES)
+def run(emit, dry: bool = False):
+    docs, index = common.corpus_and_index(common.scaled(N_DOCS, dry, 500))
+    qs, gold = common.queries(docs, common.scaled(N_QUERIES, dry, 8))
+    trials = 1 if dry else 3
 
-    vs = vanilla.VanillaSearcher(
-        index, vanilla.VanillaParams(k=1000, nprobe=4, ncandidates=2**13)
+    vr = retrieval.from_index(
+        index,
+        backend="vanilla",
+        params=retrieval.SearchParams(
+            k=1000, nprobe=4, candidate_cap=2**13, ndocs=4096
+        ),
     )
-    v_ms = common.time_batched(lambda q: vs.search_batch(q)[1], qs)
-    _, v_pids = vs.search_batch(qs)
+    v_ms = common.time_batched(
+        lambda q: vr.search_batch(q).pids, qs, trials=trials
+    )
+    v_pids = vr.search_batch(qs).pids
     emit("table3", "vanilla_p4_c8192", ms_per_query=round(v_ms, 3),
          success_at_1=common.success_at_1(v_pids, gold))
 
     for k in (10, 100, 1000):
-        params = plaid.params_for_k(k)
-        ps = plaid.PlaidSearcher(index, params)
-        p_ms = common.time_batched(lambda q: ps.search_batch(q)[1], qs)
-        _, p_pids = ps.search_batch(qs)
+        pr = retrieval.from_index(
+            index, backend="plaid", params=retrieval.params_for_k(k)
+        )
+        p_ms = common.time_batched(
+            lambda q: pr.search_batch(q).pids, qs, trials=trials
+        )
+        p_pids = pr.search_batch(qs).pids
         emit(
             "table3",
             f"plaid_k{k}",

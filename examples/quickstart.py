@@ -1,30 +1,41 @@
-"""Quickstart: build a PLAID index and search it, in ~20 lines.
+"""Quickstart: build, search, tune, and persist a retriever via the facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import index as index_mod
-from repro.core.plaid import PlaidSearcher, params_for_k
+from repro import retrieval
 from repro.data.synthetic import embedding_corpus, queries_from_docs
 
 # 1. a corpus of token-level embedding matrices (one per passage) — in a real
 #    deployment these come from the ColBERT encoder (examples/serve_retrieval.py)
 docs, _ = embedding_corpus(n_docs=5000, dim=128, seed=0)
 
-# 2. index it: k-means centroids + 2-bit residual compression + centroid->pid IVF
-index = index_mod.build_index(docs, nbits=2)
-print(
-    f"index: {index.num_passages} passages, {index.num_tokens} tokens, "
-    f"{index.num_centroids} centroids"
-)
+# 2. one call: k-means centroids + 2-bit residual compression + IVF + engine.
+#    Backends: "vanilla" | "plaid" | "plaid-pallas" | "plaid-sharded"
+searcher = retrieval.build(docs, backend="plaid",
+                           params=retrieval.params_for_k(10))
+print({k: v for k, v in searcher.describe()["index"].items()})
 
 # 3. search with the PLAID 4-stage pipeline (paper Table 2 settings for k=10)
-searcher = PlaidSearcher(index, params_for_k(10))
 queries, gold = queries_from_docs(docs, n_queries=16)
-scores, pids = searcher.search_batch(jnp.asarray(queries))
+res = searcher.search_batch(jnp.asarray(queries))
+hits = (np.asarray(res.pids[:, 0]) == gold).mean()
+print(f"top-1 = gold passage for {hits:.0%} of queries  "
+      f"({res.latency_ms / 16:.2f} ms/query, backend={res.backend})")
 
-hits = (np.asarray(pids[:, 0]) == gold).mean()
-print(f"top-1 = gold passage for {hits:.0%} of queries")
-print("first query top-5:", np.asarray(pids[0][:5]), np.asarray(scores[0][:5]).round(3))
+# 4. tune pruning per request: t_cs is a traced scalar, so sweeping it reuses
+#    the compiled program (zero recompiles — check describe()["compile"])
+for t_cs in (0.3, 0.5, 0.6):
+    r = searcher.search_batch(jnp.asarray(queries), t_cs=t_cs)
+    print(f"t_cs={t_cs}: top-1 {np.mean(np.asarray(r.pids[:, 0]) == gold):.0%}")
+
+# 5. persist and restore — retrieval.load reads the backend from disk
+with tempfile.TemporaryDirectory() as d:
+    searcher.save(d)
+    restored = retrieval.load(d)
+    r = restored.search(jnp.asarray(queries[0]))
+    print("restored", restored.backend_name, "top-5:", np.asarray(r.pids[:5]))

@@ -15,10 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import retrieval
 from repro.configs import colbertv2 as colbert_cfg
 from repro.core import index as index_mod
-from repro.core.plaid import PlaidSearcher, params_for_k
-from repro.core.vanilla import VanillaParams, VanillaSearcher
 from repro.models import colbert as colbert_lib
 
 
@@ -57,26 +56,34 @@ def main():
     q_tokens = corpus_tokens[gold][:, :q_len]
     q_embs = np.asarray(encode(jnp.asarray(q_tokens)))
 
-    searcher = PlaidSearcher(index, params_for_k(args.k))
+    searcher = retrieval.from_index(
+        index, backend="plaid", params=retrieval.params_for_k(args.k)
+    )
     qs = jnp.asarray(q_embs)
-    searcher.search_batch(qs[:16])[1].block_until_ready()  # compile
+    searcher.search_batch(qs[:16]).pids.block_until_ready()  # compile
     lat = []
     all_pids = []
     for i in range(0, args.queries, 16):
         chunk = qs[i : i + 16]
         t0 = time.perf_counter()
-        _, pids = searcher.search_batch(chunk)
-        pids.block_until_ready()
+        res = searcher.search_batch(chunk)
+        res.pids.block_until_ready()
         lat.append((time.perf_counter() - t0) / len(chunk) * 1e3)
-        all_pids.append(np.asarray(pids))
+        all_pids.append(np.asarray(res.pids))
     all_pids = np.concatenate(all_pids)
     print(
         f"PLAID k={args.k}: {np.mean(lat):.2f} ms/q "
         f"(p99 {np.percentile(lat, 99):.2f})"
     )
 
-    vs = VanillaSearcher(index, VanillaParams(k=args.k, nprobe=4, ncandidates=4096))
-    v_pids0 = vs.search_batch(qs[:16])[1]
+    vs = retrieval.from_index(
+        index,
+        backend="vanilla",
+        params=retrieval.SearchParams(
+            k=args.k, nprobe=4, candidate_cap=4096, ndocs=4096
+        ),
+    )
+    v_pids0 = vs.search_batch(qs[:16]).pids
     v_pids0.block_until_ready()
     t0 = time.perf_counter()
     _, v_pids = vs.search_batch(qs)

@@ -1,15 +1,28 @@
-"""PLAID core: late-interaction retrieval engine (the paper's contribution)."""
+"""PLAID core: late-interaction retrieval engine internals.
+
+The public, backend-agnostic API is ``repro.retrieval``; ``PlaidEngine`` /
+``VanillaEngine`` are the implementations its backends wrap.  The old
+``*Searcher`` names remain importable but warn on construction.
+"""
 from repro.core.index import PlaidIndex, build_index
-from repro.core.plaid import PAPER_PARAMS, PlaidSearcher, SearchParams, params_for_k
-from repro.core.vanilla import VanillaParams, VanillaSearcher
+from repro.core.plaid import (
+    PAPER_PARAMS,
+    PlaidEngine,
+    PlaidSearcher,
+    SearchParams,
+    params_for_k,
+)
+from repro.core.vanilla import VanillaEngine, VanillaParams, VanillaSearcher
 
 __all__ = [
     "PlaidIndex",
     "build_index",
+    "PlaidEngine",
     "PlaidSearcher",
     "SearchParams",
     "PAPER_PARAMS",
     "params_for_k",
+    "VanillaEngine",
     "VanillaSearcher",
     "VanillaParams",
 ]

@@ -217,7 +217,6 @@ def make_sharded_search(
     kw = dict(
         k=params.k,
         nprobe=params.nprobe,
-        t_cs=params.t_cs,
         # NOT clamped to candidate_cap: _search clamps stage-2's keep (n2)
         # itself but derives stage-3's keep from the raw ndocs//4 — pre-
         # clamping here would silently shrink stage 3.
@@ -232,7 +231,7 @@ def make_sharded_search(
     )
     meta.update(static_meta or {})
 
-    def local_search(index_dict, qs, q_masks):
+    def local_search(index_dict, qs, q_masks, t_cs):
         axis = ax[0] if len(ax) == 1 else ax
         index_local = PlaidIndex(**index_dict, **meta)
         fn = functools.partial(plaid._search.__wrapped__, **kw)
@@ -244,8 +243,8 @@ def make_sharded_search(
             index_local.centroids.astype(jnp.float32),
             qs.astype(jnp.float32),
         )
-        scores, pids = jax.vmap(fn, in_axes=(None, 0, 0, 0))(
-            index_local, qs, q_masks, s_cq_all
+        scores, pids = jax.vmap(fn, in_axes=(None, 0, 0, 0, None))(
+            index_local, qs, q_masks, s_cq_all, t_cs
         )  # (B, k) per shard
 
         def merge(s, p):
@@ -257,15 +256,20 @@ def make_sharded_search(
     search = shard_map(
         local_search,
         mesh=mesh,
-        in_specs=(index_specs, rep, rep),
+        in_specs=(index_specs, rep, rep, rep),
         out_specs=(rep, rep),
         check_rep=False,
     )
 
-    def run(index, qs, q_masks):
-        """index: PlaidIndex or a dict of its array fields (dry-run SDS)."""
+    def run(index, qs, q_masks, t_cs=None):
+        """index: PlaidIndex or a dict of its array fields (dry-run SDS).
+
+        ``t_cs`` is traced (replicated to every shard): sweeping it at serve
+        time reuses the compiled program; ``None`` means ``params.t_cs``.
+        """
         if isinstance(index, PlaidIndex):
             index = _index_as_dict(index)
-        return search(index, qs, q_masks)
+        t = jnp.float32(params.t_cs if t_cs is None else t_cs)
+        return search(index, qs, q_masks, t)
 
     return jax.jit(run)

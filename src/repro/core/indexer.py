@@ -62,9 +62,25 @@ def save_sharded(path: str, index: PlaidIndex, n_shards: int) -> None:
     Shard s loads ``<path>/shard_<s>``; the stacked arrays for the sharded
     engine are the concatenation in shard order (``load_sharded``)."""
     idx_dict, meta, per = engine_sharded.shard_index(index, n_shards)
+    save_sharded_arrays(path, idx_dict, meta, n_shards=n_shards, docs_per_shard=per)
+
+
+def save_sharded_arrays(
+    path: str,
+    idx_dict: dict,
+    meta: dict,
+    *,
+    n_shards: int,
+    docs_per_shard: int,
+) -> None:
+    """Write an ALREADY-sharded index (``engine_sharded.shard_index`` output:
+    doc-partitioned arrays stacked along axis 0 in shard order) as the
+    per-shard directory layout that ``load_sharded`` reassembles."""
     os.makedirs(path, exist_ok=True)
     with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(dict(meta, n_shards=n_shards, docs_per_shard=per), f)
+        json.dump(
+            dict(meta, n_shards=n_shards, docs_per_shard=docs_per_shard), f
+        )
     for s in range(n_shards):
         sd = os.path.join(path, f"shard_{s:04d}")
         os.makedirs(sd, exist_ok=True)

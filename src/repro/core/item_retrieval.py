@@ -71,7 +71,7 @@ def retrieve_items(
         ndocs=4 * candidate_cap,
         candidate_cap=candidate_cap,
     )
-    searcher = plaid.PlaidSearcher(index, params)
+    searcher = plaid.PlaidEngine(index, params)
     scores, pids = searcher.search_batch(qn[:, None, :])  # (B, 1, d) queries
     # rescale: searcher scored against unit-normalized user state
     return scores * norms, pids

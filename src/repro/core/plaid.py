@@ -10,11 +10,18 @@ Static-shape discipline (DESIGN §7): candidate sets are padded to
 ``candidate_cap`` with ``-1`` sentinels; all per-stage shapes are compile-time
 constants so the whole pipeline is a single fused XLA program that also
 lowers for sharded execution (one shard = one sub-corpus).
+
+Parameter discipline: shape-determining caps (``k``, ``nprobe``, ``ndocs``,
+``candidate_cap``) and codegen choices (``impl``, ``score_dtype``) are
+compile-time static; the pruning threshold ``t_cs`` is a TRACED scalar, so a
+serving process can tune pruning aggressiveness per request without paying a
+new XLA compile (the public knob lives in ``repro.retrieval``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +45,9 @@ class SearchParams:
     impl: str = "ref"  # "ref" (pure jnp) | "pallas" (kernels, interpret on CPU)
     score_dtype: str = "float32"  # stage 1-3 approximate-score dtype. §Perf
     # S2: "bfloat16" halves score-matrix + gather traffic on TPU with no
-    # measured recall change; default stays f32 because the CPU dry-run
-    # metric can't see the win (bf16 emulation inserts f32 copies).
+    # measured recall change; default stays f32 (everywhere, including
+    # ``_search``) because the CPU dry-run metric can't see the win (bf16
+    # emulation inserts f32 copies).
 
     def stage3_docs(self) -> int:
         return max(self.ndocs // 4, self.k)
@@ -99,10 +107,20 @@ def decompress_and_score_ref(
 # --------------------------------------------------------------------------
 # Full pipeline (single query matrix)
 # --------------------------------------------------------------------------
+_N_TRACES = 0  # incremented at trace time; one retrace == one XLA compile.
+# ``repro.retrieval`` exposes this via ``describe()`` so tests and serving
+# dashboards can assert that dynamic-parameter sweeps hit the compile cache.
+
+
+def trace_count() -> int:
+    """Number of times the search pipeline has been (re)traced/compiled."""
+    return _N_TRACES
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "nprobe", "ndocs", "candidate_cap", "impl", "t_cs", "score_dtype",
+        "k", "nprobe", "ndocs", "candidate_cap", "impl", "score_dtype", "diag",
     ),
 )
 def _search(
@@ -112,15 +130,18 @@ def _search(
     s_cq: jax.Array | None = None,  # precomputed (K, nq) stage-1 scores —
     # batched engines compute C.Q^T ONCE for all queries (§Perf S1: the
     # centroid matrix is read once per batch instead of once per query)
+    t_cs: jax.Array | float = 0.5,  # TRACED: changing it never recompiles
     *,
     k: int,
     nprobe: int,
-    t_cs: float,
     ndocs: int,
     candidate_cap: int,
     impl: str,
-    score_dtype: str = "bfloat16",
+    score_dtype: str = "float32",
+    diag: bool = False,
 ):
+    global _N_TRACES
+    _N_TRACES += 1
     if impl == "pallas":
         from repro.kernels import ops as K
 
@@ -193,38 +214,83 @@ def _search(
     exact = jnp.where(final_pids >= 0, exact, NEG)
     kk = min(k, n3)
     top_scores, idxk = jax.lax.top_k(exact, kk)
+    if diag:
+        diagnostics = dict(
+            stage1_candidates=(candidates >= 0).sum(),
+            stage2_kept_centroids=keep.sum(),
+            stage3_survivors=(final_pids >= 0).sum(),
+        )
+        return top_scores, final_pids[idxk], diagnostics
     return top_scores, final_pids[idxk]
 
 
-class PlaidSearcher:
-    """User-facing engine handle: ``searcher.search(Q)`` / ``search_batch``."""
+class PlaidEngine:
+    """Internal engine handle over one in-memory index.
+
+    The public, backend-agnostic API is ``repro.retrieval``; this class is
+    the implementation the ``"plaid"`` / ``"plaid-pallas"`` backends wrap.
+    ``search``/``search_batch`` return raw ``(scores, pids)`` tuples.
+    """
 
     def __init__(self, index: PlaidIndex, params: SearchParams | None = None):
         self.index = index
         self.params = params or SearchParams()
 
     def _kwargs(self):
+        """Static (compile-cache-keyed) kwargs; ``t_cs`` is passed per call."""
         p = self.params
         cap = min(p.candidate_cap, max(self.index.num_passages, 2))
         return dict(
             k=p.k,
             nprobe=p.nprobe,
-            t_cs=p.t_cs,
             ndocs=min(p.ndocs, cap),
             candidate_cap=cap,
             impl=p.impl,
             score_dtype=p.score_dtype,
         )
 
-    def search(self, q: jax.Array, q_mask: jax.Array | None = None):
+    def search(
+        self,
+        q: jax.Array,
+        q_mask: jax.Array | None = None,
+        *,
+        t_cs: float | None = None,
+        diag: bool = False,
+    ):
         """q: (nq, dim) one query matrix -> (scores (k,), pids (k,))."""
         if q_mask is None:
             q_mask = jnp.ones(q.shape[0], jnp.float32)
-        return _search(self.index, q, q_mask, **self._kwargs())
+        t = self.params.t_cs if t_cs is None else t_cs
+        return _search(self.index, q, q_mask, None, t, diag=diag, **self._kwargs())
 
-    def search_batch(self, qs: jax.Array, q_masks: jax.Array | None = None):
+    def search_batch(
+        self,
+        qs: jax.Array,
+        q_masks: jax.Array | None = None,
+        *,
+        t_cs: float | None = None,
+        diag: bool = False,
+    ):
         """qs: (B, nq, dim) -> (scores (B, k), pids (B, k))."""
         if q_masks is None:
             q_masks = jnp.ones(qs.shape[:2], jnp.float32)
-        fn = functools.partial(_search, **self._kwargs())
+        t = self.params.t_cs if t_cs is None else t_cs
+        fn = functools.partial(_search, t_cs=t, diag=diag, **self._kwargs())
         return jax.vmap(fn, in_axes=(None, 0, 0))(self.index, qs, q_masks)
+
+
+class PlaidSearcher(PlaidEngine):
+    """Deprecated alias of :class:`PlaidEngine`.
+
+    Construct engines through ``repro.retrieval.build(...)`` /
+    ``retrieval.from_index(index, backend="plaid")`` instead.
+    """
+
+    def __init__(self, index: PlaidIndex, params: SearchParams | None = None):
+        warnings.warn(
+            "PlaidSearcher is deprecated; use repro.retrieval "
+            '(backend="plaid") instead.',
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        super().__init__(index, params)

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -104,14 +105,17 @@ def _vanilla_search(
     return top_scores, pids[idxk]
 
 
-class VanillaSearcher:
+class VanillaEngine:
+    """Internal engine handle; the public API is ``repro.retrieval``
+    (backend ``"vanilla"``).  Returns raw ``(scores, pids)`` tuples."""
+
     def __init__(self, index: PlaidIndex, params: VanillaParams | None = None):
         self.index = index
         self.params = params or VanillaParams()
 
     def _kwargs(self):
         p = self.params
-        nd = min(p.ndocs_cap, max(index_np := self.index.num_passages, 2))
+        nd = min(p.ndocs_cap, max(self.index.num_passages, 2))
         nc = min(p.ncandidates, max(self.index.num_tokens, 2))
         return dict(k=p.k, nprobe=p.nprobe, ncandidates=nc, ndocs_cap=nd)
 
@@ -125,3 +129,20 @@ class VanillaSearcher:
             q_masks = jnp.ones(qs.shape[:2], jnp.float32)
         fn = functools.partial(_vanilla_search, **self._kwargs())
         return jax.vmap(fn, in_axes=(None, 0, 0))(self.index, qs, q_masks)
+
+
+class VanillaSearcher(VanillaEngine):
+    """Deprecated alias of :class:`VanillaEngine`.
+
+    Construct engines through ``repro.retrieval.build(...)`` /
+    ``retrieval.from_index(index, backend="vanilla")`` instead.
+    """
+
+    def __init__(self, index: PlaidIndex, params: VanillaParams | None = None):
+        warnings.warn(
+            "VanillaSearcher is deprecated; use repro.retrieval "
+            '(backend="vanilla") instead.',
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        super().__init__(index, params)

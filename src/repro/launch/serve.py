@@ -1,10 +1,12 @@
-"""Serving driver: build a PLAID index over a synthetic corpus and serve
-batched retrieval requests.
+"""Serving driver: build a retrieval index over a synthetic corpus and serve
+batched requests through the ``repro.retrieval`` facade.
 
-``python -m repro.launch.serve --docs 20000 --queries 256 --k 10 [--pallas]
-[--compare-vanilla]`` prints latency percentiles and (optionally) the
-speedup + agreement vs. the vanilla ColBERTv2 baseline — the paper's
-Table 3 protocol at laptop scale.
+``python -m repro.launch.serve --docs 20000 --queries 256 --k 10
+[--backend plaid|plaid-pallas|plaid-sharded|vanilla] [--compare-vanilla]
+[--sweep-t-cs]`` prints latency percentiles, (optionally) the speedup +
+agreement vs. the vanilla ColBERTv2 baseline (the paper's Table 3 protocol
+at laptop scale), and (optionally) a dynamic ``t_cs`` sweep that reuses one
+compiled program for every threshold.
 """
 from __future__ import annotations
 
@@ -15,13 +17,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import retrieval
 from repro.core import index as index_mod
-from repro.core import plaid, vanilla
 from repro.data import synthetic as syn
 
 
 def percentile_ms(times, p):
     return float(np.percentile(np.asarray(times) * 1e3, p))
+
+
+def _timed_sweep(searcher, qs, batch):
+    times, all_pids = [], []
+    for i in range(0, qs.shape[0], batch):
+        chunk = qs[i : i + batch]
+        t0 = time.perf_counter()
+        res = searcher.search_batch(chunk)
+        jax.block_until_ready(res.pids)
+        times.append((time.perf_counter() - t0) / len(chunk))
+        all_pids.append(np.asarray(res.pids))
+    return times, np.concatenate(all_pids)
 
 
 def main():
@@ -32,9 +46,16 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--dim", type=int, default=128)
     ap.add_argument("--nbits", type=int, default=2)
-    ap.add_argument("--pallas", action="store_true")
+    ap.add_argument(
+        "--backend", default="plaid", choices=retrieval.list_backends()
+    )
+    ap.add_argument("--pallas", action="store_true",
+                    help='shorthand for --backend plaid-pallas')
     ap.add_argument("--compare-vanilla", action="store_true")
+    ap.add_argument("--sweep-t-cs", action="store_true",
+                    help="sweep the pruning threshold without recompiling")
     args = ap.parse_args()
+    backend = "plaid-pallas" if args.pallas else args.backend
 
     print(f"building corpus: {args.docs} docs ...")
     docs, _ = syn.embedding_corpus(args.docs, dim=args.dim)
@@ -49,43 +70,51 @@ def main():
     qs, gold = syn.queries_from_docs(docs, args.queries)
     qs = jnp.asarray(qs)
 
-    params = plaid.params_for_k(args.k, impl="pallas" if args.pallas else "ref")
-    searcher = plaid.PlaidSearcher(index, params)
+    searcher = retrieval.from_index(
+        index, backend=backend, params=retrieval.params_for_k(args.k)
+    )
 
     # warmup (compile)
-    searcher.search_batch(qs[: args.batch])[0].block_until_ready()
-    times, hits = [], 0
-    for i in range(0, args.queries, args.batch):
-        chunk = qs[i : i + args.batch]
-        t0 = time.perf_counter()
-        scores, pids = searcher.search_batch(chunk)
-        pids.block_until_ready()
-        times.append((time.perf_counter() - t0) / len(chunk))
-        hits += int((np.asarray(pids[:, 0]) == gold[i : i + len(chunk)]).sum())
-
+    jax.block_until_ready(searcher.search_batch(qs[: args.batch]).pids)
+    times, pids = _timed_sweep(searcher, qs, args.batch)
+    hits = int((pids[:, 0] == gold).sum())
     print(
-        f"PLAID  k={args.k}: mean {np.mean(times)*1e3:.2f} ms/q  "
+        f"{backend}  k={args.k}: mean {np.mean(times)*1e3:.2f} ms/q  "
         f"p50 {percentile_ms(times, 50):.2f}  p99 {percentile_ms(times, 99):.2f}  "
         f"success@1 {hits / args.queries:.3f}"
     )
 
+    if args.sweep_t_cs:
+        if "t_cs" not in searcher.describe()["dynamic_fields"]:
+            print(f"  ({backend} has no dynamic t_cs; skipping sweep)")
+        else:
+            traces0 = searcher.describe()["compile"]["trace_count"]
+            for t_cs in (0.3, 0.4, 0.5, 0.6):
+                res = searcher.search_batch(qs[: args.batch], t_cs=t_cs)
+                s1 = float(
+                    (np.asarray(res.pids)[:, 0] == gold[: args.batch]).mean()
+                )
+                print(f"  t_cs={t_cs:.2f}: success@1 {s1:.3f}  "
+                      f"{res.latency_ms / args.batch:.2f} ms/q")
+            traces1 = searcher.describe()["compile"]["trace_count"]
+            print(f"  sweep recompiles: {traces1 - traces0} "
+                  "(static caps unchanged)")
+
     if args.compare_vanilla:
-        vs = vanilla.VanillaSearcher(
-            index, vanilla.VanillaParams(k=args.k, nprobe=4, ncandidates=2**13)
+        vs = retrieval.from_index(
+            index,
+            backend="vanilla",
+            params=retrieval.SearchParams(
+                k=args.k, nprobe=4, candidate_cap=2**13, ndocs=4096
+            ),
         )
-        vs.search_batch(qs[: args.batch])[0].block_until_ready()
-        vt, vhits = [], 0
-        for i in range(0, args.queries, args.batch):
-            chunk = qs[i : i + args.batch]
-            t0 = time.perf_counter()
-            scores, pids = vs.search_batch(chunk)
-            pids.block_until_ready()
-            vt.append((time.perf_counter() - t0) / len(chunk))
-            vhits += int((np.asarray(pids[:, 0]) == gold[i : i + len(chunk)]).sum())
+        jax.block_until_ready(vs.search_batch(qs[: args.batch]).pids)
+        vt, v_pids = _timed_sweep(vs, qs, args.batch)
+        vhits = int((v_pids[:, 0] == gold).sum())
         print(
             f"vanilla k={args.k}: mean {np.mean(vt)*1e3:.2f} ms/q  "
             f"success@1 {vhits / args.queries:.3f}  "
-            f"-> PLAID speedup {np.mean(vt) / np.mean(times):.1f}x"
+            f"-> {backend} speedup {np.mean(vt) / np.mean(times):.1f}x"
         )
 
 

@@ -1,0 +1,58 @@
+"""``repro.retrieval`` — the single public retrieval API.
+
+One engine surface over every backend (PLAID paper Fig. 5 driver)::
+
+    from repro import retrieval
+
+    r = retrieval.build(corpus_embs, backend="plaid")   # or from_index / load
+    res = r.search_batch(qs)                            # SearchResult: scores, pids, metadata
+    res2 = r.search_batch(qs, t_cs=0.4)                 # dynamic: NO recompile
+    r.save("/idx");  r2 = retrieval.load("/idx")        # round-trips any backend
+
+Backends: ``"vanilla"``, ``"plaid"``, ``"plaid-pallas"``, ``"plaid-sharded"``
+(see ``retrieval.list_backends()``).  ``SearchParams`` is split into static
+caps (recompile on change) and dynamic scalars (traced) — see
+``repro/retrieval/types.py`` and README "Retrieval facade".
+"""
+from repro.retrieval.registry import (
+    build,
+    from_index,
+    get_backend,
+    list_backends,
+    load,
+    register,
+)
+from repro.retrieval.types import (
+    DEFAULT_SCORE_DTYPE,
+    DYNAMIC_FIELDS,
+    PAPER_PARAMS,
+    RetrieverConfig,
+    Retriever,
+    SearchParams,
+    SearchRequest,
+    SearchResult,
+    STATIC_FIELDS,
+    params_for_k,
+)
+
+# importing the module registers the built-in backends
+from repro.retrieval import backends as _backends  # noqa: E402,F401
+
+__all__ = [
+    "build",
+    "from_index",
+    "load",
+    "register",
+    "get_backend",
+    "list_backends",
+    "Retriever",
+    "RetrieverConfig",
+    "SearchParams",
+    "SearchRequest",
+    "SearchResult",
+    "PAPER_PARAMS",
+    "params_for_k",
+    "STATIC_FIELDS",
+    "DYNAMIC_FIELDS",
+    "DEFAULT_SCORE_DTYPE",
+]

@@ -1,0 +1,427 @@
+"""The four built-in backends behind the ``Retriever`` facade.
+
+================  =========================================================
+``vanilla``       ColBERTv2 baseline (embedding-level IVF, full padded
+                  decompression).  No dynamic parameters.
+``plaid``         PLAID 4-stage pipeline, reference (pure-jnp) kernels.
+``plaid-pallas``  Same pipeline through the Pallas kernels (interpret mode
+                  on CPU; Mosaic lowering on TPU).
+``plaid-sharded`` Document-sharded PLAID under ``shard_map`` (one shard per
+                  mesh device, small all-gather top-k merge).
+================  =========================================================
+
+Parameter mapping is uniform: ``SearchParams.candidate_cap`` is the stage-1
+candidate bound (candidate *passages* for PLAID, candidate *embeddings* for
+vanilla, matching each engine's native unit) and ``ndocs`` the stage-2/final
+passage bound.  ``t_cs`` is traced on the PLAID backends — sweeping it at
+serve time never recompiles (``describe()["compile"]`` proves it).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine_sharded
+from repro.core import index as index_mod
+from repro.core import indexer
+from repro.core import plaid as plaid_mod
+from repro.core import vanilla as vanilla_mod
+from repro.retrieval import registry
+from repro.retrieval.types import (
+    DYNAMIC_FIELDS,
+    RetrieverConfig,
+    SearchParams,
+    SearchRequest,
+    SearchResult,
+    STATIC_FIELDS,
+)
+
+
+def _build_index(corpus_embs, cfg: RetrieverConfig, doc_lens):
+    return index_mod.build_index(corpus_embs, doc_lens=doc_lens, **cfg.index)
+
+
+def _as_request(q, q_mask, t_cs, with_diagnostics) -> SearchRequest:
+    if isinstance(q, SearchRequest):
+        return q
+    return SearchRequest(
+        q=q, q_mask=q_mask, t_cs=t_cs, with_diagnostics=with_diagnostics
+    )
+
+
+def _reject_diagnostics(req: SearchRequest, backend: str) -> None:
+    if req.with_diagnostics:
+        raise ValueError(
+            f"with_diagnostics is not supported by backend {backend!r} "
+            "(per-stage survivor counts exist on 'plaid'/'plaid-pallas')"
+        )
+
+
+def _finish(out, *, backend, k, t_cs, t0, diag_names=None) -> SearchResult:
+    """Block on device results and wrap them with serving metadata.
+
+    Blocking is part of the facade contract: ``SearchResult.latency_ms``
+    measures a completed search.  Callers that want async dispatch and
+    device/host overlap (request pipelining) use the core engines, which
+    return unblocked device arrays."""
+    if diag_names is not None:
+        scores, pids, diagnostics = out
+        diagnostics = {name: diagnostics[name] for name in diag_names}
+    else:
+        scores, pids = out
+        diagnostics = None
+    jax.block_until_ready(pids)
+    latency_ms = (time.perf_counter() - t0) * 1e3
+    if diagnostics is not None:
+        diagnostics = {
+            name: np.asarray(v) if np.ndim(v) else int(v)
+            for name, v in diagnostics.items()
+        }
+    return SearchResult(
+        scores=scores,
+        pids=pids,
+        backend=backend,
+        k=k,
+        latency_ms=latency_ms,
+        t_cs=t_cs,
+        diagnostics=diagnostics,
+    )
+
+
+_DIAG_NAMES = ("stage1_candidates", "stage2_kept_centroids", "stage3_survivors")
+
+
+# --------------------------------------------------------------------------
+# PLAID family (single-host): "plaid" and "plaid-pallas"
+# --------------------------------------------------------------------------
+@registry.register("plaid")
+class PlaidRetriever:
+    """Single-host PLAID engine behind the facade."""
+
+    impl = "ref"
+
+    def __init__(self, index, params: SearchParams | None = None):
+        self.index = index
+        self.params = params or SearchParams()
+        p = self.params
+        self._engine = plaid_mod.PlaidEngine(
+            index,
+            plaid_mod.SearchParams(
+                k=p.k,
+                nprobe=p.nprobe,
+                t_cs=p.t_cs,
+                ndocs=p.ndocs,
+                candidate_cap=p.candidate_cap,
+                impl=self.impl,
+                score_dtype=p.score_dtype,
+            ),
+        )
+
+    # ---- construction ----------------------------------------------------
+    @classmethod
+    def build(cls, corpus_embs, cfg: RetrieverConfig, doc_lens=None):
+        return cls(_build_index(corpus_embs, cfg, doc_lens), cfg.params)
+
+    @classmethod
+    def from_index(cls, index, cfg: RetrieverConfig):
+        return cls(index, cfg.params)
+
+    @classmethod
+    def load(cls, path: str, params: SearchParams | None = None):
+        return cls(indexer.load_index(path), params)
+
+    def save(self, path: str) -> None:
+        indexer.save_index(path, self.index)
+        registry.write_meta(path, self)
+
+    # ---- search ----------------------------------------------------------
+    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False):
+        req = _as_request(q, q_mask, t_cs, with_diagnostics)
+        t = self.params.t_cs if req.t_cs is None else req.t_cs
+        t0 = time.perf_counter()
+        out = self._engine.search(
+            req.q, req.q_mask, t_cs=t, diag=req.with_diagnostics
+        )
+        return _finish(
+            out,
+            backend=self.backend_name,
+            k=self.params.k,
+            t_cs=t,
+            t0=t0,
+            diag_names=_DIAG_NAMES if req.with_diagnostics else None,
+        )
+
+    def search_batch(self, qs, q_masks=None, *, t_cs=None, with_diagnostics=False):
+        req = _as_request(qs, q_masks, t_cs, with_diagnostics)
+        t = self.params.t_cs if req.t_cs is None else req.t_cs
+        t0 = time.perf_counter()
+        out = self._engine.search_batch(
+            req.q, req.q_mask, t_cs=t, diag=req.with_diagnostics
+        )
+        return _finish(
+            out,
+            backend=self.backend_name,
+            k=self.params.k,
+            t_cs=t,
+            t0=t0,
+            diag_names=_DIAG_NAMES if req.with_diagnostics else None,
+        )
+
+    # ---- introspection ---------------------------------------------------
+    def describe(self) -> dict:
+        effective = self._engine._kwargs()
+        return dict(
+            backend=self.backend_name,
+            impl=self.impl,
+            static=self.params.static_dict(),
+            static_effective=effective,  # caps after clamping to the corpus
+            dynamic=self.params.dynamic_dict(),
+            static_fields=STATIC_FIELDS,
+            dynamic_fields=DYNAMIC_FIELDS,
+            index=dict(
+                num_passages=self.index.num_passages,
+                num_tokens=self.index.num_tokens,
+                num_centroids=self.index.num_centroids,
+                dim=self.index.dim,
+                nbits=self.index.nbits,
+                doc_maxlen=self.index.doc_maxlen,
+            ),
+            compile=dict(
+                trace_count=plaid_mod.trace_count(),
+                cache_size=plaid_mod._search._cache_size(),
+            ),
+        )
+
+
+@registry.register("plaid-pallas")
+class PlaidPallasRetriever(PlaidRetriever):
+    """PLAID through the Pallas kernels (interpret on CPU, Mosaic on TPU)."""
+
+    impl = "pallas"
+
+
+# --------------------------------------------------------------------------
+# Vanilla ColBERTv2 baseline
+# --------------------------------------------------------------------------
+@registry.register("vanilla")
+class VanillaRetriever:
+    """ColBERTv2 baseline behind the facade.  No dynamic parameters
+    (``t_cs`` overrides are accepted and ignored — the pipeline has no
+    pruning stage)."""
+
+    def __init__(self, index, params: SearchParams | None = None):
+        self.index = index
+        self.params = params or SearchParams()
+        p = self.params
+        self._engine = vanilla_mod.VanillaEngine(
+            index,
+            vanilla_mod.VanillaParams(
+                k=p.k,
+                nprobe=p.nprobe,
+                ncandidates=p.candidate_cap,
+                ndocs_cap=p.ndocs,
+            ),
+        )
+
+    @classmethod
+    def build(cls, corpus_embs, cfg: RetrieverConfig, doc_lens=None):
+        return cls(_build_index(corpus_embs, cfg, doc_lens), cfg.params)
+
+    @classmethod
+    def from_index(cls, index, cfg: RetrieverConfig):
+        return cls(index, cfg.params)
+
+    @classmethod
+    def load(cls, path: str, params: SearchParams | None = None):
+        return cls(indexer.load_index(path), params)
+
+    def save(self, path: str) -> None:
+        indexer.save_index(path, self.index)
+        registry.write_meta(path, self)
+
+    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False):
+        req = _as_request(q, q_mask, t_cs, with_diagnostics)
+        _reject_diagnostics(req, self.backend_name)
+        t0 = time.perf_counter()
+        out = self._engine.search(req.q, req.q_mask)
+        return _finish(
+            out, backend=self.backend_name, k=self.params.k, t_cs=None, t0=t0
+        )
+
+    def search_batch(self, qs, q_masks=None, *, t_cs=None, with_diagnostics=False):
+        req = _as_request(qs, q_masks, t_cs, with_diagnostics)
+        _reject_diagnostics(req, self.backend_name)
+        t0 = time.perf_counter()
+        out = self._engine.search_batch(req.q, req.q_mask)
+        return _finish(
+            out, backend=self.backend_name, k=self.params.k, t_cs=None, t0=t0
+        )
+
+    def describe(self) -> dict:
+        return dict(
+            backend=self.backend_name,
+            static=self.params.static_dict(),
+            static_effective=self._engine._kwargs(),
+            dynamic={},
+            static_fields=STATIC_FIELDS,
+            dynamic_fields=(),  # vanilla has no traced knobs
+            index=dict(
+                num_passages=self.index.num_passages,
+                num_tokens=self.index.num_tokens,
+                num_centroids=self.index.num_centroids,
+                dim=self.index.dim,
+                nbits=self.index.nbits,
+                doc_maxlen=self.index.doc_maxlen,
+            ),
+        )
+
+
+# --------------------------------------------------------------------------
+# Document-sharded PLAID
+# --------------------------------------------------------------------------
+def _default_mesh():
+    devices = jax.devices()
+    return jax.make_mesh((len(devices),), ("data",))
+
+
+@registry.register("plaid-sharded")
+class ShardedRetriever:
+    """Document-sharded PLAID: one shard per mesh device, replicated
+    centroids, all-gather top-k merge.  Holds the shard-stacked array dict
+    (``engine_sharded.shard_index`` layout), not a ``PlaidIndex``."""
+
+    def __init__(
+        self,
+        idx_dict: dict,
+        meta: dict,
+        *,
+        docs_per_shard: int,
+        n_shards: int,
+        params: SearchParams | None = None,
+        mesh=None,
+    ):
+        self.params = params or SearchParams()
+        self.mesh = mesh if mesh is not None else _default_mesh()
+        n_devices = 1
+        for v in self.mesh.shape.values():
+            n_devices *= v
+        if n_shards != n_devices:
+            raise ValueError(
+                f"n_shards={n_shards} must equal the mesh device count "
+                f"({n_devices}); build the mesh to match the shard layout"
+            )
+        self._idx_dict = idx_dict
+        self._meta = meta
+        self.docs_per_shard = docs_per_shard
+        self.n_shards = n_shards
+        p = self.params
+        self._search_fn = engine_sharded.make_sharded_search(
+            self.mesh,
+            plaid_mod.SearchParams(
+                k=p.k,
+                nprobe=p.nprobe,
+                t_cs=p.t_cs,
+                ndocs=p.ndocs,
+                # stage-1 bound is per shard: clamp to the shard's corpus
+                candidate_cap=min(p.candidate_cap, max(docs_per_shard, 2)),
+                score_dtype=p.score_dtype,
+            ),
+            docs_per_shard=docs_per_shard,
+            static_meta=meta,
+        )
+
+    @classmethod
+    def build(cls, corpus_embs, cfg: RetrieverConfig, doc_lens=None):
+        return cls.from_index(_build_index(corpus_embs, cfg, doc_lens), cfg)
+
+    @classmethod
+    def from_index(cls, index, cfg: RetrieverConfig):
+        n_shards = cfg.n_shards or len(jax.devices())
+        idx_dict, meta, per = engine_sharded.shard_index(index, n_shards)
+        return cls(
+            idx_dict,
+            meta,
+            docs_per_shard=per,
+            n_shards=n_shards,
+            params=cfg.params,
+        )
+
+    @classmethod
+    def load(cls, path: str, params: SearchParams | None = None):
+        import json
+        import os
+
+        idx_dict, meta, per = indexer.load_sharded(path)
+        with open(os.path.join(path, "manifest.json")) as f:
+            n_shards = json.load(f)["n_shards"]
+        return cls(
+            idx_dict, meta, docs_per_shard=per, n_shards=n_shards, params=params
+        )
+
+    def save(self, path: str) -> None:
+        indexer.save_sharded_arrays(
+            path,
+            self._idx_dict,
+            self._meta,
+            n_shards=self.n_shards,
+            docs_per_shard=self.docs_per_shard,
+        )
+        registry.write_meta(path, self)
+
+    # ---- search ----------------------------------------------------------
+    def _run(self, qs, q_masks, t_cs):
+        if q_masks is None:
+            q_masks = jnp.ones(qs.shape[:2], jnp.float32)
+        return self._search_fn(self._idx_dict, qs, q_masks, t_cs)
+
+    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False):
+        req = _as_request(q, q_mask, t_cs, with_diagnostics)
+        _reject_diagnostics(req, self.backend_name)
+        t = self.params.t_cs if req.t_cs is None else req.t_cs
+        mask = None if req.q_mask is None else req.q_mask[None]
+        t0 = time.perf_counter()
+        scores, pids = self._run(req.q[None], mask, t)
+        return _finish(
+            (scores[0], pids[0]),
+            backend=self.backend_name,
+            k=self.params.k,
+            t_cs=t,
+            t0=t0,
+        )
+
+    def search_batch(self, qs, q_masks=None, *, t_cs=None, with_diagnostics=False):
+        req = _as_request(qs, q_masks, t_cs, with_diagnostics)
+        _reject_diagnostics(req, self.backend_name)
+        t = self.params.t_cs if req.t_cs is None else req.t_cs
+        t0 = time.perf_counter()
+        out = self._run(req.q, req.q_mask, t)
+        return _finish(
+            out, backend=self.backend_name, k=self.params.k, t_cs=t, t0=t0
+        )
+
+    def describe(self) -> dict:
+        return dict(
+            backend=self.backend_name,
+            static=self.params.static_dict(),
+            dynamic=self.params.dynamic_dict(),
+            static_fields=STATIC_FIELDS,
+            dynamic_fields=DYNAMIC_FIELDS,
+            sharding=dict(
+                n_shards=self.n_shards,
+                docs_per_shard=self.docs_per_shard,
+                mesh=dict(self.mesh.shape),
+                candidate_cap_per_shard=min(
+                    self.params.candidate_cap, max(self.docs_per_shard, 2)
+                ),
+            ),
+            index=dict(
+                num_passages=self.n_shards * self.docs_per_shard,
+                dim=self._meta["dim"],
+                nbits=self._meta["nbits"],
+                doc_maxlen=self._meta["doc_maxlen"],
+            ),
+            compile=dict(trace_count=plaid_mod.trace_count()),
+        )

@@ -1,0 +1,132 @@
+"""String-keyed backend registry + the build / from_index / load factories.
+
+One construction surface for every engine::
+
+    r = retrieval.build(corpus_embs, backend="plaid")      # corpus -> index -> engine
+    r = retrieval.from_index(index, backend="vanilla")     # wrap an existing index
+    r.save(path)
+    r = retrieval.load(path)                               # backend recorded on disk
+
+Backends self-register with :func:`register`; later PRs add engines (GPU
+pallas, streaming-update index) by registering a new class — no call-site
+changes anywhere in serving/benchmarks/examples.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+from repro.retrieval.types import RetrieverConfig, Retriever, SearchParams
+
+_REGISTRY: dict[str, type] = {}
+
+_META_FILE = "retriever.json"
+
+
+def register(name: str):
+    """Class decorator: expose a Retriever implementation as ``name``."""
+
+    def deco(cls):
+        cls.backend_name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown retrieval backend {name!r}; "
+            f"registered: {list_backends()}"
+        ) from None
+
+
+def list_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def coerce_config(cfg: Any = None, **overrides) -> RetrieverConfig:
+    """Accept RetrieverConfig | backend name | SearchParams | None."""
+    if cfg is None:
+        cfg = RetrieverConfig()
+    elif isinstance(cfg, str):
+        cfg = RetrieverConfig(backend=cfg)
+    elif isinstance(cfg, SearchParams):
+        cfg = RetrieverConfig(params=cfg)
+    elif not isinstance(cfg, RetrieverConfig):
+        raise TypeError(
+            "cfg must be RetrieverConfig, backend name, SearchParams or "
+            f"None, got {type(cfg).__name__}"
+        )
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def build(corpus_embs, cfg=None, *, doc_lens=None, **overrides) -> Retriever:
+    """Corpus embeddings -> index -> ready Retriever.
+
+    ``corpus_embs``: list of (len_i, dim) arrays, or packed (Nt, dim) with
+    ``doc_lens``.  ``cfg``/``overrides``: see :func:`coerce_config`
+    (``backend=``, ``params=``, ``n_shards=``, ``index=``).
+    """
+    cfg = coerce_config(cfg, **overrides)
+    return get_backend(cfg.backend).build(corpus_embs, cfg, doc_lens=doc_lens)
+
+
+def from_index(index, cfg=None, **overrides) -> Retriever:
+    """Wrap an already-built ``PlaidIndex`` in any registered backend."""
+    cfg = coerce_config(cfg, **overrides)
+    return get_backend(cfg.backend).from_index(index, cfg)
+
+
+def load(path: str, backend: str | None = None, params=None) -> Retriever:
+    """Restore a Retriever saved with ``.save(path)``.
+
+    Backend and params are read from the ``retriever.json`` written at save
+    time; both can be overridden.  Plain ``indexer.save_index`` /
+    ``save_sharded`` directories (no ``retriever.json``) are sniffed from
+    their manifest and load as ``"plaid"`` / ``"plaid-sharded"``.
+    """
+    meta = read_meta(path)
+    if backend is None:
+        if meta is not None:
+            backend = meta["backend"]
+        else:
+            backend = _sniff_backend(path)
+    if params is None and meta is not None:
+        params = SearchParams(**meta["params"])
+    return get_backend(backend).load(path, params=params)
+
+
+# ---- persistence of facade-level metadata --------------------------------
+def write_meta(path: str, retriever) -> None:
+    with open(os.path.join(path, _META_FILE), "w") as f:
+        json.dump(
+            dict(
+                format_version=1,
+                backend=retriever.backend_name,
+                params=retriever.params.asdict(),
+            ),
+            f,
+        )
+
+
+def read_meta(path: str) -> dict | None:
+    p = os.path.join(path, _META_FILE)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def _sniff_backend(path: str) -> str:
+    manifest = os.path.join(path, "manifest.json")
+    if not os.path.exists(manifest):
+        raise FileNotFoundError(
+            f"{path!r} holds neither {_META_FILE!r} nor a manifest.json"
+        )
+    with open(manifest) as f:
+        return "plaid-sharded" if "n_shards" in json.load(f) else "plaid"

@@ -1,0 +1,172 @@
+"""Facade types: parameters, requests, results, and the Retriever protocol.
+
+The parameter model encodes the engine's compile discipline directly in the
+API (PLAID reproducibility study: `nprobe`/`t_cs`/`ndocs` interactions
+dominate the quality/latency tradeoff, so sweeps must be first-class):
+
+* **static caps** — shape-determining; changing one compiles a new XLA
+  program: ``k``, ``nprobe``, ``ndocs``, ``candidate_cap``, ``score_dtype``.
+* **dynamic scalars** — traced operands; changing one reuses the compiled
+  program: ``t_cs``.
+
+Every backend documents which of these it honours via ``describe()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+#: Facade-wide default for the stage 1-3 approximate-score dtype.  One
+#: documented default ("float32") shared by every backend; "bfloat16" is the
+#: TPU bandwidth optimisation (see repro.core.scoring.centroid_scores).
+DEFAULT_SCORE_DTYPE = "float32"
+
+#: SearchParams fields that key the compile cache (recompile on change).
+STATIC_FIELDS = ("k", "nprobe", "ndocs", "candidate_cap", "score_dtype")
+#: SearchParams fields that are traced (no recompile on change).
+DYNAMIC_FIELDS = ("t_cs",)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Backend-agnostic search parameters (paper Table 2 + engine caps)."""
+
+    # --- static caps: recompile on change -------------------------------
+    k: int = 10
+    nprobe: int = 1
+    ndocs: int = 256
+    candidate_cap: int = 4096
+    score_dtype: str = DEFAULT_SCORE_DTYPE
+    # --- dynamic scalars: traced, swept freely at serve time ------------
+    t_cs: float = 0.5
+
+    def replace(self, **changes) -> "SearchParams":
+        return dataclasses.replace(self, **changes)
+
+    def static_key(self) -> tuple:
+        """The compile-cache key: identical keys never recompile."""
+        return tuple(getattr(self, f) for f in STATIC_FIELDS)
+
+    def static_dict(self) -> dict:
+        return {f: getattr(self, f) for f in STATIC_FIELDS}
+
+    def dynamic_dict(self) -> dict:
+        return {f: getattr(self, f) for f in DYNAMIC_FIELDS}
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+#: Paper Table 2 settings, keyed by final k (facade mirror of
+#: repro.core.plaid.PAPER_PARAMS).
+PAPER_PARAMS = {
+    10: SearchParams(k=10, nprobe=1, t_cs=0.5, ndocs=256),
+    100: SearchParams(k=100, nprobe=2, t_cs=0.45, ndocs=1024),
+    1000: SearchParams(k=1000, nprobe=4, t_cs=0.4, ndocs=4096),
+}
+
+
+def params_for_k(k: int, candidate_cap: int = 8192) -> SearchParams:
+    base = PAPER_PARAMS.get(k, SearchParams(k=k))
+    return base.replace(candidate_cap=candidate_cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrieverConfig:
+    """Everything ``retrieval.build`` needs: backend choice + parameters.
+
+    ``index`` is forwarded to the core index builder (``num_centroids``,
+    ``nbits``, ``kmeans_iters``, ``seed``, ``ivf_list_cap``).  ``n_shards``
+    only applies to ``"plaid-sharded"``; ``None`` means one shard per
+    local device.
+    """
+
+    backend: str = "plaid"
+    params: SearchParams = SearchParams()
+    n_shards: int | None = None
+    index: dict = dataclasses.field(default_factory=dict)
+
+    def replace(self, **changes) -> "RetrieverConfig":
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One search call: a query (or batch) plus per-request dynamic knobs."""
+
+    q: Any  # (nq, dim) single query matrix, or (B, nq, dim) batch
+    q_mask: Any | None = None  # (nq,) / (B, nq); None = all tokens valid
+    t_cs: float | None = None  # dynamic override — never recompiles
+    with_diagnostics: bool = False  # per-stage survivor counts (one extra
+    # compile the first time it is flipped; static flag)
+
+    @property
+    def batched(self) -> bool:
+        return getattr(self.q, "ndim", 0) == 3
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Top-k result plus serving metadata.
+
+    Iterable as ``(scores, pids)`` so call sites migrating from the raw
+    engine tuples keep working: ``scores, pids = retriever.search(q)``.
+    """
+
+    scores: Any  # (k,) or (B, k)
+    pids: Any  # (k,) or (B, k) int32
+    backend: str
+    k: int
+    latency_ms: float | None = None
+    t_cs: float | None = None  # the dynamic threshold this search ran with
+    diagnostics: dict | None = None  # per-stage survivor counts (if requested)
+
+    def __iter__(self):
+        return iter((self.scores, self.pids))
+
+    def topk(self):
+        return self.scores, self.pids
+
+
+@runtime_checkable
+class Retriever(Protocol):
+    """The one engine API: everything serving/benchmarks/examples consume.
+
+    Implementations are registered by name ("vanilla", "plaid",
+    "plaid-pallas", "plaid-sharded", ...) in ``repro.retrieval.registry``;
+    construct them via ``retrieval.build`` / ``retrieval.from_index`` /
+    ``retrieval.load``.
+    """
+
+    backend_name: str
+    params: SearchParams
+
+    def search(
+        self,
+        q: Any,
+        q_mask: Any | None = None,
+        *,
+        t_cs: float | None = None,
+        with_diagnostics: bool = False,
+    ) -> SearchResult:
+        """One query matrix (nq, dim) -> top-k SearchResult."""
+        ...
+
+    def search_batch(
+        self,
+        qs: Any,
+        q_masks: Any | None = None,
+        *,
+        t_cs: float | None = None,
+        with_diagnostics: bool = False,
+    ) -> SearchResult:
+        """Query batch (B, nq, dim) -> batched top-k SearchResult."""
+        ...
+
+    def save(self, path: str) -> None:
+        """Persist index + retriever metadata; ``retrieval.load`` restores."""
+        ...
+
+    def describe(self) -> dict:
+        """Static-shape / compile-cache introspection + index stats."""
+        ...

@@ -5,6 +5,10 @@ them into fixed-size batches (padding the tail) so the jitted search runs at
 its compiled batch size, and tracks per-request latency percentiles.  A
 thread-safe queue + single dispatcher thread — the JAX compute itself is
 single-stream per device, which is exactly what a TPU serving binary does.
+
+The server takes any ``repro.retrieval.Retriever`` (facade backends return
+``SearchResult``) and also still accepts the raw core engines (plain
+``(scores, pids)`` tuples) during the deprecation window.
 """
 from __future__ import annotations
 
@@ -30,31 +34,72 @@ class BatchingServer:
 
     def __init__(
         self,
-        searcher,  # exposes search_batch(qs (B, nq, dim)) -> (scores, pids)
+        retriever,  # repro.retrieval.Retriever (or a raw core engine)
         batch_size: int = 16,
         max_wait_ms: float = 2.0,
     ):
-        self.searcher = searcher
+        self.retriever = retriever
+        self.searcher = retriever  # deprecated alias
         self.batch_size = batch_size
         self.max_wait = max_wait_ms / 1e3
         self._q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
+        self._lock = threading.Lock()  # guards _latencies and _expected_shape
         self._latencies: list[float] = []
+        # query contract: (nq, dim) float.  dim comes from the retriever's
+        # describe() when available; nq is fixed by the first request (the
+        # compiled batch stacks queries, so every request must match).
+        self._dim = None
+        describe = getattr(retriever, "describe", None)
+        if callable(describe):
+            try:
+                self._dim = describe().get("index", {}).get("dim")
+            except Exception:
+                self._dim = None
+        self._expected_shape: tuple | None = None
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
     # ---- client API ------------------------------------------------------
+    def _validate(self, q_emb: np.ndarray) -> np.ndarray:
+        q = np.asarray(q_emb)
+        if q.ndim != 2:
+            raise ValueError(
+                f"q_emb must be a (nq, dim) query matrix, got shape {q.shape}"
+            )
+        if not np.issubdtype(q.dtype, np.floating):
+            raise ValueError(f"q_emb must be floating point, got {q.dtype}")
+        if self._dim is not None and q.shape[1] != self._dim:
+            raise ValueError(
+                f"q_emb dim {q.shape[1]} != index dim {self._dim}"
+            )
+        with self._lock:
+            if self._expected_shape is None:
+                self._expected_shape = q.shape
+            elif q.shape != self._expected_shape:
+                raise ValueError(
+                    f"q_emb shape {q.shape} != compiled request shape "
+                    f"{self._expected_shape} (the batcher stacks requests; "
+                    "pad or truncate queries to a fixed nq)"
+                )
+        return q
+
     def submit(self, q_emb: np.ndarray) -> "queue.Queue[RetrievalResult]":
-        """Non-blocking: returns a single-slot queue with the result."""
+        """Non-blocking: returns a single-slot queue with the result.
+
+        Raises ``ValueError`` immediately on malformed queries instead of
+        poisoning the dispatcher's batch."""
+        q = self._validate(q_emb)
         out: queue.Queue = queue.Queue(maxsize=1)
-        self._q.put((q_emb, time.perf_counter(), out))
+        self._q.put((q, time.perf_counter(), out))
         return out
 
     def search(self, q_emb: np.ndarray, timeout: float = 30.0) -> RetrievalResult:
         return self.submit(q_emb).get(timeout=timeout)
 
     def stats(self) -> dict:
-        lat = np.asarray(self._latencies) * 1e3
+        with self._lock:
+            lat = np.asarray(self._latencies) * 1e3
         if not len(lat):
             return {}
         return {
@@ -93,12 +138,17 @@ class BatchingServer:
         if n < self.batch_size:  # pad the tail to the compiled batch size
             pad = np.repeat(qs[-1:], self.batch_size - n, axis=0)
             qs = np.concatenate([qs, pad])
-        scores, pids = self.searcher.search_batch(jnp.asarray(qs))
+        out = self.retriever.search_batch(jnp.asarray(qs))
+        scores, pids = out  # SearchResult iterates as (scores, pids)
         jax.block_until_ready(pids)
         now = time.perf_counter()
         scores = np.asarray(scores)
         pids = np.asarray(pids)
-        for i, (_, t0, out) in enumerate(batch):
+        results = []
+        for i, (_, t0, out_q) in enumerate(batch):
             lat = now - t0
-            self._latencies.append(lat)
-            out.put(RetrievalResult(pids[i], scores[i], lat * 1e3))
+            results.append((lat, out_q, RetrievalResult(pids[i], scores[i], lat * 1e3)))
+        with self._lock:
+            self._latencies.extend(lat for lat, _, _ in results)
+        for _, out_q, res in results:
+            out_q.put(res)

@@ -10,6 +10,8 @@ from repro.distributed import sharding
 from repro.launch import cells as cells_mod
 from repro.launch.mesh import make_local_mesh
 
+pytestmark = pytest.mark.slow  # one real train/serve step per arch cell
+
 ALL_CELLS = [
     (arch, cell)
     for arch in configs.ARCH_IDS

@@ -12,6 +12,8 @@ import pytest
 from repro.distributed import sharding
 from repro.launch.mesh import make_local_mesh
 
+pytestmark = pytest.mark.slow  # subprocess runs with fake device counts
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -7,7 +7,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container images without hypothesis: skip only the
+    # property-based tests; the rest of the module still runs
+    import pytest as _pytest
+
+    def given(*_a, **_k):
+        return lambda f: _pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
 
 from repro.distributed import compression as comp
 from repro.training import checkpoint as CK
