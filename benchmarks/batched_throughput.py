@@ -1,0 +1,54 @@
+"""Batched-throughput benchmark: queries/sec vs batch size.
+
+The PLAID reproducibility study (MacAvaney & Macdonald, 2024) argues that
+throughput under multi-query load — not single-query latency — is where
+engine design dominates.  This benchmark sweeps the batch size and compares
+the batch-first stage pipeline (``core.pipeline.run_pipeline``) against the
+pre-refactor vmap-of-``_search`` oracle on the same index and queries, so
+the batching win (one C·Qᵀ matmul + one shared candidate gather per batch)
+is measured directly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plaid
+
+from benchmarks import common
+
+N_DOCS = 8000
+BATCH_SIZES = (1, 4, 16, 64)
+
+
+def _qps(fn, qs, trials: int) -> float:
+    jax.block_until_ready(fn(qs))  # warmup/compile
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(qs))
+        best = min(best, time.perf_counter() - t0)
+    return qs.shape[0] / best
+
+
+def run(emit, dry: bool = False):
+    docs, index = common.corpus_and_index(common.scaled(N_DOCS, dry, 300))
+    trials = 1 if dry else 3
+    batch_sizes = (1, 4, 8) if dry else BATCH_SIZES
+    engine = plaid.PlaidEngine(index, plaid.params_for_k(10))
+    qs_all, _ = common.queries(docs, max(batch_sizes))
+
+    for B in batch_sizes:
+        qs = jnp.asarray(qs_all[:B])
+        qps_pipe = _qps(lambda q: engine.search_batch(q)[1], qs, trials)
+        qps_vmap = _qps(lambda q: engine.search_batch_oracle(q)[1], qs, trials)
+        emit(
+            "batched_throughput",
+            f"B{B}",
+            batch=B,
+            qps_pipeline=round(qps_pipe, 1),
+            qps_vmap_oracle=round(qps_vmap, 1),
+            speedup=round(qps_pipe / qps_vmap, 3),
+        )

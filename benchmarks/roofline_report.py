@@ -1,6 +1,12 @@
 """Render the dry-run JSONL into the EXPERIMENTS.md roofline tables.
 
   PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun.jsonl
+
+Also registered in ``benchmarks.run`` (``--only roofline``): ``run(emit)``
+lowers the batch-first retrieval pipeline itself and pushes the optimized
+HLO through ``repro.launch.hlo_analysis`` — per-batch-size flops / HBM
+bytes / dot counts and the roofline-dominant term, without touching a
+results file.
 """
 from __future__ import annotations
 
@@ -91,6 +97,53 @@ def main():
         for r in recs:
             if r["status"] == "fail":
                 print(f"- {r['arch']}/{r['shape']}/{r['mesh']}: {r['error'][:300]}")
+
+
+def run(emit, dry: bool = False):
+    """Cost-model the batched retrieval pipeline (HLO roofline analysis)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import pipeline, plaid
+    from repro.launch import hlo_analysis
+
+    from benchmarks import common
+
+    docs, index = common.corpus_and_index(common.scaled(4000, dry, 200))
+    params = plaid.PlaidEngine(index, plaid.params_for_k(10))._pipeline_params()
+    dim = index.dim
+    nq = 16
+    rng = np.random.default_rng(0)
+    for B in (1, 8) if dry else (1, 8, 32):
+        qs = jnp.asarray(rng.normal(size=(B, nq, dim)).astype(np.float32))
+        lowered = pipeline.run_pipeline_jit.lower(
+            index, qs, jnp.ones((B, nq), jnp.float32), jnp.float32(0.45),
+            params=params,
+        )
+        cost = hlo_analysis.analyze(lowered.compile().as_text())
+        # useful flops: the stage-1 batch matmul + stage-4 exact MaxSim
+        n3 = min(max(params.ndocs // 4, params.k), params.ndocs)
+        model_flops = (
+            2.0 * index.num_centroids * dim * B * nq
+            + 2.0 * B * n3 * index.doc_maxlen * dim * nq
+        )
+        terms = hlo_analysis.roofline_terms(
+            per_chip_flops=cost.flops,
+            per_chip_bytes=cost.hbm_bytes,
+            per_chip_coll_bytes=cost.coll_bytes,
+            model_flops=model_flops,
+            n_chips=1,
+        )
+        emit(
+            "roofline_pipeline",
+            f"B{B}",
+            batch=B,
+            dots=cost.dot_count,
+            hlo_gflops=round(cost.flops / 1e9, 3),
+            hbm_mb=round(cost.hbm_bytes / 1e6, 1),
+            dominant=terms.dominant,
+            useful_ratio=round(terms.useful_ratio, 3),
+        )
 
 
 if __name__ == "__main__":

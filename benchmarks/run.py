@@ -19,6 +19,8 @@ BENCHES = [
     "fig6_ablation",
     "fig7_scaling",
     "fig8_parallel",
+    "batched_throughput",  # q/s vs batch size: pipeline vs vmap oracle
+    "roofline_report",  # HLO cost model of the batched pipeline
 ]
 
 

@@ -1,0 +1,24 @@
+"""Repo-wide numeric constants shared across layers.
+
+Single source of truth for values that MUST agree between the reference
+(pure-jnp) scoring ops, the Pallas kernels, and the engine caps — a kernel
+whose sentinel drifts from the reference silently corrupts rankings, so the
+kernel modules import these instead of redefining them (tested in
+``tests/test_pipeline.py``).
+"""
+from __future__ import annotations
+
+#: Sentinel score for pruned / invalid entries.  Cosine scores live in
+#: ~[-1, 1]; -1e4 is far below any real score yet small enough that
+#: ``nq * NEG`` stays finite in float32 accumulations.
+NEG = -1e4
+
+#: Default stage-1 candidate bound (C_max): the static cap on the number of
+#: unique passages stage 1 may surface.  One value everywhere — the
+#: ``SearchParams`` dataclasses and every ``params_for_k`` helper derive
+#: from this constant (a 4096/8192 split between the two used to silently
+#: change engine shapes depending on the construction path).  8192 keeps
+#: stage-2 pruning meaningful for the largest paper preset (k=1000 has
+#: ndocs=4096; a cap equal to ndocs would make stage 2 a no-op and let
+#: stage 1 truncate the IVF union arbitrarily).
+DEFAULT_CANDIDATE_CAP = 8192

@@ -14,8 +14,6 @@ state exists.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -31,7 +29,7 @@ try:  # jax >= 0.8: public API; check_vma replaces check_rep
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
-from repro.core import plaid
+from repro.core import pipeline, plaid
 from repro.core.index import PlaidIndex
 from repro.distributed import topk as dtopk
 
@@ -214,18 +212,9 @@ def make_sharded_search(
     rep = P()
     index_specs = _index_spec_tree(doc, rep)
 
-    kw = dict(
-        k=params.k,
-        nprobe=params.nprobe,
-        # NOT clamped to candidate_cap: _search clamps stage-2's keep (n2)
-        # itself but derives stage-3's keep from the raw ndocs//4 — pre-
-        # clamping here would silently shrink stage 3.
-        ndocs=params.ndocs,
-        candidate_cap=params.candidate_cap,
-        impl=params.impl,
-        score_dtype=params.score_dtype,
-    )
-
+    # NOT clamped to candidate_cap here: the pipeline clamps stage-2's keep
+    # (n2) itself but derives stage-3's keep from the raw ndocs//4 — pre-
+    # clamping would silently shrink stage 3.
     meta = dict(
         dim=128, nbits=2, doc_maxlen=128, ivf_list_cap=256, eivf_list_cap=512
     )
@@ -234,17 +223,11 @@ def make_sharded_search(
     def local_search(index_dict, qs, q_masks, t_cs):
         axis = ax[0] if len(ax) == 1 else ax
         index_local = PlaidIndex(**index_dict, **meta)
-        fn = functools.partial(plaid._search.__wrapped__, **kw)
-        # §Perf S1: one batched centroid matmul for the whole query batch —
-        # the (K, d) centroid matrix streams from HBM once, not once per
-        # query inside the vmap.
-        s_cq_all = jnp.einsum(
-            "kd,bqd->bkq",
-            index_local.centroids.astype(jnp.float32),
-            qs.astype(jnp.float32),
-        )
-        scores, pids = jax.vmap(fn, in_axes=(None, 0, 0, 0, None))(
-            index_local, qs, q_masks, s_cq_all, t_cs
+        # The batch-first pipeline per shard: one C.Q^T matmul and one
+        # shared candidate-token gather for the whole query batch (§Perf
+        # S1) — the shard's centroid matrix streams from HBM once.
+        scores, pids = pipeline.run_pipeline_impl(
+            index_local, qs, q_masks, t_cs, params=params
         )  # (B, k) per shard
 
         def merge(s, p):

@@ -1,0 +1,323 @@
+"""Batch-first PLAID stage pipeline: composable stages over a query batch.
+
+The monolithic single-query ``plaid._search`` served batches by ``jax.vmap``
+— every lane redundantly recomputed the stage-1 ``C·Qᵀ`` score matrix,
+re-gathered overlapping candidate doc tokens, and launched per-lane kernels.
+This module decomposes the 4-stage pipeline (paper Fig. 5) into explicitly
+batched stage functions; ``run_pipeline`` is the one jit entry point for
+B >= 1 (B = 1 is a squeeze at the caller, not a separate code path):
+
+``stage1_scores_batched``
+    ONE ``C·Qᵀ`` matmul for the whole (B, nq) query batch — the (K, d)
+    centroid matrix streams from HBM once per batch, and the HLO contains
+    exactly one stage-1 dot (regression-guarded via ``launch.hlo_analysis``).
+``candidate_generation_batched``
+    Per-lane top-``nprobe`` probe + IVF union, batched over B.
+``gather_candidate_tokens_shared``
+    ONE doc-token gather for the whole batch: lanes' candidate sets are
+    deduplicated into a shared sorted pool, gathered once, and re-expanded
+    per lane — candidates common across the batch are fetched once.
+``centroid_interaction_batched`` / ``decompress_score_batched``
+    Stages 2–4 over (B, cap) candidate blocks; with ``impl="pallas"`` these
+    dispatch to the batched-grid kernels (``repro.kernels.ops``).
+
+Compile discipline matches ``_search``: shape caps (``k``, ``nprobe``,
+``ndocs``, ``candidate_cap``) and codegen choices (``impl``,
+``score_dtype``) are static; the pruning threshold ``t_cs`` is TRACED, so
+sweeping it at serve time never recompiles.  ``params.t_cs`` is normalized
+out of the jit cache key — only the per-call traced value matters.
+
+The old vmap-of-``_search`` path survives as
+``plaid.PlaidEngine.search_batch_oracle`` — the numerical oracle that
+``tests/test_pipeline.py`` compares against until it is deleted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.constants import NEG
+from repro.core import residual_codec as rc
+from repro.core import scoring
+from repro.core.index import PlaidIndex
+
+#: int32 key standing in for the -1 "padded slot" sentinel wherever a SORTED
+#: order is needed (pool construction): real pids < num_passages, so the max
+#: int32 can never collide and sorts after every real pid.
+_PAD_KEY = jnp.iinfo(jnp.int32).max
+
+_N_TRACES = 0
+
+
+def trace_count() -> int:
+    """Number of times the batched pipeline has been (re)traced/compiled."""
+    return _N_TRACES
+
+
+# --------------------------------------------------------------------------
+# Stage 1 — batched query-centroid scores + candidate generation
+# --------------------------------------------------------------------------
+def stage1_scores_batched(
+    index: PlaidIndex, qs: jax.Array, score_dtype: str = "float32"
+) -> jax.Array:
+    """(B, nq, d) queries -> (B, K, nq) score tensor via ONE ``C·Qᵀ`` dot.
+
+    The batch is flattened into the matmul's N dimension — (K, d) x
+    (d, B*nq) — so XLA emits a single dot and the centroid matrix is read
+    once per batch, not once per lane (§Perf S1).
+    """
+    B, nq, d = qs.shape
+    C = index.centroids.astype(jnp.float32)
+    flat = qs.astype(jnp.float32).reshape(B * nq, d)
+    s = C @ flat.T  # (K, B*nq) — the one stage-1 dot
+    s = s.reshape(C.shape[0], B, nq).transpose(1, 0, 2)  # (B, K, nq)
+    return s.astype(jnp.dtype(score_dtype))
+
+
+def candidate_generation_batched(
+    index: PlaidIndex, s_cq: jax.Array, nprobe: int, candidate_cap: int
+) -> jax.Array:
+    """(B, K, nq) scores -> (B, candidate_cap) sorted unique pids, -1 pad.
+
+    Identical per-lane semantics to ``plaid.candidate_generation`` (same
+    top-k tie-breaking, same IVF walk), batched over B.
+    """
+    B = s_cq.shape[0]
+    _, cids = jax.lax.top_k(jnp.swapaxes(s_cq, 1, 2), nprobe)  # (B, nq, np)
+    cids = cids.reshape(B, -1)  # (B, nq*nprobe)
+    starts = index.ivf_offsets[cids]
+    lens = index.ivf_lens[cids]
+    pos = jnp.arange(index.ivf_list_cap, dtype=jnp.int32)
+    idx = starts[..., None] + pos[None, None, :]
+    valid = pos[None, None, :] < lens[..., None]
+    idx = jnp.where(valid, idx, 0)
+    pids = jnp.where(valid, index.ivf_pids[idx], -1)  # (B, nq*np, cap)
+    return jax.vmap(
+        functools.partial(jnp.unique, size=candidate_cap, fill_value=-1)
+    )(pids.reshape(B, -1))
+
+
+# --------------------------------------------------------------------------
+# Shared candidate-token gather
+# --------------------------------------------------------------------------
+def gather_candidate_tokens_shared(
+    index: PlaidIndex, candidates: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """One doc-token gather for the whole batch's candidate union.
+
+    candidates: (B, cap) per-lane sorted unique pids (-1 pad).  The lanes'
+    sets are merged into one sorted pool of static size B*cap (-1 remapped
+    to ``_PAD_KEY`` so the pool stays sorted); the packed codes are gathered
+    from HBM once for the pool, then re-expanded per lane through the cheap
+    int32 position map.  Candidates shared across lanes — the common case
+    under correlated traffic — are fetched exactly once.
+
+    Returns (codes (B, cap, L) with -1 pad, tok_valid (B, cap, L) bool),
+    bitwise identical to per-lane ``scoring.gather_doc_tokens`` output.
+    """
+    B, cap = candidates.shape
+    keyed = jnp.where(candidates >= 0, candidates, _PAD_KEY)
+    pool = jnp.unique(keyed.reshape(-1), size=B * cap, fill_value=_PAD_KEY)
+    pos = jnp.searchsorted(pool, keyed).astype(jnp.int32)  # (B, cap)
+    pool_pids = jnp.where(pool != _PAD_KEY, pool, -1).astype(jnp.int32)
+    codes_pool, tok_valid_pool = scoring.gather_doc_tokens(
+        index.codes,
+        index.doc_offsets,
+        index.doc_lens,
+        pool_pids,
+        index.doc_maxlen,
+        fill=-1,
+    )
+    return codes_pool[pos], tok_valid_pool[pos]
+
+
+# --------------------------------------------------------------------------
+# Stages 2-3 — batched centroid interaction (reference path)
+# --------------------------------------------------------------------------
+def centroid_interaction_batched(
+    s_cq: jax.Array,  # (B, K, nq)
+    codes: jax.Array,  # (B, nd, L) i32, -1 pad
+    q_mask: jax.Array | None = None,  # (B, nq)
+    keep_centroid: jax.Array | None = None,  # (B, K) bool
+) -> jax.Array:
+    """Batched ``scoring.centroid_interaction`` (same op order per lane,
+    so results are bitwise identical to the vmap'd single-query path).
+    Returns (B, nd) approximate scores."""
+    B, nd, L = codes.shape
+    valid = codes >= 0
+    safe = jnp.where(valid, codes, 0)
+    tok_scores = jnp.take_along_axis(
+        s_cq, safe.reshape(B, nd * L, 1), axis=1
+    ).reshape(B, nd, L, -1)  # (B, nd, L, nq)
+    if keep_centroid is not None:
+        kept = jnp.take_along_axis(
+            keep_centroid, safe.reshape(B, nd * L), axis=1
+        ).reshape(B, nd, L)
+        valid = valid & kept
+    tok_scores = jnp.where(
+        valid[..., None], tok_scores, jnp.asarray(NEG, tok_scores.dtype)
+    )
+    per_q = tok_scores.max(axis=2).astype(jnp.float32)  # (B, nd, nq)
+    per_q = jnp.maximum(per_q, 0.0)
+    if q_mask is not None:
+        per_q = per_q * q_mask[:, None, :]
+    return per_q.sum(axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Stage 4 — batched residual decompression + exact MaxSim (reference path)
+# --------------------------------------------------------------------------
+def decompress_score_batched(
+    index: PlaidIndex,
+    qs: jax.Array,  # (B, nq, d)
+    q_masks: jax.Array,  # (B, nq)
+    codes_blk: jax.Array,  # (B, nd, L) i32, -1 pad
+    res_blk: jax.Array,  # (B, nd, L, pd) u8
+    tok_valid: jax.Array,  # (B, nd, L) bool
+) -> jax.Array:
+    """Batched ``plaid.decompress_and_score_ref``: (B, nd) exact scores."""
+    codec = index.codec
+    safe = jnp.where(codes_blk >= 0, codes_blk, 0)
+    emb = index.centroids[safe] + rc.decompress_residuals(codec, res_blk)
+    scores = jnp.einsum("bqd,bntd->bnqt", qs, emb)  # (B, nd, nq, L)
+    scores = jnp.where(tok_valid[:, :, None, :], scores, NEG)
+    per_q = scores.max(axis=-1)  # (B, nd, nq)
+    per_q = per_q * q_masks[:, None, :]
+    return per_q.sum(axis=-1)
+
+
+# --------------------------------------------------------------------------
+# The pipeline driver — one jit entry point for B >= 1
+# --------------------------------------------------------------------------
+def run_pipeline_impl(
+    index: PlaidIndex,
+    qs: jax.Array,  # (B, nq, dim)
+    q_masks: jax.Array,  # (B, nq)
+    t_cs: jax.Array,  # TRACED scalar: changing it never recompiles
+    *,
+    params,  # plaid.SearchParams (static; t_cs field ignored)
+    diag: bool = False,
+    interpret: bool | None = None,  # Pallas mode; None = platform default
+):
+    """Unjitted pipeline body — composable under ``shard_map`` / outer jits
+    (``engine_sharded`` runs this per shard).  Callers outside a tracing
+    context use ``run_pipeline``.
+    """
+    global _N_TRACES
+    _N_TRACES += 1
+    p = params
+    B = qs.shape[0]
+    if p.impl == "pallas":
+        from repro.kernels import ops as K
+
+        interaction = functools.partial(
+            K.centroid_interaction_batched, interpret=interpret
+        )
+        decompress_score = functools.partial(
+            K.decompress_and_score_batched, interpret=interpret
+        )
+    else:
+        interaction = centroid_interaction_batched
+        decompress_score = None
+
+    # ---- Stage 1: one batched C.Q^T + per-lane candidate generation
+    s_cq = stage1_scores_batched(index, qs, p.score_dtype)  # (B, K, nq)
+    candidates = candidate_generation_batched(
+        index, s_cq, p.nprobe, p.candidate_cap
+    )  # (B, cap)
+
+    # ---- Stage 2: pruned centroid interaction over the shared gather
+    keep = scoring.prune_mask(s_cq, t_cs)  # (B, K)
+    codes_blk, tok_valid = gather_candidate_tokens_shared(index, candidates)
+    approx2 = interaction(s_cq, codes_blk, q_masks, keep)  # (B, cap)
+    approx2 = jnp.where(candidates >= 0, approx2, NEG)
+    n2 = min(p.ndocs, p.candidate_cap)
+    _, idx2 = jax.lax.top_k(approx2, n2)  # (B, n2)
+
+    # ---- Stage 3: full centroid interaction on the survivors
+    codes3 = jnp.take_along_axis(codes_blk, idx2[..., None], axis=1)
+    cand2 = jnp.take_along_axis(candidates, idx2, axis=1)
+    approx3 = interaction(s_cq, codes3, q_masks, None)
+    approx3 = jnp.where(cand2 >= 0, approx3, NEG)
+    n3 = min(max(p.ndocs // 4, p.k), n2)
+    _, idx3 = jax.lax.top_k(approx3, n3)  # (B, n3)
+    final_pids = jnp.take_along_axis(cand2, idx3, axis=1)  # (B, n3)
+
+    # ---- Stage 4: residual decompression + exact MaxSim
+    codes4 = jnp.take_along_axis(codes3, idx3[..., None], axis=1)
+    tok_valid3 = jnp.take_along_axis(tok_valid, idx2[..., None], axis=1)
+    tok_valid4 = jnp.take_along_axis(tok_valid3, idx3[..., None], axis=1)
+    res_blk, _ = scoring.gather_doc_tokens(
+        index.residuals,
+        index.doc_offsets,
+        index.doc_lens,
+        final_pids.reshape(-1),
+        index.doc_maxlen,
+        fill=jnp.uint8(0),
+    )  # one gather for all B*n3 finalists
+    res_blk = res_blk.reshape(B, n3, index.doc_maxlen, -1)
+    if decompress_score is None:
+        exact = decompress_score_batched(
+            index, qs, q_masks, codes4, res_blk, tok_valid4
+        )
+    else:
+        exact = decompress_score(
+            qs,
+            q_masks,
+            codes4,
+            res_blk,
+            tok_valid4,
+            index.centroids,
+            index.weights,
+            nbits=index.nbits,
+        )
+    exact = jnp.where(final_pids >= 0, exact, NEG)
+    kk = min(p.k, n3)
+    top_scores, idxk = jax.lax.top_k(exact, kk)  # (B, kk)
+    top_pids = jnp.take_along_axis(final_pids, idxk, axis=1)
+    if diag:
+        diagnostics = dict(
+            stage1_candidates=(candidates >= 0).sum(axis=1),
+            stage2_kept_centroids=keep.sum(axis=1),
+            stage3_survivors=(final_pids >= 0).sum(axis=1),
+        )
+        return top_scores, top_pids, diagnostics
+    return top_scores, top_pids
+
+
+run_pipeline_jit = jax.jit(
+    run_pipeline_impl, static_argnames=("params", "diag", "interpret")
+)
+
+
+def run_pipeline(
+    index: PlaidIndex,
+    qs: jax.Array,
+    q_masks: jax.Array,
+    t_cs,
+    params,
+    *,
+    diag: bool = False,
+    interpret: bool | None = None,
+):
+    """The one compiled entry point for batched (B >= 1) PLAID search.
+
+    qs: (B, nq, dim); q_masks: (B, nq).  Returns ((B, k) scores, (B, k)
+    pids[, diagnostics dict of (B,) counters]).  ``params`` is a
+    ``plaid.SearchParams`` (static: one compile per distinct cap/impl
+    combination); its ``t_cs`` field is normalized out of the cache key —
+    only the traced ``t_cs`` argument matters, so threshold sweeps are free.
+    """
+    params = dataclasses.replace(params, t_cs=0.0)  # not a cache key
+    return run_pipeline_jit(
+        index,
+        qs,
+        q_masks,
+        jnp.asarray(t_cs, jnp.float32),
+        params=params,
+        diag=diag,
+        interpret=interpret,
+    )

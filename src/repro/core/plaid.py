@@ -26,6 +26,8 @@ import warnings
 import jax
 import jax.numpy as jnp
 
+from repro.constants import DEFAULT_CANDIDATE_CAP
+from repro.core import pipeline
 from repro.core import residual_codec as rc
 from repro.core import scoring
 from repro.core.index import PlaidIndex
@@ -41,8 +43,15 @@ class SearchParams:
     nprobe: int = 1
     t_cs: float = 0.5
     ndocs: int = 256
-    candidate_cap: int = 4096  # C_max: static bound on |stage-1 candidates|
-    impl: str = "ref"  # "ref" (pure jnp) | "pallas" (kernels, interpret on CPU)
+    #: C_max: static bound on |stage-1 candidates|.  The single source of
+    #: truth is ``repro.constants.DEFAULT_CANDIDATE_CAP`` — this default,
+    #: the facade's ``retrieval.SearchParams``, and every ``params_for_k``
+    #: helper all derive from it (they used to disagree: 4096 here vs a
+    #: silent 8192 override in ``params_for_k``; 8192 won — see the
+    #: constant's rationale).  Always clamped to the corpus size at engine
+    #: construction.
+    candidate_cap: int = DEFAULT_CANDIDATE_CAP
+    impl: str = "ref"  # "ref" (pure jnp) | "pallas" (platform-aware kernels)
     score_dtype: str = "float32"  # stage 1-3 approximate-score dtype. §Perf
     # S2: "bfloat16" halves score-matrix + gather traffic on TPU with no
     # measured recall change; default stays f32 (everywhere, including
@@ -61,8 +70,12 @@ PAPER_PARAMS = {
 }
 
 
-def params_for_k(k: int, candidate_cap: int = 8192, impl: str = "ref"):
+def params_for_k(k: int, candidate_cap: int | None = None, impl: str = "ref"):
+    """Paper Table 2 params for ``k``.  ``candidate_cap=None`` keeps the
+    one documented default (``repro.constants.DEFAULT_CANDIDATE_CAP``)."""
     base = PAPER_PARAMS.get(k, SearchParams(k=k))
+    if candidate_cap is None:
+        candidate_cap = DEFAULT_CANDIDATE_CAP
     return dataclasses.replace(base, candidate_cap=candidate_cap, impl=impl)
 
 
@@ -113,8 +126,10 @@ _N_TRACES = 0  # incremented at trace time; one retrace == one XLA compile.
 
 
 def trace_count() -> int:
-    """Number of times the search pipeline has been (re)traced/compiled."""
-    return _N_TRACES
+    """Total (re)traces/compiles of the search path: the batched pipeline
+    (``core.pipeline.run_pipeline``, the serving entry point) plus the
+    legacy single-query ``_search`` oracle."""
+    return _N_TRACES + pipeline.trace_count()
 
 
 @functools.partial(
@@ -145,10 +160,10 @@ def _search(
     if impl == "pallas":
         from repro.kernels import ops as K
 
-        interaction = functools.partial(K.centroid_interaction, interpret=True)
-        decompress_score = functools.partial(
-            K.decompress_and_score, interpret=True
-        )
+        # interpret mode is platform-aware (repro.kernels.dispatch):
+        # interpreter off-TPU, Mosaic lowering on TPU.
+        interaction = K.centroid_interaction
+        decompress_score = K.decompress_and_score
     else:
         interaction = scoring.centroid_interaction
         decompress_score = None
@@ -230,21 +245,35 @@ class PlaidEngine:
     The public, backend-agnostic API is ``repro.retrieval``; this class is
     the implementation the ``"plaid"`` / ``"plaid-pallas"`` backends wrap.
     ``search``/``search_batch`` return raw ``(scores, pids)`` tuples.
+
+    Both entry points run the batch-first ``core.pipeline`` program —
+    ``search`` is the B=1 squeeze of ``search_batch``, not a separate code
+    path.  ``search_batch_oracle`` keeps the pre-refactor vmap-of-
+    ``_search`` semantics alive as the numerical oracle for tests.
     """
 
     def __init__(self, index: PlaidIndex, params: SearchParams | None = None):
         self.index = index
         self.params = params or SearchParams()
 
-    def _kwargs(self):
-        """Static (compile-cache-keyed) kwargs; ``t_cs`` is passed per call."""
+    def _pipeline_params(self) -> SearchParams:
+        """Corpus-clamped static params — the ONE place the caps are
+        clamped (both the pipeline and the ``_search`` oracle derive from
+        it, so they cannot diverge)."""
         p = self.params
         cap = min(p.candidate_cap, max(self.index.num_passages, 2))
+        return dataclasses.replace(
+            p, candidate_cap=cap, ndocs=min(p.ndocs, cap)
+        )
+
+    def _kwargs(self):
+        """Static (compile-cache-keyed) kwargs; ``t_cs`` is passed per call."""
+        p = self._pipeline_params()
         return dict(
             k=p.k,
             nprobe=p.nprobe,
-            ndocs=min(p.ndocs, cap),
-            candidate_cap=cap,
+            ndocs=p.ndocs,
+            candidate_cap=p.candidate_cap,
             impl=p.impl,
             score_dtype=p.score_dtype,
         )
@@ -256,12 +285,26 @@ class PlaidEngine:
         *,
         t_cs: float | None = None,
         diag: bool = False,
+        interpret: bool | None = None,
     ):
         """q: (nq, dim) one query matrix -> (scores (k,), pids (k,))."""
         if q_mask is None:
             q_mask = jnp.ones(q.shape[0], jnp.float32)
         t = self.params.t_cs if t_cs is None else t_cs
-        return _search(self.index, q, q_mask, None, t, diag=diag, **self._kwargs())
+        out = pipeline.run_pipeline(
+            self.index,
+            q[None],
+            q_mask[None],
+            t,
+            self._pipeline_params(),
+            diag=diag,
+            interpret=interpret,
+        )
+        if diag:
+            scores, pids, diagnostics = out
+            return scores[0], pids[0], {k: v[0] for k, v in diagnostics.items()}
+        scores, pids = out
+        return scores[0], pids[0]
 
     def search_batch(
         self,
@@ -270,8 +313,36 @@ class PlaidEngine:
         *,
         t_cs: float | None = None,
         diag: bool = False,
+        interpret: bool | None = None,
     ):
         """qs: (B, nq, dim) -> (scores (B, k), pids (B, k))."""
+        if q_masks is None:
+            q_masks = jnp.ones(qs.shape[:2], jnp.float32)
+        t = self.params.t_cs if t_cs is None else t_cs
+        return pipeline.run_pipeline(
+            self.index,
+            qs,
+            q_masks,
+            t,
+            self._pipeline_params(),
+            diag=diag,
+            interpret=interpret,
+        )
+
+    def search_batch_oracle(
+        self,
+        qs: jax.Array,
+        q_masks: jax.Array | None = None,
+        *,
+        t_cs: float | None = None,
+        diag: bool = False,
+    ):
+        """Pre-refactor path: ``jax.vmap`` over the single-query monolith.
+
+        Kept as the numerical oracle the batched pipeline is validated
+        against (``tests/test_pipeline.py``); scheduled for deletion once
+        the pipeline has survived a release cycle.  Do not add callers.
+        """
         if q_masks is None:
             q_masks = jnp.ones(qs.shape[:2], jnp.float32)
         t = self.params.t_cs if t_cs is None else t_cs

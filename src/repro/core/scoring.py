@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG = -1e4  # sentinel score for pruned / invalid entries (cosine scores ~[-1,1])
+from repro.constants import NEG  # sentinel score for pruned / invalid entries
 
 
 def maxsim(q: jax.Array, d: jax.Array, q_mask=None, d_mask=None) -> jax.Array:

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG = -1e4
+from repro.constants import NEG
+from repro.kernels.dispatch import resolve_interpret
 
 
 def _unpack(packed_u32: jax.Array, nbits: int) -> jax.Array:
@@ -56,8 +57,9 @@ def decompress_residuals_pallas(
     *,
     nbits: int,
     row_block: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     n, pd = packed.shape
     vpb = 8 // nbits
     pad = (-n) % row_block
@@ -125,8 +127,9 @@ def decompress_and_score_pallas(
     *,
     nbits: int,
     doc_block: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     nd, L, pd = packed_res.shape
     K, d = centroids.shape
     nq = q.shape[0]
@@ -161,3 +164,93 @@ def decompress_and_score_pallas(
         weights.astype(jnp.float32)[:, None],
     )
     return out[:nd, 0]
+
+
+# --------------------------------------------------------------------------
+# Kernel 3: batched fused decompress + exact MaxSim, grid (B, doc_blocks)
+# --------------------------------------------------------------------------
+def _decompress_score_batched_kernel(
+    q_ref,  # (1, nq, d) f32 — this lane's query tile, resident per lane
+    qmask_ref,  # (1, 1, nq)
+    codes_ref,  # (1, BD, L) i32 block
+    res_ref,  # (1, BD, L*pd) u8 block
+    valid_ref,  # (1, BD, L) i32 block
+    cent_ref,  # (K, d) f32 — resident across the WHOLE grid (batch + docs)
+    weights_ref,  # (2^b, 1)
+    out_ref,  # (1, BD, 1)
+    *,
+    nbits: int,
+    L: int,
+):
+    q = q_ref[0]  # (nq, d)
+    nq, d = q.shape
+    codes = codes_ref[0]  # (BD, L)
+    bd = codes.shape[0]
+    pd = res_ref.shape[2] // L
+    packed = res_ref[0].reshape(bd * L, pd).astype(jnp.int32)
+    idx = _unpack(packed, nbits)  # (BD*L, d)
+    w = weights_ref[...][:, 0]
+    resid = jnp.zeros(idx.shape, jnp.float32)
+    for b in range(w.shape[0]):
+        resid = jnp.where(idx == b, w[b], resid)
+    safe = jnp.where(codes >= 0, codes, 0).reshape(-1)
+    emb = jnp.take(cent_ref[...], safe, axis=0) + resid  # (BD*L, d)
+    scores = emb @ q.T  # (BD*L, nq) — MXU matmul
+    mask = valid_ref[0].reshape(-1) > 0
+    scores = jnp.where(mask[:, None], scores, NEG)
+    per_q = scores.reshape(bd, L, nq).max(axis=1)  # (BD, nq)
+    out_ref[0] = (per_q * qmask_ref[0]).sum(axis=-1, keepdims=True)
+
+
+def decompress_and_score_batched_pallas(
+    q: jax.Array,  # (B, nq, d)
+    q_mask: jax.Array,  # (B, nq)
+    codes: jax.Array,  # (B, nd, L) i32
+    packed_res: jax.Array,  # (B, nd, L, pd) u8
+    tok_valid: jax.Array,  # (B, nd, L) bool
+    centroids: jax.Array,  # (K, d)
+    weights: jax.Array,  # (2^b,)
+    *,
+    nbits: int,
+    doc_block: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Stage-4 fused kernel for a query batch.  The centroid table and codec
+    weights are fetched into VMEM once and amortized over the entire
+    (B, doc_blocks) grid; each lane's query tile is amortized over that
+    lane's doc blocks (innermost grid axis)."""
+    interpret = resolve_interpret(interpret)
+    B, nd, L, pd = packed_res.shape
+    K, d = centroids.shape
+    nq = q.shape[1]
+    pad = (-nd) % doc_block
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)), constant_values=-1)
+        packed_res = jnp.pad(packed_res, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        tok_valid = jnp.pad(tok_valid, ((0, 0), (0, pad), (0, 0)))
+    grid = (B, (nd + pad) // doc_block)
+    out = pl.pallas_call(
+        functools.partial(_decompress_score_batched_kernel, nbits=nbits, L=L),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, nq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, nq), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, doc_block, L), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, doc_block, L * pd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, doc_block, L), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((K, d), lambda b, i: (0, 0)),
+            pl.BlockSpec((weights.shape[0], 1), lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, doc_block, 1), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nd + pad, 1), jnp.float32),
+        interpret=interpret,
+    )(
+        q.astype(jnp.float32),
+        q_mask.astype(jnp.float32)[:, None, :],
+        codes,
+        packed_res.reshape(B, nd + pad, L * pd),
+        tok_valid.astype(jnp.int32),
+        centroids.astype(jnp.float32),
+        weights.astype(jnp.float32)[:, None],
+    )
+    return out[:, :nd, 0]

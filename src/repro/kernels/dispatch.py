@@ -1,0 +1,23 @@
+"""Platform-aware Pallas execution dispatch.
+
+The kernels in this package are written against the TPU (Mosaic) lowering;
+on any other backend they run through the Pallas interpreter, which is
+numerically identical but executes as plain XLA ops.  Callers pass
+``interpret=None`` (the default everywhere) to get the right mode for the
+current platform, or an explicit bool to override per call — e.g. forcing
+``interpret=True`` on TPU to debug a kernel, or ``False`` in a lowering
+test.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True unless running on TPU (the only Mosaic target we lower for)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> platform default; an explicit bool wins."""
+    return default_interpret() if interpret is None else bool(interpret)

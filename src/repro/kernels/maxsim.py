@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG = -1e4
+from repro.constants import NEG
+from repro.kernels.dispatch import resolve_interpret
 
 
 def _centroid_interaction_kernel(
@@ -51,8 +52,9 @@ def centroid_interaction_pallas(
     q_mask: jax.Array,  # (nq,)
     *,
     doc_block: int = 32,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     nd, L = codes.shape
     K, nq = s_cq.shape
     pad = (-nd) % doc_block
@@ -78,3 +80,70 @@ def centroid_interaction_pallas(
         q_mask.astype(jnp.float32)[None, :],
     )
     return out[:nd, 0]
+
+
+# --------------------------------------------------------------------------
+# Batched variant: grid (B, doc_blocks)
+# --------------------------------------------------------------------------
+def _centroid_interaction_batched_kernel(
+    s_cq_ref,  # (1, K, nq) f32 — this lane's score matrix, resident per lane
+    codes_ref,  # (1, BD, L) i32 block
+    keep_ref,  # (1, K, 1) i32 — this lane's centroid-pruning mask
+    q_mask_ref,  # (1, 1, nq) f32
+    out_ref,  # (1, BD, 1) f32 block
+):
+    codes = codes_ref[0]  # (BD, L)
+    bd, L = codes.shape
+    s_cq = s_cq_ref[0]  # (K, nq)
+    nq = s_cq.shape[1]
+    valid = codes >= 0
+    safe = jnp.where(valid, codes, 0).reshape(-1)
+    tok_scores = jnp.take(s_cq, safe, axis=0)  # (BD*L, nq)
+    kept = jnp.take(keep_ref[0][:, 0], safe, axis=0) > 0
+    mask = valid.reshape(-1) & kept
+    tok_scores = jnp.where(mask[:, None], tok_scores, NEG)
+    per_q = tok_scores.reshape(bd, L, nq).max(axis=1)  # (BD, nq)
+    per_q = jnp.maximum(per_q, 0.0)
+    out_ref[0] = (per_q * q_mask_ref[0]).sum(axis=-1, keepdims=True)
+
+
+def centroid_interaction_batched_pallas(
+    s_cq: jax.Array,  # (B, K, nq)
+    codes: jax.Array,  # (B, nd, L) i32, -1 padding
+    keep: jax.Array,  # (B, K) bool
+    q_mask: jax.Array,  # (B, nq)
+    *,
+    doc_block: int = 32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batch-first stage-2/3 interaction: one kernel launch for the whole
+    (B, nd) candidate block.  The grid is (B, doc_blocks) with the doc axis
+    innermost, so each lane's S_cq / keep / q_mask tiles load into VMEM once
+    and stay resident across all of that lane's doc blocks (the vmap-of-
+    single-query path re-fetched them per lane per block)."""
+    interpret = resolve_interpret(interpret)
+    B, nd, L = codes.shape
+    _, K, nq = s_cq.shape
+    pad = (-nd) % doc_block
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)), constant_values=-1)
+    grid = (B, (nd + pad) // doc_block)
+    out = pl.pallas_call(
+        _centroid_interaction_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, K, nq), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, doc_block, L), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, K, 1), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, nq), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, doc_block, 1), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nd + pad, 1), jnp.float32),
+        interpret=interpret,
+    )(
+        s_cq.astype(jnp.float32),
+        codes,
+        keep.astype(jnp.int32)[..., None],
+        q_mask.astype(jnp.float32)[:, None, :],
+    )
+    return out[:, :nd, 0]

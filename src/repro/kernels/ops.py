@@ -1,8 +1,15 @@
 """Jit'd public wrappers around the Pallas kernels (+ engine adapters).
 
-The engine (``repro.core.plaid``) calls these when ``SearchParams.impl ==
-"pallas"``.  On this CPU container kernels run in ``interpret=True`` mode;
-on TPU hardware the same code lowers through Mosaic (``interpret=False``).
+The engine (``repro.core.pipeline`` / ``repro.core.plaid``) calls these when
+``SearchParams.impl == "pallas"``.  Execution mode is platform-aware:
+``interpret=None`` (the default) resolves via ``jax.default_backend()`` —
+the Pallas interpreter off-TPU, the Mosaic lowering on TPU
+(``repro.kernels.dispatch``).  Pass an explicit bool to override per call.
+
+The ``*_batched`` wrappers take a leading batch axis and launch ONE kernel
+with a ``(B, doc_blocks)`` grid, so resident tiles (centroids, codec
+weights, per-lane S_cq / query tiles) are amortized across the batch
+instead of being re-fetched by a per-lane ``vmap``.
 """
 from __future__ import annotations
 
@@ -13,6 +20,16 @@ import jax.numpy as jnp
 
 from repro.kernels import decompress as _dec
 from repro.kernels import maxsim as _ms
+from repro.kernels.dispatch import default_interpret, resolve_interpret
+
+__all__ = [
+    "centroid_interaction",
+    "centroid_interaction_batched",
+    "decompress_residuals",
+    "decompress_and_score",
+    "decompress_and_score_batched",
+    "default_interpret",
+]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "doc_block"))
@@ -22,7 +39,7 @@ def centroid_interaction(
     q_mask: jax.Array | None = None,
     keep_centroid: jax.Array | None = None,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     doc_block: int = 32,
 ) -> jax.Array:
     """Engine-compatible signature (matches ``scoring.centroid_interaction``)."""
@@ -36,7 +53,32 @@ def centroid_interaction(
         keep_centroid,
         q_mask,
         doc_block=doc_block,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "doc_block"))
+def centroid_interaction_batched(
+    s_cq: jax.Array,  # (B, K, nq)
+    codes: jax.Array,  # (B, nd, L)
+    q_mask: jax.Array | None = None,  # (B, nq)
+    keep_centroid: jax.Array | None = None,  # (B, K)
+    *,
+    interpret: bool | None = None,
+    doc_block: int = 32,
+) -> jax.Array:
+    """Batch-first stage-2/3 interaction (grid (B, doc_blocks))."""
+    if q_mask is None:
+        q_mask = jnp.ones((s_cq.shape[0], s_cq.shape[2]), jnp.float32)
+    if keep_centroid is None:
+        keep_centroid = jnp.ones(s_cq.shape[:2], bool)
+    return _ms.centroid_interaction_batched_pallas(
+        s_cq,
+        codes,
+        keep_centroid,
+        q_mask,
+        doc_block=doc_block,
+        interpret=resolve_interpret(interpret),
     )
 
 
@@ -46,13 +88,17 @@ def decompress_residuals(
     weights: jax.Array,
     *,
     nbits: int,
-    interpret: bool = True,
+    interpret: bool | None = None,
     row_block: int = 256,
 ) -> jax.Array:
     lead = packed.shape[:-1]
     flat = packed.reshape(-1, packed.shape[-1])
     out = _dec.decompress_residuals_pallas(
-        flat, weights, nbits=nbits, row_block=row_block, interpret=interpret
+        flat,
+        weights,
+        nbits=nbits,
+        row_block=row_block,
+        interpret=resolve_interpret(interpret),
     )
     return out.reshape(*lead, out.shape[-1])
 
@@ -68,7 +114,7 @@ def decompress_and_score(
     weights: jax.Array,
     *,
     nbits: int,
-    interpret: bool = True,
+    interpret: bool | None = None,
     doc_block: int = 8,
 ) -> jax.Array:
     return _dec.decompress_and_score_pallas(
@@ -81,5 +127,34 @@ def decompress_and_score(
         weights,
         nbits=nbits,
         doc_block=doc_block,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "interpret", "doc_block"))
+def decompress_and_score_batched(
+    q: jax.Array,  # (B, nq, d)
+    q_mask: jax.Array,  # (B, nq)
+    codes: jax.Array,  # (B, nd, L)
+    packed_res: jax.Array,  # (B, nd, L, pd)
+    tok_valid: jax.Array,  # (B, nd, L)
+    centroids: jax.Array,  # (K, d)
+    weights: jax.Array,  # (2^b,)
+    *,
+    nbits: int,
+    interpret: bool | None = None,
+    doc_block: int = 8,
+) -> jax.Array:
+    """Batch-first fused stage-4 kernel (grid (B, doc_blocks))."""
+    return _dec.decompress_and_score_batched_pallas(
+        q,
+        q_mask,
+        codes,
+        packed_res,
+        tok_valid,
+        centroids,
+        weights,
+        nbits=nbits,
+        doc_block=doc_block,
+        interpret=resolve_interpret(interpret),
     )

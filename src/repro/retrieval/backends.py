@@ -27,6 +27,7 @@ import numpy as np
 from repro.core import engine_sharded
 from repro.core import index as index_mod
 from repro.core import indexer
+from repro.core import pipeline as pipeline_mod
 from repro.core import plaid as plaid_mod
 from repro.core import vanilla as vanilla_mod
 from repro.retrieval import registry
@@ -191,7 +192,10 @@ class PlaidRetriever:
             ),
             compile=dict(
                 trace_count=plaid_mod.trace_count(),
-                cache_size=plaid_mod._search._cache_size(),
+                cache_size=(
+                    pipeline_mod.run_pipeline_jit._cache_size()
+                    + plaid_mod._search._cache_size()
+                ),
             ),
         )
 

@@ -16,6 +16,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Protocol, runtime_checkable
 
+from repro.constants import DEFAULT_CANDIDATE_CAP
+
 #: Facade-wide default for the stage 1-3 approximate-score dtype.  One
 #: documented default ("float32") shared by every backend; "bfloat16" is the
 #: TPU bandwidth optimisation (see repro.core.scoring.centroid_scores).
@@ -35,7 +37,10 @@ class SearchParams:
     k: int = 10
     nprobe: int = 1
     ndocs: int = 256
-    candidate_cap: int = 4096
+    #: C_max, the stage-1 candidate bound.  Single source of truth:
+    #: ``repro.constants.DEFAULT_CANDIDATE_CAP`` (shared with the core
+    #: engine's ``SearchParams`` and every ``params_for_k`` helper).
+    candidate_cap: int = DEFAULT_CANDIDATE_CAP
     score_dtype: str = DEFAULT_SCORE_DTYPE
     # --- dynamic scalars: traced, swept freely at serve time ------------
     t_cs: float = 0.5
@@ -66,8 +71,13 @@ PAPER_PARAMS = {
 }
 
 
-def params_for_k(k: int, candidate_cap: int = 8192) -> SearchParams:
+def params_for_k(k: int, candidate_cap: int | None = None) -> SearchParams:
+    """Paper Table 2 params for ``k``.  ``candidate_cap=None`` keeps the one
+    documented default (``repro.constants.DEFAULT_CANDIDATE_CAP``) instead
+    of the old silent 8192 override."""
     base = PAPER_PARAMS.get(k, SearchParams(k=k))
+    if candidate_cap is None:
+        candidate_cap = DEFAULT_CANDIDATE_CAP
     return base.replace(candidate_cap=candidate_cap)
 
 

@@ -6,6 +6,12 @@ its compiled batch size, and tracks per-request latency percentiles.  A
 thread-safe queue + single dispatcher thread — the JAX compute itself is
 single-stream per device, which is exactly what a TPU serving binary does.
 
+Each dispatched batch runs the batch-first stage pipeline
+(``repro.core.pipeline.run_pipeline`` via the retriever's ``search_batch``):
+one stage-1 ``C·Qᵀ`` matmul and one shared candidate-token gather for the
+whole coalesced batch, rather than a per-lane vmap of the single-query
+program — the engine-side half of the micro-batching bargain.
+
 The server takes any ``repro.retrieval.Retriever`` (facade backends return
 ``SearchResult``) and also still accepts the raw core engines (plain
 ``(scores, pids)`` tuples) during the deprecation window.
