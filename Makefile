@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast smoke ci
+.PHONY: test test-fast smoke bench-dry ci
 
 test:  ## tier-1: the full test suite
 	$(PY) -m pytest -x -q
@@ -11,7 +11,11 @@ test:  ## tier-1: the full test suite
 test-fast:  ## skip @pytest.mark.slow (arch smoke cells, multi-device subprocesses)
 	$(PY) -m pytest -q -m "not slow"
 
-smoke:  ## benchmark pipeline smoke run at dry scale (numbers not meaningful)
+smoke:  ## quickest benchmark pipeline smoke (table3 only)
 	$(PY) -m benchmarks.run --dry --only table3
 
-ci: test smoke
+bench-dry:  ## EVERY registered benchmark at dry scale (incl. live_ingest):
+	## catches benchmark registration breakage before merge
+	$(PY) -m benchmarks.run --dry
+
+ci: test bench-dry

@@ -10,6 +10,7 @@ is measured directly.
 """
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -21,6 +22,22 @@ from benchmarks import common
 
 N_DOCS = 8000
 BATCH_SIZES = (1, 4, 16, 64)
+
+
+def _vmap_oracle(engine: plaid.PlaidEngine):
+    """The pre-refactor batch path: ``jax.vmap`` over single-query
+    ``plaid._search`` with the engine's clamped caps.  Defined locally —
+    the engine-level ``search_batch_oracle`` finished its removal cycle."""
+    fn = functools.partial(
+        plaid._search, t_cs=engine.params.t_cs, **engine._kwargs()
+    )
+    batched = jax.vmap(fn, in_axes=(None, 0, 0))
+
+    def run(qs):
+        q_masks = jnp.ones(qs.shape[:2], jnp.float32)
+        return batched(engine.index, qs, q_masks)
+
+    return run
 
 
 def _qps(fn, qs, trials: int) -> float:
@@ -38,12 +55,13 @@ def run(emit, dry: bool = False):
     trials = 1 if dry else 3
     batch_sizes = (1, 4, 8) if dry else BATCH_SIZES
     engine = plaid.PlaidEngine(index, plaid.params_for_k(10))
+    oracle = _vmap_oracle(engine)
     qs_all, _ = common.queries(docs, max(batch_sizes))
 
     for B in batch_sizes:
         qs = jnp.asarray(qs_all[:B])
         qps_pipe = _qps(lambda q: engine.search_batch(q)[1], qs, trials)
-        qps_vmap = _qps(lambda q: engine.search_batch_oracle(q)[1], qs, trials)
+        qps_vmap = _qps(lambda q: oracle(q)[1], qs, trials)
         emit(
             "batched_throughput",
             f"B{B}",

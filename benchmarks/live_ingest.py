@@ -1,0 +1,124 @@
+"""Live-index serving benchmark: streaming ingest + query-latency cost.
+
+Three questions the live subsystem's design trades on:
+
+1. **Ingest throughput** — docs/sec through ``LiveIndex.add_passages``
+   (nearest-centroid assignment + residual encode against the frozen
+   tables + host-side CSR build for one delta segment).
+2. **Query-latency degradation vs. delta count** — every delta adds one
+   pipeline launch per batch plus a wider final merge.  The sweep holds
+   the TOTAL corpus fixed and only varies how it is segmented (base of
+   ``total - n*chunk`` docs + ``n`` delta segments), so ``degradation``
+   isolates segmentation overhead from corpus growth.
+3. **Compaction cost/payoff** — seconds to merge all segments (re-pack CSR
+   arrays + both IVFs, drop tombstones) and the ms/query recovered.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import live
+from repro.core import index as index_mod, plaid
+from repro.data import synthetic as syn
+
+from benchmarks import common
+
+N_TOTAL = 8000
+CHUNK = 512  # docs per delta segment
+DELTA_COUNTS = (0, 1, 2, 4, 8)
+NUM_CENTROIDS = 2048
+
+
+def _latency_ms(engine, qs, batch, trials):
+    return common.time_batched(
+        lambda q: engine.search_batch(q), qs, batch=batch, trials=trials
+    )
+
+
+def _segmented_live(docs, n_deltas, chunk, num_centroids):
+    """Same total corpus, segmented as base + n_deltas chunks."""
+    n_base = len(docs) - n_deltas * chunk
+    base = index_mod.build_index(
+        docs[:n_base], num_centroids=num_centroids, kmeans_iters=4
+    )
+    lv = live.LiveIndex(base)
+    for i in range(n_deltas):
+        lv.add_passages(docs[n_base + i * chunk : n_base + (i + 1) * chunk])
+    return lv
+
+
+def run(emit, dry: bool = False):
+    n_total = common.scaled(N_TOTAL, dry, 360)
+    chunk = common.scaled(CHUNK, dry, 24)
+    delta_counts = (0, 1, 2) if dry else DELTA_COUNTS
+    num_centroids = 256 if dry else NUM_CENTROIDS
+    trials = 1 if dry else 3
+    batch = 4 if dry else 16
+    n_queries = 8 if dry else 64
+
+    docs, _ = syn.embedding_corpus(n_total, dim=128, seed=0)
+    qs, _ = common.queries(docs, n_queries)
+    params = plaid.params_for_k(10)
+
+    # ---- 1. ingest throughput (time add_passages on a warm live index)
+    warm = _segmented_live(docs, 1, chunk, num_centroids)
+    new_docs, _ = syn.embedding_corpus(chunk, dim=128, seed=977)
+    t0 = time.perf_counter()
+    pids = warm.add_passages(new_docs)
+    dt = time.perf_counter() - t0
+    emit(
+        "live_ingest",
+        "ingest",
+        docs=len(pids),
+        ingest_docs_per_s=round(len(pids) / dt, 1),
+        tokens_per_s=round(sum(len(d) for d in new_docs) / dt, 1),
+    )
+
+    # ---- 2. latency vs delta count, total corpus FIXED
+    lat0 = None
+    lv = None
+    for n_deltas in delta_counts:
+        lv = _segmented_live(docs, n_deltas, chunk, num_centroids)
+        lat = _latency_ms(live.LiveEngine(lv, params), qs, batch, trials)
+        if lat0 is None:
+            lat0 = lat
+        emit(
+            "live_ingest",
+            f"deltas{n_deltas}",
+            n_deltas=n_deltas,
+            n_passages=lv.num_passages,
+            latency_ms=round(lat, 3),
+            degradation=round(lat / lat0, 3),
+        )
+
+    # ---- 3. tombstone ~5% of the corpus, then compact everything away
+    engine = live.LiveEngine(lv, params)
+    lv.delete(np.arange(0, lv.num_passages, 20))
+    lat_tomb = _latency_ms(engine, qs, batch, trials)
+    emit(
+        "live_ingest",
+        "tombstoned",
+        n_deleted=lv.num_deleted,
+        latency_ms=round(lat_tomb, 3),
+    )
+    t0 = time.perf_counter()
+    lv.compact()
+    dt_compact = time.perf_counter() - t0
+    lat_compact = _latency_ms(engine, qs, batch, trials)
+    emit(
+        "live_ingest",
+        "compacted",
+        compact_s=round(dt_compact, 3),
+        n_passages=lv.num_passages,
+        latency_ms=round(lat_compact, 3),
+        recovered=round(lat_tomb / max(lat_compact, 1e-9), 3),
+    )
+
+
+if __name__ == "__main__":
+    def _emit(bench, case, **kv):
+        print(f"{bench},{case}," + ",".join(f"{k}={v}" for k, v in kv.items()))
+
+    run(_emit, dry=True)

@@ -21,6 +21,7 @@ BENCHES = [
     "fig8_parallel",
     "batched_throughput",  # q/s vs batch size: pipeline vs vmap oracle
     "roofline_report",  # HLO cost model of the batched pipeline
+    "live_ingest",  # streaming ingest + latency vs delta count + compaction
 ]
 
 

@@ -1,28 +1,27 @@
 """PLAID core: late-interaction retrieval engine internals.
 
 The public, backend-agnostic API is ``repro.retrieval``; ``PlaidEngine`` /
-``VanillaEngine`` are the implementations its backends wrap.  The old
-``*Searcher`` names remain importable but warn on construction.
+``VanillaEngine`` are the implementations its backends wrap.  (The old
+``PlaidSearcher`` / ``VanillaSearcher`` shims completed their deprecation
+cycle and are gone — construct engines through the facade.)
 """
-from repro.core.index import PlaidIndex, build_index
+from repro.core.index import PlaidIndex, assemble_index, build_index
 from repro.core.plaid import (
     PAPER_PARAMS,
     PlaidEngine,
-    PlaidSearcher,
     SearchParams,
     params_for_k,
 )
-from repro.core.vanilla import VanillaEngine, VanillaParams, VanillaSearcher
+from repro.core.vanilla import VanillaEngine, VanillaParams
 
 __all__ = [
     "PlaidIndex",
+    "assemble_index",
     "build_index",
     "PlaidEngine",
-    "PlaidSearcher",
     "SearchParams",
     "PAPER_PARAMS",
     "params_for_k",
     "VanillaEngine",
-    "VanillaSearcher",
     "VanillaParams",
 ]

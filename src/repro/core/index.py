@@ -74,54 +74,36 @@ class PlaidIndex:
         return rc.decompress(self.codec, codes, packed, self.centroids)
 
 
-def build_index(
-    doc_embeddings: list[np.ndarray] | np.ndarray,
-    doc_lens: np.ndarray | None = None,
+def assemble_index(
+    centroids: jax.Array,
+    codes: np.ndarray,
+    packed_residuals,
+    doc_lens: np.ndarray,
     *,
-    num_centroids: int | None = None,
-    nbits: int = 2,
-    seed: int = 0,
-    kmeans_iters: int = 8,
+    cutoffs,
+    weights,
+    nbits: int,
     ivf_list_cap: int | None = None,
 ) -> PlaidIndex:
-    """Build a PLAID index from per-document token embeddings.
+    """Assemble a PlaidIndex from already-quantized token payloads.
 
-    ``doc_embeddings`` is either a list of (len_i, d) arrays or a packed
-    (Nt, d) array with ``doc_lens`` giving per-document token counts.
-    One-time host-side work (CSR construction) uses numpy; all quantization
-    math runs through the jitted codec/kmeans paths.
+    The host-side CSR construction shared by every index producer: the
+    offline ``build_index`` path, online delta-segment builds against
+    frozen centroids (``repro.live``), and compaction (which re-packs
+    surviving codes/residuals with no re-quantization).  ``codes`` and
+    ``doc_lens`` are host numpy; ``packed_residuals`` may be device- or
+    host-resident.
     """
-    if isinstance(doc_embeddings, (list, tuple)):
-        doc_lens = np.asarray([len(d) for d in doc_embeddings], np.int32)
-        packed_emb = np.concatenate([np.asarray(d) for d in doc_embeddings], 0)
-    else:
-        assert doc_lens is not None, "packed input requires doc_lens"
-        doc_lens = np.asarray(doc_lens, np.int32)
-        packed_emb = np.asarray(doc_embeddings)
-    packed_emb = packed_emb.astype(np.float32)
-    n_tokens, dim = packed_emb.shape
-    assert int(doc_lens.sum()) == n_tokens
+    codes_np = np.asarray(codes)
+    doc_lens = np.asarray(doc_lens, np.int32)
+    num_centroids = int(centroids.shape[0])
+    assert int(doc_lens.sum()) == codes_np.shape[0]
 
     doc_offsets = np.zeros(len(doc_lens) + 1, np.int32)
     np.cumsum(doc_lens, out=doc_offsets[1:])
     tok_pid = np.repeat(np.arange(len(doc_lens), dtype=np.int32), doc_lens)
 
-    # 1. centroids (k ~ 16*sqrt(Nt) unless overridden)
-    if num_centroids is None:
-        num_centroids = _kmeans.num_centroids_for(n_tokens)
-    centroids = _kmeans.train_centroids(
-        packed_emb, num_centroids, seed=seed, iters=kmeans_iters
-    )
-
-    # 2. assignment + residual codec
-    emb_j = jnp.asarray(packed_emb)
-    codes, _ = _kmeans._assign_chunked(emb_j, centroids)
-    residuals = emb_j - centroids[codes]
-    codec = rc.fit_codec(residuals, nbits)
-    packed_res = rc.compress_residuals(codec, residuals)
-
-    # 3. IVF: centroid -> sorted unique passage ids (host-side CSR build)
-    codes_np = np.asarray(codes)
+    # IVF: centroid -> sorted unique passage ids (host-side CSR build)
     pairs = np.unique(
         np.stack([codes_np.astype(np.int64), tok_pid.astype(np.int64)], 1),
         axis=0,
@@ -135,7 +117,7 @@ def build_index(
         # p100 by default at laptop scale; production sizes this at p99.9.
         ivf_list_cap = int(max(ivf_lens.max(initial=1), 1))
 
-    # 4. vanilla-ColBERTv2 IVF: centroid -> embedding ids (argsort by code)
+    # vanilla-ColBERTv2 IVF: centroid -> embedding ids (argsort by code)
     eivf_eids = np.argsort(codes_np, kind="stable").astype(np.int32)
     eivf_lens = np.bincount(codes_np, minlength=num_centroids).astype(np.int32)
     eivf_offsets = np.zeros(num_centroids + 1, np.int32)
@@ -145,7 +127,7 @@ def build_index(
     return PlaidIndex(
         centroids=centroids,
         codes=jnp.asarray(codes_np),
-        residuals=packed_res,
+        residuals=jnp.asarray(packed_residuals),
         tok_pid=jnp.asarray(tok_pid),
         doc_offsets=jnp.asarray(doc_offsets),
         doc_lens=jnp.asarray(doc_lens),
@@ -155,11 +137,83 @@ def build_index(
         eivf_eids=jnp.asarray(eivf_eids),
         eivf_offsets=jnp.asarray(eivf_offsets),
         eivf_lens=jnp.asarray(eivf_lens),
-        cutoffs=codec.cutoffs,
-        weights=codec.weights,
-        dim=dim,
+        cutoffs=jnp.asarray(cutoffs),
+        weights=jnp.asarray(weights),
+        dim=int(centroids.shape[1]),
         nbits=nbits,
         doc_maxlen=int(doc_lens.max(initial=1)),
         ivf_list_cap=ivf_list_cap,
         eivf_list_cap=eivf_list_cap,
+    )
+
+
+def build_index(
+    doc_embeddings: list[np.ndarray] | np.ndarray,
+    doc_lens: np.ndarray | None = None,
+    *,
+    num_centroids: int | None = None,
+    nbits: int = 2,
+    seed: int = 0,
+    kmeans_iters: int = 8,
+    ivf_list_cap: int | None = None,
+    centroids: jax.Array | np.ndarray | None = None,
+    codec: rc.ResidualCodec | None = None,
+) -> PlaidIndex:
+    """Build a PLAID index from per-document token embeddings.
+
+    ``doc_embeddings`` is either a list of (len_i, d) arrays or a packed
+    (Nt, d) array with ``doc_lens`` giving per-document token counts.
+    One-time host-side work (CSR construction) uses numpy; all quantization
+    math runs through the jitted codec/kmeans paths.
+
+    Passing ``centroids`` (and optionally ``codec``) skips k-means training
+    / codec fitting and quantizes against the FROZEN tables instead — the
+    online-ingest path (``repro.live``): the PLAID reproducibility study
+    shows retrieval quality is robust to approximate centroid assignment,
+    so new passages can be encoded against an existing index's centroid
+    space without re-clustering.  Token assignment is per-token
+    nearest-centroid, so an index built this way is array-identical to
+    rebuilding the same corpus against the same tables.
+    """
+    if isinstance(doc_embeddings, (list, tuple)):
+        doc_lens = np.asarray([len(d) for d in doc_embeddings], np.int32)
+        packed_emb = np.concatenate([np.asarray(d) for d in doc_embeddings], 0)
+    else:
+        assert doc_lens is not None, "packed input requires doc_lens"
+        doc_lens = np.asarray(doc_lens, np.int32)
+        packed_emb = np.asarray(doc_embeddings)
+    packed_emb = packed_emb.astype(np.float32)
+    n_tokens, _ = packed_emb.shape
+    assert int(doc_lens.sum()) == n_tokens
+
+    # 1. centroids (k ~ 16*sqrt(Nt) unless overridden or frozen)
+    if centroids is None:
+        if num_centroids is None:
+            num_centroids = _kmeans.num_centroids_for(n_tokens)
+        centroids = _kmeans.train_centroids(
+            packed_emb, num_centroids, seed=seed, iters=kmeans_iters
+        )
+    else:
+        centroids = jnp.asarray(centroids, jnp.float32)
+
+    # 2. assignment + residual codec
+    emb_j = jnp.asarray(packed_emb)
+    codes, _ = _kmeans._assign_chunked(emb_j, centroids)
+    residuals = emb_j - centroids[codes]
+    if codec is None:
+        codec = rc.fit_codec(residuals, nbits)
+    else:
+        nbits = codec.nbits
+    packed_res = rc.compress_residuals(codec, residuals)
+
+    # 3-4. CSR token arrays + both IVFs
+    return assemble_index(
+        centroids,
+        np.asarray(codes),
+        packed_res,
+        doc_lens,
+        cutoffs=codec.cutoffs,
+        weights=codec.weights,
+        nbits=nbits,
+        ivf_list_cap=ivf_list_cap,
     )

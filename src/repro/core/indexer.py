@@ -1,11 +1,17 @@
 """Production indexer: corpus -> encoded shards -> PLAID index on disk.
 
 Wraps the build pipeline (encode in chunks -> k-means -> residual compress
--> CSR IVFs) with persistence: an index directory holds one ``.npz`` of
-arrays + a JSON manifest of static metadata, and can be loaded whole
-(single-host) or partitioned into per-shard sub-indexes for the
-document-sharded engine (each serving host loads only its shard — the
-fault-tolerance story of DESIGN §4).
+-> CSR IVFs) with persistence.  Index directories use the **v2 segment
+manifest** layout (``repro.live.manifest``): a JSON manifest naming one or
+more segment directories plus an optional tombstone bitmap, swapped in
+atomically per generation.  ``save_index`` writes a single-base-segment v2
+directory; ``load_index`` reads v2 *and* legacy v1 (flat ``arrays.npz``)
+directories and fails loudly on unknown ``format_version`` values.
+Multi-segment directories (a live index with pending deltas) load through
+``repro.live.LiveIndex.load`` / the ``"live"`` retrieval backend.
+
+Sharded layouts (``save_sharded``) keep their own per-shard format: each
+serving host loads only its shard — the fault-tolerance story of DESIGN §4.
 """
 from __future__ import annotations
 
@@ -17,15 +23,19 @@ import numpy as np
 
 from repro.core import engine_sharded, index as index_mod
 from repro.core.index import PlaidIndex
+from repro.live import manifest as manifest_mod
 
-_ARRAY_FIELDS = [
-    "centroids", "codes", "residuals", "tok_pid", "doc_offsets", "doc_lens",
-    "ivf_pids", "ivf_offsets", "ivf_lens", "eivf_eids", "eivf_offsets",
-    "eivf_lens", "cutoffs", "weights",
-]
+_ARRAY_FIELDS = list(manifest_mod.ARRAY_FIELDS)
 
 
 def save_index(path: str, index: PlaidIndex) -> None:
+    """Write ``index`` as a v2 (segment manifest) directory, one base segment."""
+    manifest_mod.save_segmented(path, [index], [0], None, generation=0)
+
+
+def save_index_v1(path: str, index: PlaidIndex) -> None:
+    """Legacy v1 writer (flat ``arrays.npz`` + manifest) — kept so the
+    v1 -> v2 load path stays covered by tests against real v1 layouts."""
     os.makedirs(path, exist_ok=True)
     arrays = {f: np.asarray(getattr(index, f)) for f in _ARRAY_FIELDS}
     np.savez(os.path.join(path, "arrays.npz"), **arrays)
@@ -43,17 +53,27 @@ def save_index(path: str, index: PlaidIndex) -> None:
 
 
 def load_index(path: str) -> PlaidIndex:
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    meta = {
-        k: manifest[k]
-        for k in ("dim", "nbits", "doc_maxlen", "ivf_list_cap", "eivf_list_cap")
-    }
-    with np.load(os.path.join(path, "arrays.npz")) as data:
-        import jax.numpy as jnp
+    """Load a single-segment index directory (v1 or v2) as a PlaidIndex.
 
-        arrays = {f: jnp.asarray(data[f]) for f in _ARRAY_FIELDS}
-    return PlaidIndex(**arrays, **meta)
+    Raises ``ValueError`` for unknown format versions and for v2
+    directories holding more than one segment or tombstoned passages —
+    those are live indexes; load them with ``repro.live.LiveIndex.load``
+    (or ``retrieval.load`` with the recorded ``"live"`` backend).
+    """
+    manifest = manifest_mod.read_manifest(path)  # version-checked
+    if manifest.get("format_version", 1) == 1:
+        return manifest_mod.read_segment(path, manifest)
+    segments = manifest["segments"]
+    if len(segments) != 1 or manifest.get("tombstones"):
+        raise ValueError(
+            f"index at {path!r} holds {len(segments)} segments"
+            f"{' + tombstones' if manifest.get('tombstones') else ''}; "
+            "load it via repro.live.LiveIndex.load / the 'live' backend, "
+            "or compact it first"
+        )
+    return manifest_mod.read_segment(
+        os.path.join(path, segments[0]["name"]), segments[0]
+    )
 
 
 def save_sharded(path: str, index: PlaidIndex, n_shards: int) -> None:

@@ -27,9 +27,9 @@ Compile discipline matches ``_search``: shape caps (``k``, ``nprobe``,
 sweeping it at serve time never recompiles.  ``params.t_cs`` is normalized
 out of the jit cache key — only the per-call traced value matters.
 
-The old vmap-of-``_search`` path survives as
-``plaid.PlaidEngine.search_batch_oracle`` — the numerical oracle that
-``tests/test_pipeline.py`` compares against until it is deleted.
+The old vmap-of-``_search`` path is no longer an engine entry point: the
+numerical oracle the pipeline is validated against is a plain
+``jax.vmap(_search)`` defined locally in ``tests/test_pipeline.py``.
 """
 from __future__ import annotations
 
@@ -78,12 +78,19 @@ def stage1_scores_batched(
 
 
 def candidate_generation_batched(
-    index: PlaidIndex, s_cq: jax.Array, nprobe: int, candidate_cap: int
+    index: PlaidIndex,
+    s_cq: jax.Array,
+    nprobe: int,
+    candidate_cap: int,
+    alive: jax.Array | None = None,
 ) -> jax.Array:
     """(B, K, nq) scores -> (B, candidate_cap) sorted unique pids, -1 pad.
 
     Identical per-lane semantics to ``plaid.candidate_generation`` (same
-    top-k tie-breaking, same IVF walk), batched over B.
+    top-k tie-breaking, same IVF walk), batched over B.  ``alive`` is the
+    live-index tombstone mask: dead pids are nulled BEFORE the
+    ``candidate_cap`` truncation, so tombstoned passages never consume cap
+    slots a rebuild's IVF would have given to live ones.
     """
     B = s_cq.shape[0]
     _, cids = jax.lax.top_k(jnp.swapaxes(s_cq, 1, 2), nprobe)  # (B, nq, np)
@@ -95,6 +102,9 @@ def candidate_generation_batched(
     valid = pos[None, None, :] < lens[..., None]
     idx = jnp.where(valid, idx, 0)
     pids = jnp.where(valid, index.ivf_pids[idx], -1)  # (B, nq*np, cap)
+    if alive is not None:
+        safe = jnp.where(pids >= 0, pids, 0)
+        pids = jnp.where((pids >= 0) & alive[safe], pids, -1)
     return jax.vmap(
         functools.partial(jnp.unique, size=candidate_cap, fill_value=-1)
     )(pids.reshape(B, -1))
@@ -201,10 +211,18 @@ def run_pipeline_impl(
     params,  # plaid.SearchParams (static; t_cs field ignored)
     diag: bool = False,
     interpret: bool | None = None,  # Pallas mode; None = platform default
+    alive: jax.Array | None = None,  # (Nd,) bool; False = tombstoned passage
 ):
     """Unjitted pipeline body — composable under ``shard_map`` / outer jits
     (``engine_sharded`` runs this per shard).  Callers outside a tracing
     context use ``run_pipeline``.
+
+    ``alive`` is the live-index tombstone mask (``repro.live``): dead
+    passages are nulled inside stage-1 candidate generation, BEFORE the
+    ``candidate_cap`` truncation — a from-scratch rebuild of the surviving
+    corpus would never have produced them (its IVF simply doesn't contain
+    them), so every downstream stage sees the rebuild's candidates and
+    tombstones don't eat cap slots under delete-heavy load.
     """
     global _N_TRACES
     _N_TRACES += 1
@@ -226,8 +244,8 @@ def run_pipeline_impl(
     # ---- Stage 1: one batched C.Q^T + per-lane candidate generation
     s_cq = stage1_scores_batched(index, qs, p.score_dtype)  # (B, K, nq)
     candidates = candidate_generation_batched(
-        index, s_cq, p.nprobe, p.candidate_cap
-    )  # (B, cap)
+        index, s_cq, p.nprobe, p.candidate_cap, alive
+    )  # (B, cap); tombstoned passages never reach stage 2
 
     # ---- Stage 2: pruned centroid interaction over the shared gather
     keep = scoring.prune_mask(s_cq, t_cs)  # (B, K)
@@ -302,6 +320,7 @@ def run_pipeline(
     *,
     diag: bool = False,
     interpret: bool | None = None,
+    alive: jax.Array | None = None,
 ):
     """The one compiled entry point for batched (B >= 1) PLAID search.
 
@@ -310,6 +329,8 @@ def run_pipeline(
     ``plaid.SearchParams`` (static: one compile per distinct cap/impl
     combination); its ``t_cs`` field is normalized out of the cache key —
     only the traced ``t_cs`` argument matters, so threshold sweeps are free.
+    ``alive`` is an optional traced (num_passages,) tombstone mask (see
+    ``run_pipeline_impl``); updating tombstones never recompiles.
     """
     params = dataclasses.replace(params, t_cs=0.0)  # not a cache key
     return run_pipeline_jit(
@@ -320,4 +341,5 @@ def run_pipeline(
         params=params,
         diag=diag,
         interpret=interpret,
+        alive=alive,
     )

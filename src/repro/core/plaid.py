@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +76,18 @@ def params_for_k(k: int, candidate_cap: int | None = None, impl: str = "ref"):
     if candidate_cap is None:
         candidate_cap = DEFAULT_CANDIDATE_CAP
     return dataclasses.replace(base, candidate_cap=candidate_cap, impl=impl)
+
+
+def clamp_params(params: SearchParams, n_passages: int) -> SearchParams:
+    """Corpus-clamped static caps — THE clamp rule, shared by every
+    whole-corpus pipeline consumer (``PlaidEngine`` per index,
+    ``repro.live.LiveEngine`` per segment) so they cannot diverge.  The
+    document-sharded engine intentionally does NOT clamp ``ndocs`` (see
+    ``engine_sharded.make_sharded_search``)."""
+    cap = min(params.candidate_cap, max(n_passages, 2))
+    return dataclasses.replace(
+        params, candidate_cap=cap, ndocs=min(params.ndocs, cap)
+    )
 
 
 # --------------------------------------------------------------------------
@@ -248,8 +259,8 @@ class PlaidEngine:
 
     Both entry points run the batch-first ``core.pipeline`` program —
     ``search`` is the B=1 squeeze of ``search_batch``, not a separate code
-    path.  ``search_batch_oracle`` keeps the pre-refactor vmap-of-
-    ``_search`` semantics alive as the numerical oracle for tests.
+    path.  (The pre-refactor vmap-of-``_search`` path lives on only as a
+    locally-defined reference in ``tests/test_pipeline.py``.)
     """
 
     def __init__(self, index: PlaidIndex, params: SearchParams | None = None):
@@ -257,14 +268,10 @@ class PlaidEngine:
         self.params = params or SearchParams()
 
     def _pipeline_params(self) -> SearchParams:
-        """Corpus-clamped static params — the ONE place the caps are
-        clamped (both the pipeline and the ``_search`` oracle derive from
-        it, so they cannot diverge)."""
-        p = self.params
-        cap = min(p.candidate_cap, max(self.index.num_passages, 2))
-        return dataclasses.replace(
-            p, candidate_cap=cap, ndocs=min(p.ndocs, cap)
-        )
+        """Corpus-clamped static params (``clamp_params``) — both the
+        pipeline and the ``_search`` oracle derive from this, so they
+        cannot diverge."""
+        return clamp_params(self.params, self.index.num_passages)
 
     def _kwargs(self):
         """Static (compile-cache-keyed) kwargs; ``t_cs`` is passed per call."""
@@ -329,39 +336,3 @@ class PlaidEngine:
             interpret=interpret,
         )
 
-    def search_batch_oracle(
-        self,
-        qs: jax.Array,
-        q_masks: jax.Array | None = None,
-        *,
-        t_cs: float | None = None,
-        diag: bool = False,
-    ):
-        """Pre-refactor path: ``jax.vmap`` over the single-query monolith.
-
-        Kept as the numerical oracle the batched pipeline is validated
-        against (``tests/test_pipeline.py``); scheduled for deletion once
-        the pipeline has survived a release cycle.  Do not add callers.
-        """
-        if q_masks is None:
-            q_masks = jnp.ones(qs.shape[:2], jnp.float32)
-        t = self.params.t_cs if t_cs is None else t_cs
-        fn = functools.partial(_search, t_cs=t, diag=diag, **self._kwargs())
-        return jax.vmap(fn, in_axes=(None, 0, 0))(self.index, qs, q_masks)
-
-
-class PlaidSearcher(PlaidEngine):
-    """Deprecated alias of :class:`PlaidEngine`.
-
-    Construct engines through ``repro.retrieval.build(...)`` /
-    ``retrieval.from_index(index, backend="plaid")`` instead.
-    """
-
-    def __init__(self, index: PlaidIndex, params: SearchParams | None = None):
-        warnings.warn(
-            "PlaidSearcher is deprecated; use repro.retrieval "
-            '(backend="plaid") instead.',
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        super().__init__(index, params)

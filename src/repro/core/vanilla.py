@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -129,20 +128,3 @@ class VanillaEngine:
             q_masks = jnp.ones(qs.shape[:2], jnp.float32)
         fn = functools.partial(_vanilla_search, **self._kwargs())
         return jax.vmap(fn, in_axes=(None, 0, 0))(self.index, qs, q_masks)
-
-
-class VanillaSearcher(VanillaEngine):
-    """Deprecated alias of :class:`VanillaEngine`.
-
-    Construct engines through ``repro.retrieval.build(...)`` /
-    ``retrieval.from_index(index, backend="vanilla")`` instead.
-    """
-
-    def __init__(self, index: PlaidIndex, params: VanillaParams | None = None):
-        warnings.warn(
-            "VanillaSearcher is deprecated; use repro.retrieval "
-            '(backend="vanilla") instead.',
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        super().__init__(index, params)

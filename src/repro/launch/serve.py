@@ -2,7 +2,8 @@
 batched requests through the ``repro.retrieval`` facade.
 
 ``python -m repro.launch.serve --docs 20000 --queries 256 --k 10
-[--backend plaid|plaid-pallas|plaid-sharded|vanilla] [--compare-vanilla]
+[--backend plaid|plaid-pallas|plaid-sharded|vanilla|live|live-pallas]
+[--compare-vanilla]
 [--sweep-t-cs]`` prints latency percentiles, (optionally) the speedup +
 agreement vs. the vanilla ColBERTv2 baseline (the paper's Table 3 protocol
 at laptop scale), and (optionally) a dynamic ``t_cs`` sweep that reuses one

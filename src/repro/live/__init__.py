@@ -1,0 +1,41 @@
+"""``repro.live`` — segmented mutable PLAID indexes (streaming ingest,
+tombstone deletes, background compaction).
+
+The static ``PlaidIndex`` serves a build-once corpus; a :class:`LiveIndex`
+serves a corpus that changes under traffic::
+
+    from repro import live, retrieval
+
+    r = retrieval.build(corpus_embs, backend="live")
+    pids = r.add_passages(new_docs)        # one delta segment, no downtime
+    r.delete_passages(pids[:3])            # tombstones, no array rewrite
+    r.compact()                            # merge deltas, drop tombstones
+    r.save(path); retrieval.load(path)     # v2 segment manifest round-trip
+
+Design notes live in the submodule docstrings: ``live.index`` (segments /
+pid space / concurrency), ``live.engine`` (per-segment search + merge),
+``live.manifest`` (on-disk format v2 + atomic generation swap),
+``live.compactor`` (background merge).  The ``"live"`` / ``"live-pallas"``
+facade backends register on ``import repro.retrieval``.
+"""
+from repro.live.compactor import Compactor
+from repro.live.engine import LiveEngine
+from repro.live.index import (
+    IndexWriter,
+    LiveIndex,
+    LiveSnapshot,
+    build_delta_segment,
+    compact_segments,
+)
+from repro.live import manifest
+
+__all__ = [
+    "Compactor",
+    "IndexWriter",
+    "LiveEngine",
+    "LiveIndex",
+    "LiveSnapshot",
+    "build_delta_segment",
+    "compact_segments",
+    "manifest",
+]

@@ -1,0 +1,144 @@
+"""``"live"`` / ``"live-pallas"`` retrieval backends: mutable corpus serving.
+
+Registers the LiveIndex engine behind the ``repro.retrieval`` facade.  On
+top of the standard Retriever protocol (search/search_batch/save/describe)
+the live backends expose the mutation surface:
+
+* ``add_passages(docs)`` — encode + append one delta segment, returns the
+  new global pids;
+* ``delete_passages(pids)`` — tombstone pids (no array rewrite);
+* ``writer(flush_every=...)`` — a buffered :class:`repro.live.IndexWriter`;
+* ``compact()`` — merge deltas into the base, dropping tombstoned docs.
+
+``retrieval.load`` restores a live retriever from both v2 (segment
+manifest) and legacy v1 index directories.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import plaid as plaid_mod
+from repro.retrieval import registry
+from repro.retrieval.backends import (
+    _as_request,
+    _build_index,
+    _finish,
+    _reject_diagnostics,
+    to_engine_params,
+)
+from repro.retrieval.types import (
+    DYNAMIC_FIELDS,
+    RetrieverConfig,
+    SearchParams,
+    STATIC_FIELDS,
+)
+from repro.live.compactor import Compactor
+from repro.live.engine import LiveEngine
+from repro.live.index import IndexWriter, LiveIndex
+
+
+@registry.register("live")
+class LiveRetriever:
+    """Segmented mutable PLAID index behind the facade."""
+
+    impl = "ref"
+
+    def __init__(self, live_index: LiveIndex, params: SearchParams | None = None):
+        self.index = live_index
+        self.params = params or SearchParams()
+        self._engine = LiveEngine(
+            live_index, to_engine_params(self.params, self.impl)
+        )
+
+    # ---- construction ----------------------------------------------------
+    @classmethod
+    def build(cls, corpus_embs, cfg: RetrieverConfig, doc_lens=None):
+        base = _build_index(corpus_embs, cfg, doc_lens)
+        return cls(LiveIndex(base), cfg.params)
+
+    @classmethod
+    def from_index(cls, index, cfg: RetrieverConfig):
+        if not isinstance(index, LiveIndex):
+            index = LiveIndex(index)
+        return cls(index, cfg.params)
+
+    @classmethod
+    def load(cls, path: str, params: SearchParams | None = None):
+        return cls(LiveIndex.load(path), params)
+
+    def save(self, path: str) -> None:
+        self.index.save(path)
+        registry.write_meta(path, self)
+
+    # ---- mutation --------------------------------------------------------
+    def add_passages(self, doc_embeddings, doc_lens=None):
+        """Ingest passages as one delta segment -> global pids."""
+        return self.index.add_passages(doc_embeddings, doc_lens=doc_lens)
+
+    def delete_passages(self, pids) -> int:
+        """Tombstone global pids; returns how many were newly deleted."""
+        return self.index.delete(pids)
+
+    def writer(self, *, flush_every: int | None = None) -> IndexWriter:
+        return IndexWriter(self.index, flush_every=flush_every)
+
+    def compactor(self, **kw) -> Compactor:
+        return Compactor(self.index, **kw)
+
+    def compact(self):
+        """Merge deltas into the base now; returns the old->new pid map."""
+        return self.index.compact()
+
+    # ---- search ----------------------------------------------------------
+    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False):
+        req = _as_request(q, q_mask, t_cs, with_diagnostics)
+        _reject_diagnostics(req, self.backend_name)
+        t = self.params.t_cs if req.t_cs is None else req.t_cs
+        t0 = time.perf_counter()
+        out = self._engine.search(req.q, req.q_mask, t_cs=t)
+        return _finish(
+            out, backend=self.backend_name, k=self.params.k, t_cs=t, t0=t0
+        )
+
+    def search_batch(self, qs, q_masks=None, *, t_cs=None, with_diagnostics=False):
+        req = _as_request(qs, q_masks, t_cs, with_diagnostics)
+        _reject_diagnostics(req, self.backend_name)
+        t = self.params.t_cs if req.t_cs is None else req.t_cs
+        t0 = time.perf_counter()
+        out = self._engine.search_batch(req.q, req.q_mask, t_cs=t)
+        return _finish(
+            out, backend=self.backend_name, k=self.params.k, t_cs=t, t0=t0
+        )
+
+    # ---- introspection ---------------------------------------------------
+    def describe(self) -> dict:
+        live = self.index
+        base = live.base
+        return dict(
+            backend=self.backend_name,
+            impl=self.impl,
+            static=self.params.static_dict(),
+            dynamic=self.params.dynamic_dict(),
+            static_fields=STATIC_FIELDS,
+            dynamic_fields=DYNAMIC_FIELDS,
+            index=dict(
+                num_passages=live.num_passages,
+                num_alive=live.num_alive,
+                num_deleted=live.num_deleted,
+                num_segments=live.num_segments,
+                num_deltas=live.num_deltas,
+                generation=live.generation,
+                num_centroids=base.num_centroids,
+                dim=base.dim,
+                nbits=base.nbits,
+                doc_maxlen=max(s.doc_maxlen for s in live.snapshot().segments),
+            ),
+            compile=dict(trace_count=plaid_mod.trace_count()),
+        )
+
+
+@registry.register("live-pallas")
+class LivePallasRetriever(LiveRetriever):
+    """Live backend through the Pallas kernels (interpret off-TPU)."""
+
+    impl = "pallas"

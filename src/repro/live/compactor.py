@@ -1,0 +1,119 @@
+"""Background compaction for LiveIndex.
+
+A ``Compactor`` watches a LiveIndex from its own daemon thread and merges
+delta segments back into the base (dropping tombstoned passages) once the
+delta count reaches ``min_deltas``.
+
+Compaction itself is ``LiveIndex.compact()``: the expensive merge runs
+outside the index lock (readers AND writers proceed; concurrent appends
+and deletes are reconciled at swap time), and the swap to the compacted
+state is a brief reference swap — queries in flight finish against the
+pre-compaction segments, the next ``snapshot()`` sees the new base.
+
+Persistence: compaction is an in-memory operation; call ``LiveIndex.save``
+(or construct with ``spill_path``) to publish the compacted generation
+behind the manifest's atomic swap.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.live.index import LiveIndex
+
+
+class Compactor:
+    """Merge delta segments into the base when they pile up."""
+
+    def __init__(
+        self,
+        live: LiveIndex,
+        *,
+        min_deltas: int = 2,
+        interval_s: float = 0.05,
+        spill_path: str | None = None,
+    ):
+        self.live = live
+        self.min_deltas = max(1, int(min_deltas))
+        self.interval_s = interval_s
+        self.spill_path = spill_path
+        self.compactions = 0
+        self.last_pid_map: np.ndarray | None = None
+        self.last_error: BaseException | None = None
+        self._spill_pending = False
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # ---- synchronous API -------------------------------------------------
+    def maybe_compact(self) -> np.ndarray | None:
+        """Compact iff the delta count reached the threshold.
+
+        Returns the old->new pid map, or None if nothing was done.  A
+        spill save that previously failed is retried even on ticks where
+        no compaction is due — the on-disk index must not stay silently
+        stale behind the in-memory one."""
+        if self.live.num_deltas < self.min_deltas:
+            if self._spill_pending:
+                self._spill()
+            return None
+        pid_map = self.live.compact()
+        self.compactions += 1
+        self.last_pid_map = pid_map
+        if self.spill_path is not None:
+            self._spill_pending = True
+            self._spill()
+        return pid_map
+
+    def _spill(self) -> None:
+        self.live.save(self.spill_path)
+        self._spill_pending = False
+
+    # ---- background thread -----------------------------------------------
+    def start(self) -> "Compactor":
+        if self._thread is not None:
+            raise RuntimeError("Compactor already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, *, final_compact: bool = False) -> None:
+        """Stop the thread.  ``final_compact=True`` force-compacts whatever
+        is pending (ignoring ``min_deltas`` — shutdown is the last chance)
+        and spills; a plain stop still flushes a pending failed spill so
+        the on-disk index is not left stale."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+        if final_compact and (
+            self.live.num_deltas > 0 or self.live.num_deleted > 0
+        ):
+            self.last_pid_map = self.live.compact()
+            self.compactions += 1
+            if self.spill_path is not None:
+                self._spill_pending = True
+        if self._spill_pending:
+            self._spill()
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            try:
+                if self.maybe_compact() is not None:
+                    # only a completed compaction (incl. its spill) clears
+                    # the error — a no-op tick must not erase it
+                    self.last_error = None
+            except Exception as e:
+                # e.g. every passage tombstoned (ValueError) or a spill
+                # save failing (OSError).  The loop must outlive transient
+                # failures — record the error for the operator and retry on
+                # the next tick instead of silently dying with deltas
+                # accumulating unboundedly.
+                self.last_error = e
+
+    def __enter__(self) -> "Compactor":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -1,0 +1,392 @@
+"""LiveIndex: a segmented, mutable view over PLAID indexes.
+
+The static ``PlaidIndex`` is build-once; this module makes the corpus
+mutable at serving time without ever mutating an array:
+
+* an immutable **base segment** plus zero or more **delta segments** — each
+  delta is a small ``PlaidIndex`` built *online* by nearest-centroid
+  assignment + residual encoding against the base's FROZEN centroids and
+  codec cutoffs (viable because retrieval quality is robust to approximate
+  centroid assignment — the PLAID reproducibility study's core finding);
+* a **tombstone bitmap** over global pids for deletes (a delete never
+  touches segment arrays);
+* a monotonic **generation** counter, bumped on every mutation and recorded
+  in the on-disk manifest (``repro.live.manifest``).
+
+Global pid space is the concatenation of segments in order: the base owns
+``[0, base.num_passages)``, each delta the next contiguous range.  Because
+every segment shares one centroid space and one codec, *compaction* is pure
+re-packing: surviving codes/residual bytes are concatenated and the CSR
+token arrays + both IVFs rebuilt — array-identical to a from-scratch
+rebuild of the surviving corpus against the same frozen tables.
+
+Concurrency model (readers never block, writers serialize):
+
+* all mutation goes through ``self._lock`` and replaces references —
+  segment arrays themselves are immutable jax arrays;
+* searches run on a ``snapshot()`` — an immutable view of (segments,
+  per-segment alive masks, generation) — so an in-flight query is never
+  torn by a concurrent add/delete/compact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.core import index as index_mod
+from repro.core.index import PlaidIndex
+from repro.live import manifest as manifest_mod
+
+
+def build_delta_segment(
+    doc_embeddings, base: PlaidIndex, doc_lens=None
+) -> PlaidIndex:
+    """Build a small online segment against the base's frozen tables.
+
+    No k-means, no codec fitting: tokens are assigned to the base's
+    existing centroids and residual-compressed with its cutoffs/weights, so
+    the segment is queryable with the base's stage-1 score matrix and is
+    array-identical to what a full rebuild would produce for these docs.
+    """
+    return index_mod.build_index(
+        doc_embeddings,
+        doc_lens=doc_lens,
+        centroids=base.centroids,
+        codec=base.codec,
+    )
+
+
+def compact_segments(segments, tombstones: np.ndarray):
+    """Merge segments, dropping tombstoned passages.  Host-side re-pack.
+
+    Returns ``(new_base, pid_map)`` where ``pid_map[old_global_pid]`` is the
+    passage's pid in the compacted index, or ``-1`` if it was tombstoned.
+    The new base is array-identical to ``build_index(surviving_docs,
+    centroids=base.centroids, codec=base.codec)``: codes and residual bytes
+    are reused verbatim (same frozen tables everywhere), only the CSR token
+    arrays and the two IVFs are rebuilt.
+    """
+    base = segments[0]
+    codes = np.concatenate([np.asarray(s.codes) for s in segments])
+    residuals = np.concatenate([np.asarray(s.residuals) for s in segments])
+    doc_lens = np.concatenate([np.asarray(s.doc_lens) for s in segments])
+    alive = ~np.asarray(tombstones, bool)
+    if not alive.any():
+        raise ValueError("compaction would drop every passage")
+    tok_alive = np.repeat(alive, doc_lens)
+    new_base = index_mod.assemble_index(
+        base.centroids,
+        codes[tok_alive],
+        residuals[tok_alive],
+        doc_lens[alive],
+        cutoffs=base.cutoffs,
+        weights=base.weights,
+        nbits=base.nbits,
+    )
+    pid_map = np.where(alive, np.cumsum(alive) - 1, -1).astype(np.int64)
+    return new_base, pid_map
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveSnapshot:
+    """Immutable view a search runs against (see LiveIndex.snapshot)."""
+
+    segments: tuple  # of PlaidIndex
+    offsets: tuple  # global pid base per segment
+    alive: tuple  # per-segment (Nd_s,) bool device arrays
+    alive_global: object  # (num_passages,) bool device array
+    generation: int
+    num_passages: int
+
+
+class LiveIndex:
+    """Segmented mutable index: base + deltas + tombstones + generation."""
+
+    def __init__(
+        self,
+        base: PlaidIndex,
+        deltas=(),
+        *,
+        tombstones: np.ndarray | None = None,
+        generation: int = 0,
+        seg_ids=None,
+        index_uuid: str | None = None,
+    ):
+        import uuid
+
+        # one id per index lineage: lets save() skip re-serializing
+        # segments the on-disk manifest (same lineage) already holds
+        self._uuid = index_uuid or uuid.uuid4().hex
+        self._lock = threading.RLock()
+        self._compact_lock = threading.Lock()  # serializes compactions only
+        self._save_lock = threading.Lock()  # serializes saves only
+        self._segments: list[PlaidIndex] = [base, *deltas]
+        total = sum(s.num_passages for s in self._segments)
+        if tombstones is None:
+            tombstones = np.zeros(total, bool)
+        tombstones = np.asarray(tombstones, bool).copy()
+        if tombstones.shape[0] != total:
+            raise ValueError(
+                f"tombstone bitmap covers {tombstones.shape[0]} pids, index "
+                f"holds {total}"
+            )
+        self._tombstones = tombstones
+        self._generation = int(generation)
+        ids = list(seg_ids) if seg_ids is not None else list(
+            range(len(self._segments))
+        )
+        if len(ids) != len(self._segments):
+            raise ValueError("seg_ids/segments length mismatch")
+        self._seg_ids = ids
+        self._next_seg_id = max(ids) + 1
+        self._cached_snapshot: LiveSnapshot | None = None
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def base(self) -> PlaidIndex:
+        return self._segments[0]
+
+    @property
+    def num_segments(self) -> int:
+        return len(self._segments)
+
+    @property
+    def num_deltas(self) -> int:
+        return len(self._segments) - 1
+
+    @property
+    def num_passages(self) -> int:
+        """Total pid space, INCLUDING tombstoned passages."""
+        return sum(s.num_passages for s in self._segments)
+
+    @property
+    def num_alive(self) -> int:
+        with self._lock:
+            return int((~self._tombstones).sum())
+
+    @property
+    def num_deleted(self) -> int:
+        with self._lock:
+            return int(self._tombstones.sum())
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    @property
+    def dim(self) -> int:
+        return self.base.dim
+
+    def tombstones(self) -> np.ndarray:
+        with self._lock:
+            return self._tombstones.copy()
+
+    # ---- mutation --------------------------------------------------------
+    def _bump(self) -> None:
+        self._generation += 1
+        self._cached_snapshot = None
+
+    def add_passages(self, doc_embeddings, doc_lens=None) -> np.ndarray:
+        """Ingest new passages as one delta segment; returns global pids.
+
+        The segment build (assignment + compression) runs outside the lock
+        — it only reads the frozen centroid/codec tables, which every
+        segment shares — so queries and deletes proceed during encode.
+        """
+        seg = build_delta_segment(doc_embeddings, self.base, doc_lens=doc_lens)
+        with self._lock:
+            start = self.num_passages
+            self._segments.append(seg)
+            self._seg_ids.append(self._next_seg_id)
+            self._next_seg_id += 1
+            self._tombstones = np.concatenate(
+                [self._tombstones, np.zeros(seg.num_passages, bool)]
+            )
+            self._bump()
+        return np.arange(start, start + seg.num_passages, dtype=np.int64)
+
+    def delete(self, pids) -> int:
+        """Tombstone global pids; returns how many were newly deleted."""
+        pids = np.unique(np.atleast_1d(np.asarray(pids, np.int64)))
+        with self._lock:
+            n = self.num_passages
+            if pids.size and (pids.min() < 0 or pids.max() >= n):
+                raise IndexError(
+                    f"pid out of range for index with {n} passages"
+                )
+            newly = int((~self._tombstones[pids]).sum())
+            if newly:
+                self._tombstones[pids] = True
+                self._bump()
+        return newly
+
+    def compact(self) -> np.ndarray:
+        """Merge the current segments into a new base, dropping tombstones.
+
+        Returns the old->new global pid map over the WHOLE pid space at
+        swap time (``-1`` = dropped).  The expensive host-side merge runs
+        outside the index lock, so readers *and writers* proceed during
+        it; at swap time the merge is reconciled with whatever happened
+        concurrently (segments appended after the merge snapshot are kept
+        as deltas, deletes issued during the merge are re-applied to the
+        new base).  Concurrent ``compact`` calls serialize.
+        """
+        with self._compact_lock:  # one merge at a time; index stays usable
+            with self._lock:
+                snap_segments = list(self._segments)
+                snap_tomb = self._tombstones.copy()
+            n_old = int(sum(s.num_passages for s in snap_segments))
+
+            # the expensive part: no index lock held
+            new_base, pid_map = compact_segments(snap_segments, snap_tomb)
+
+            with self._lock:
+                # only appends/deletes can have happened (compactions are
+                # serialized), so the snapshot is a prefix of the present
+                assert all(
+                    a is b for a, b in zip(self._segments, snap_segments)
+                ), "segment prefix changed during compaction"
+                extra_segments = self._segments[len(snap_segments):]
+                extra_ids = self._seg_ids[len(snap_segments):]
+                total_now = self.num_passages
+                # deletes that raced the merge: re-apply onto the new base
+                base_tomb = np.zeros(new_base.num_passages, bool)
+                raced = np.flatnonzero(
+                    self._tombstones[:n_old] & ~snap_tomb
+                )
+                base_tomb[pid_map[raced]] = True
+                # full old->new pid map: merged prefix + shifted tail
+                full_map = np.full(total_now, -1, np.int64)
+                full_map[:n_old] = pid_map
+                full_map[n_old:] = new_base.num_passages + np.arange(
+                    total_now - n_old
+                )
+                self._segments = [new_base, *extra_segments]
+                self._seg_ids = [self._next_seg_id, *extra_ids]
+                self._next_seg_id += 1
+                self._tombstones = np.concatenate(
+                    [base_tomb, self._tombstones[n_old:]]
+                )
+                self._bump()
+        return full_map
+
+    # ---- search-side view ------------------------------------------------
+    def snapshot(self) -> LiveSnapshot:
+        """Immutable (segments, alive masks, generation) view for readers.
+
+        Cached per generation: repeated searches between mutations reuse
+        the same device-resident alive masks.
+        """
+        import jax.numpy as jnp
+
+        with self._lock:
+            if self._cached_snapshot is None:
+                offsets, off = [], 0
+                alive = []
+                for seg in self._segments:
+                    offsets.append(off)
+                    alive.append(
+                        jnp.asarray(
+                            ~self._tombstones[off : off + seg.num_passages]
+                        )
+                    )
+                    off += seg.num_passages
+                self._cached_snapshot = LiveSnapshot(
+                    segments=tuple(self._segments),
+                    offsets=tuple(offsets),
+                    alive=tuple(alive),
+                    alive_global=jnp.asarray(~self._tombstones),
+                    generation=self._generation,
+                    num_passages=off,
+                )
+            return self._cached_snapshot
+
+    # ---- persistence -----------------------------------------------------
+    def save(self, path: str) -> None:
+        """Write the v2 segment-manifest layout (atomic manifest swap).
+
+        Saves of one LiveIndex serialize on their own lock (held across
+        snapshot AND write, so generations reach disk in order even when a
+        Compactor spill races a user save) without blocking mutations or
+        readers."""
+        with self._save_lock:
+            with self._lock:
+                segments = list(self._segments)
+                seg_ids = list(self._seg_ids)
+                tombstones = self._tombstones.copy()
+                generation = self._generation
+            manifest_mod.save_segmented(
+                path, segments, seg_ids, tombstones, generation,
+                index_uuid=self._uuid,
+            )
+
+    @classmethod
+    def load(cls, path: str) -> "LiveIndex":
+        """Read a v2 directory — or a v1 one as a single-base-segment index."""
+        segments, seg_ids, tombstones, generation, index_uuid = (
+            manifest_mod.load_segmented(path)
+        )
+        return cls(
+            segments[0],
+            segments[1:],
+            tombstones=tombstones,
+            generation=generation,
+            seg_ids=seg_ids,
+            index_uuid=index_uuid,
+        )
+
+
+class IndexWriter:
+    """Buffered mutation handle over a LiveIndex: ``add``/``delete``/``flush``.
+
+    ``add`` buffers passages host-side; ``flush`` turns the buffer into ONE
+    delta segment (amortizing the per-segment search cost over many adds)
+    and returns the assigned global pids.  ``delete`` applies immediately —
+    tombstones are cheap.  With ``flush_every`` set, the buffer self-flushes
+    once it holds that many passages.  Also a context manager: leaving the
+    ``with`` block flushes.
+    """
+
+    def __init__(self, live: LiveIndex, *, flush_every: int | None = None):
+        self.live = live
+        self.flush_every = flush_every
+        self._buffer: list[np.ndarray] = []
+        self._lock = threading.Lock()
+
+    @property
+    def pending(self) -> int:
+        """Number of buffered (un-flushed) passages."""
+        with self._lock:
+            return len(self._buffer)
+
+    def add(self, doc_embeddings) -> None:
+        """Buffer one or more (len_i, dim) passages for the next flush."""
+        if getattr(doc_embeddings, "ndim", None) == 2:  # one passage matrix
+            doc_embeddings = [doc_embeddings]
+        with self._lock:
+            self._buffer.extend(np.asarray(d) for d in doc_embeddings)
+            should_flush = (
+                self.flush_every is not None
+                and len(self._buffer) >= self.flush_every
+            )
+        if should_flush:
+            self.flush()
+
+    def delete(self, pids) -> int:
+        return self.live.delete(pids)
+
+    def flush(self) -> np.ndarray:
+        """Materialize buffered passages as one delta segment -> global pids."""
+        with self._lock:
+            buffered, self._buffer = self._buffer, []
+        if not buffered:
+            return np.zeros(0, np.int64)
+        return self.live.add_passages(buffered)
+
+    def __enter__(self) -> "IndexWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.flush()

@@ -1,0 +1,241 @@
+"""On-disk format for segmented PLAID indexes — ``format_version: 2``.
+
+A v2 index directory is a *segment manifest*::
+
+    <path>/
+      manifest.json            # format_version, generation, segment list
+      seg_000000/arrays.npz    # base segment (PlaidIndex array fields)
+      seg_000001/arrays.npz    # delta segments, same layout
+      tombstones_000007.npy    # bool bitmap over global pids (if any dead)
+
+Writer protocol (crash-safe, single-writer / many-reader):
+
+1. every referenced payload (segment ``arrays.npz``, tombstone bitmap) is
+   written BEFORE the manifest that names it, via write-to-temp +
+   ``os.replace``;
+2. the manifest itself is swapped in atomically (``os.replace``), carrying
+   a monotonic ``generation`` counter — segment dirs are never rewritten
+   in place with different content for the same name, and tombstone
+   bitmaps are generation-suffixed;
+3. only after the swap are ``seg_*`` / ``tombstones_*`` entries no
+   manifest references garbage-collected.
+
+So a reader never observes a half-written generation: every file a
+manifest names was completed before that manifest appeared.  A reader
+that raced a *save* (its generation's files GC'd mid-read) hits a clean
+``FileNotFoundError``, never torn data; ``load_segmented`` re-reads the
+fresh manifest and retries.
+
+v1 directories (flat ``arrays.npz`` + manifest, written by historical
+``indexer.save_index``) remain readable and load as a single-base-segment
+index; unknown versions fail loudly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+
+import numpy as np
+
+from repro.core.index import PlaidIndex
+
+FORMAT_VERSION = 2
+
+#: PlaidIndex array fields (the ``arrays.npz`` contents) and static fields
+#: (JSON-able metadata), derived from the dataclass so they cannot drift.
+ARRAY_FIELDS = tuple(
+    f.name for f in dataclasses.fields(PlaidIndex) if not f.metadata.get("static")
+)
+STATIC_FIELDS = tuple(
+    f.name for f in dataclasses.fields(PlaidIndex) if f.metadata.get("static")
+)
+
+
+def segment_name(seg_id: int) -> str:
+    return f"seg_{seg_id:06d}"
+
+
+def segment_static_meta(seg: PlaidIndex) -> dict:
+    return {k: getattr(seg, k) for k in STATIC_FIELDS}
+
+
+# --------------------------------------------------------------------------
+# segment payloads
+# --------------------------------------------------------------------------
+def _write_durable(path_tmp: str, path_final: str, write_fn) -> None:
+    """write to temp -> flush+fsync -> rename: the payload is fully on disk
+    before any manifest can name it (crash ordering vs. the manifest's own
+    fsync in ``write_manifest_atomic``)."""
+    with open(path_tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(path_tmp, path_final)
+
+
+def write_segment(seg_dir: str, seg: PlaidIndex) -> None:
+    """Write one segment's arrays; atomic w.r.t. concurrent readers."""
+    os.makedirs(seg_dir, exist_ok=True)
+    arrays = {f: np.asarray(getattr(seg, f)) for f in ARRAY_FIELDS}
+    _write_durable(
+        os.path.join(seg_dir, "arrays.tmp.npz"),
+        os.path.join(seg_dir, "arrays.npz"),
+        lambda f: np.savez(f, **arrays),
+    )
+
+
+def read_segment(seg_dir: str, static_meta: dict) -> PlaidIndex:
+    import jax.numpy as jnp
+
+    with np.load(os.path.join(seg_dir, "arrays.npz")) as data:
+        arrays = {f: jnp.asarray(data[f]) for f in ARRAY_FIELDS}
+    return PlaidIndex(**arrays, **{k: static_meta[k] for k in STATIC_FIELDS})
+
+
+# --------------------------------------------------------------------------
+# manifest
+# --------------------------------------------------------------------------
+def read_manifest(path: str) -> dict:
+    """Load + version-check ``<path>/manifest.json``.
+
+    Raises ``ValueError`` on any format_version this build does not speak
+    (a silent fallthrough would mis-read a future layout as flat arrays).
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    version = manifest.get("format_version", 1)
+    if version not in (1, FORMAT_VERSION):
+        raise ValueError(
+            f"index at {path!r} has format_version={version!r}; this build "
+            f"reads versions 1 and {FORMAT_VERSION} — refusing to guess"
+        )
+    return manifest
+
+
+def write_manifest_atomic(path: str, manifest: dict) -> None:
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(path, "manifest.json"))
+
+
+# --------------------------------------------------------------------------
+# whole-directory save / load
+# --------------------------------------------------------------------------
+def save_segmented(
+    path: str,
+    segments: list[PlaidIndex],
+    seg_ids: list[int],
+    tombstones: np.ndarray | None,
+    generation: int,
+    index_uuid: str | None = None,
+) -> None:
+    """Write a v2 index directory (payloads first, manifest swap last).
+
+    ``index_uuid`` identifies one LiveIndex lineage: within a lineage a
+    segment name always maps to the same immutable content, so segments
+    the CURRENT on-disk manifest (same uuid) already references are
+    skipped — a periodic save after a delta flush costs O(delta) disk
+    I/O, not O(corpus) re-serialization of the base.
+    """
+    os.makedirs(path, exist_ok=True)
+    names = [segment_name(i) for i in seg_ids]
+    already_on_disk: set[str] = set()
+    if index_uuid is not None:
+        try:
+            existing = read_manifest(path)
+            if existing.get("index_uuid") == index_uuid:
+                already_on_disk = {s["name"] for s in existing["segments"]}
+        except (FileNotFoundError, ValueError, KeyError):
+            pass
+    for name, seg in zip(names, segments):
+        if name not in already_on_disk:
+            write_segment(os.path.join(path, name), seg)
+    ts_name = None
+    if tombstones is not None and tombstones.any():
+        ts_name = f"tombstones_{generation:06d}.npy"
+        _write_durable(
+            os.path.join(path, f"tombstones_{generation:06d}.tmp.npy"),
+            os.path.join(path, ts_name),
+            lambda f: np.save(f, np.asarray(tombstones, bool)),
+        )
+    base = segments[0]
+    manifest = dict(
+        format_version=FORMAT_VERSION,
+        generation=generation,
+        index_uuid=index_uuid,
+        segments=[
+            dict(
+                name=name,
+                num_passages=int(seg.num_passages),
+                num_tokens=int(seg.num_tokens),
+                **segment_static_meta(seg),
+            )
+            for name, seg in zip(names, segments)
+        ],
+        tombstones=ts_name,
+        num_passages=int(sum(s.num_passages for s in segments)),
+        num_centroids=int(base.num_centroids),
+        dim=base.dim,
+        nbits=base.nbits,
+    )
+    write_manifest_atomic(path, manifest)
+    _collect_garbage(path, keep=set(names) | ({ts_name} if ts_name else set()))
+
+
+def _collect_garbage(path: str, keep: set[str]) -> None:
+    """Drop segment dirs / tombstone bitmaps no manifest references."""
+    for entry in os.listdir(path):
+        if entry in keep or entry.endswith(".tmp") or entry.endswith(".tmp.npy"):
+            continue
+        full = os.path.join(path, entry)
+        if entry.startswith("seg_") and os.path.isdir(full):
+            shutil.rmtree(full, ignore_errors=True)
+        elif entry.startswith("tombstones_") and entry.endswith(".npy"):
+            os.unlink(full)
+
+
+def load_segmented(path: str, _retries: int = 2):
+    """Read a v1 or v2 index directory.
+
+    Returns ``(segments, seg_ids, tombstones, generation, index_uuid)``;
+    v1 directories come back as a single base segment with an all-alive
+    bitmap (and no uuid).  If a concurrent save garbage-collects this
+    reader's generation mid-read (clean ``FileNotFoundError``, see module
+    docstring), the fresh manifest is re-read and the load retried.
+    """
+    try:
+        return _load_segmented_once(path)
+    except FileNotFoundError:
+        if _retries <= 0:
+            raise
+        return load_segmented(path, _retries=_retries - 1)
+
+
+def _load_segmented_once(path: str):
+    manifest = read_manifest(path)
+    if manifest.get("format_version", 1) == 1:
+        seg = read_segment(path, manifest)  # flat arrays.npz next to manifest
+        return [seg], [0], np.zeros(seg.num_passages, bool), 0, None
+    segments, seg_ids = [], []
+    for entry in manifest["segments"]:
+        segments.append(read_segment(os.path.join(path, entry["name"]), entry))
+        seg_ids.append(int(entry["name"].split("_")[-1]))
+    total = sum(s.num_passages for s in segments)
+    if manifest.get("tombstones"):
+        tombstones = np.load(os.path.join(path, manifest["tombstones"]))
+        tombstones = np.asarray(tombstones, bool)
+        assert tombstones.shape[0] == total
+    else:
+        tombstones = np.zeros(total, bool)
+    return (
+        segments,
+        seg_ids,
+        tombstones,
+        int(manifest["generation"]),
+        manifest.get("index_uuid"),
+    )

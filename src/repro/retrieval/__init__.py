@@ -9,8 +9,9 @@ One engine surface over every backend (PLAID paper Fig. 5 driver)::
     res2 = r.search_batch(qs, t_cs=0.4)                 # dynamic: NO recompile
     r.save("/idx");  r2 = retrieval.load("/idx")        # round-trips any backend
 
-Backends: ``"vanilla"``, ``"plaid"``, ``"plaid-pallas"``, ``"plaid-sharded"``
-(see ``retrieval.list_backends()``).  ``SearchParams`` is split into static
+Backends: ``"vanilla"``, ``"plaid"``, ``"plaid-pallas"``, ``"plaid-sharded"``,
+``"live"``, ``"live-pallas"`` (see ``retrieval.list_backends()``).
+``SearchParams`` is split into static
 caps (recompile on change) and dynamic scalars (traced) — see
 ``repro/retrieval/types.py`` and README "Retrieval facade".
 """
@@ -25,6 +26,7 @@ from repro.retrieval.registry import (
 from repro.retrieval.types import (
     DEFAULT_SCORE_DTYPE,
     DYNAMIC_FIELDS,
+    MutableRetriever,
     PAPER_PARAMS,
     RetrieverConfig,
     Retriever,
@@ -35,8 +37,10 @@ from repro.retrieval.types import (
     params_for_k,
 )
 
-# importing the module registers the built-in backends
+# importing the modules registers the built-in backends (incl. the
+# mutable-corpus "live"/"live-pallas" engines from repro.live)
 from repro.retrieval import backends as _backends  # noqa: E402,F401
+from repro.live import backend as _live_backend  # noqa: E402,F401
 
 __all__ = [
     "build",
@@ -46,6 +50,7 @@ __all__ = [
     "get_backend",
     "list_backends",
     "Retriever",
+    "MutableRetriever",
     "RetrieverConfig",
     "SearchParams",
     "SearchRequest",

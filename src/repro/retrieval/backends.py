@@ -1,4 +1,4 @@
-"""The four built-in backends behind the ``Retriever`` facade.
+"""The static built-in backends behind the ``Retriever`` facade.
 
 ================  =========================================================
 ``vanilla``       ColBERTv2 baseline (embedding-level IVF, full padded
@@ -10,6 +10,10 @@
                   mesh device, small all-gather top-k merge).
 ================  =========================================================
 
+The mutable-corpus backends (``"live"`` / ``"live-pallas"``, implementing
+the ``MutableRetriever`` protocol) register from ``repro.live.backend``,
+which reuses this module's request/result plumbing.
+
 Parameter mapping is uniform: ``SearchParams.candidate_cap`` is the stage-1
 candidate bound (candidate *passages* for PLAID, candidate *embeddings* for
 vanilla, matching each engine's native unit) and ``ndocs`` the stage-2/final
@@ -18,6 +22,7 @@ serve time never recompiles (``describe()["compile"]`` proves it).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -43,6 +48,23 @@ from repro.retrieval.types import (
 
 def _build_index(corpus_embs, cfg: RetrieverConfig, doc_lens):
     return index_mod.build_index(corpus_embs, doc_lens=doc_lens, **cfg.index)
+
+
+def to_engine_params(p: SearchParams, impl: str = "ref") -> plaid_mod.SearchParams:
+    """Facade ``SearchParams`` -> core ``plaid.SearchParams``.
+
+    The ONE mapping site shared by every PLAID-pipeline backend (plaid,
+    plaid-pallas, plaid-sharded, live, live-pallas): adding a field to the
+    facade params only needs threading here."""
+    return plaid_mod.SearchParams(
+        k=p.k,
+        nprobe=p.nprobe,
+        t_cs=p.t_cs,
+        ndocs=p.ndocs,
+        candidate_cap=p.candidate_cap,
+        impl=impl,
+        score_dtype=p.score_dtype,
+    )
 
 
 def _as_request(q, q_mask, t_cs, with_diagnostics) -> SearchRequest:
@@ -107,18 +129,8 @@ class PlaidRetriever:
     def __init__(self, index, params: SearchParams | None = None):
         self.index = index
         self.params = params or SearchParams()
-        p = self.params
         self._engine = plaid_mod.PlaidEngine(
-            index,
-            plaid_mod.SearchParams(
-                k=p.k,
-                nprobe=p.nprobe,
-                t_cs=p.t_cs,
-                ndocs=p.ndocs,
-                candidate_cap=p.candidate_cap,
-                impl=self.impl,
-                score_dtype=p.score_dtype,
-            ),
+            index, to_engine_params(self.params, self.impl)
         )
 
     # ---- construction ----------------------------------------------------
@@ -324,14 +336,10 @@ class ShardedRetriever:
         p = self.params
         self._search_fn = engine_sharded.make_sharded_search(
             self.mesh,
-            plaid_mod.SearchParams(
-                k=p.k,
-                nprobe=p.nprobe,
-                t_cs=p.t_cs,
-                ndocs=p.ndocs,
+            dataclasses.replace(
+                to_engine_params(p),
                 # stage-1 bound is per shard: clamp to the shard's corpus
                 candidate_cap=min(p.candidate_cap, max(docs_per_shard, 2)),
-                score_dtype=p.score_dtype,
             ),
             docs_per_shard=docs_per_shard,
             static_meta=meta,

@@ -129,4 +129,17 @@ def _sniff_backend(path: str) -> str:
             f"{path!r} holds neither {_META_FILE!r} nor a manifest.json"
         )
     with open(manifest) as f:
-        return "plaid-sharded" if "n_shards" in json.load(f) else "plaid"
+        m = json.load(f)
+    if "n_shards" in m:
+        return "plaid-sharded"
+    # LiveIndex.save stamps its lineage uuid, so a live-written directory
+    # sniffs as "live" even when freshly compacted (one clean segment) —
+    # recovery must not lose the mutation surface depending on whether a
+    # compaction happened to precede the last save
+    if m.get("index_uuid"):
+        return "live"
+    # a v2 segment manifest with pending deltas or tombstones is a live
+    # index; a single clean segment loads as a plain PlaidIndex
+    if len(m.get("segments", ())) > 1 or m.get("tombstones"):
+        return "live"
+    return "plaid"

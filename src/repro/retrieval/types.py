@@ -180,3 +180,27 @@ class Retriever(Protocol):
     def describe(self) -> dict:
         """Static-shape / compile-cache introspection + index stats."""
         ...
+
+
+@runtime_checkable
+class MutableRetriever(Retriever, Protocol):
+    """A Retriever whose corpus can change at serving time.
+
+    Implemented by the ``"live"`` / ``"live-pallas"`` backends
+    (``repro.live``): mutations are snapshot-consistent with in-flight
+    searches and never require an index rebuild.  ``BatchingServer``
+    forwards its ``add_passages`` / ``delete_passages`` to this surface.
+    """
+
+    def add_passages(self, doc_embeddings, doc_lens=None):
+        """Ingest passages (one delta segment); returns their global pids."""
+        ...
+
+    def delete_passages(self, pids) -> int:
+        """Tombstone global pids; returns how many were newly deleted."""
+        ...
+
+    def compact(self):
+        """Merge delta segments into the base, dropping tombstoned docs;
+        returns the old->new global pid map (``-1`` = dropped)."""
+        ...

@@ -13,8 +13,15 @@ whole coalesced batch, rather than a per-lane vmap of the single-query
 program — the engine-side half of the micro-batching bargain.
 
 The server takes any ``repro.retrieval.Retriever`` (facade backends return
-``SearchResult``) and also still accepts the raw core engines (plain
-``(scores, pids)`` tuples) during the deprecation window.
+``SearchResult``) and also accepts the raw core engines (plain
+``(scores, pids)`` tuples).
+
+With a mutable backend (``"live"``), ``add_passages`` / ``delete_passages``
+update the corpus while queries are in flight: LiveIndex mutations swap
+immutable references under a lock and searches run on snapshots, so the
+dispatcher thread needs no coordination — a batch dispatched before an
+ingest completes against the old snapshot, the next batch sees the new
+segment.
 """
 from __future__ import annotations
 
@@ -45,7 +52,6 @@ class BatchingServer:
         max_wait_ms: float = 2.0,
     ):
         self.retriever = retriever
-        self.searcher = retriever  # deprecated alias
         self.batch_size = batch_size
         self.max_wait = max_wait_ms / 1e3
         self._q: queue.Queue = queue.Queue()
@@ -102,6 +108,31 @@ class BatchingServer:
 
     def search(self, q_emb: np.ndarray, timeout: float = 30.0) -> RetrievalResult:
         return self.submit(q_emb).get(timeout=timeout)
+
+    # ---- corpus mutation (live backends) ---------------------------------
+    def _mutable(self, op: str):
+        fn = getattr(self.retriever, op, None)
+        if fn is None:
+            raise TypeError(
+                f"retriever backend "
+                f"{getattr(self.retriever, 'backend_name', type(self.retriever).__name__)!r} "
+                f"does not support {op}; serve a mutable backend "
+                "(retrieval.build(..., backend='live'))"
+            )
+        return fn
+
+    def add_passages(self, doc_embeddings, doc_lens=None) -> np.ndarray:
+        """Ingest passages into a live backend while serving; returns the
+        new global pids.  Safe to call concurrently with ``submit``: the
+        underlying LiveIndex swaps snapshots, so in-flight batches finish
+        against the old corpus and later batches see the new passages."""
+        return self._mutable("add_passages")(doc_embeddings, doc_lens=doc_lens)
+
+    def delete_passages(self, pids) -> int:
+        """Tombstone passages in a live backend while serving; returns the
+        number newly deleted.  Batches dispatched after this call no longer
+        return the deleted pids."""
+        return self._mutable("delete_passages")(pids)
 
     def stats(self) -> dict:
         with self._lock:

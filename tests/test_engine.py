@@ -23,7 +23,7 @@ def small_index():
 
 def test_plaid_finds_gold(small_index):
     idx, qs, gold = small_index
-    s = plaid.PlaidSearcher(idx, plaid.params_for_k(10))
+    s = plaid.PlaidEngine(idx, plaid.params_for_k(10))
     scores, pids = s.search_batch(qs)
     assert (np.asarray(pids[:, 0]) == gold).mean() >= 0.95
 
@@ -32,10 +32,10 @@ def test_plaid_matches_vanilla_topk(small_index):
     """Paper claim: PLAID k=1000-style conservative settings retain the
     vanilla top-k (recall ~1 at k'=k)."""
     idx, qs, gold = small_index
-    sp = plaid.PlaidSearcher(
+    sp = plaid.PlaidEngine(
         idx, dataclasses.replace(plaid.params_for_k(10), nprobe=4, t_cs=0.3)
     )
-    sv = vanilla.VanillaSearcher(
+    sv = vanilla.VanillaEngine(
         idx, vanilla.VanillaParams(k=10, nprobe=4, ncandidates=2048)
     )
     _, p_pids = sp.search_batch(qs)
@@ -53,12 +53,12 @@ def test_centroid_only_recall_high(small_index):
     """Fig. 3 analog: centroid-only retrieval at 10k' recovers vanilla top-k."""
     idx, qs, gold = small_index
     k = 5
-    sv = vanilla.VanillaSearcher(
+    sv = vanilla.VanillaEngine(
         idx, vanilla.VanillaParams(k=k, nprobe=4, ncandidates=2048)
     )
     _, v_pids = sv.search_batch(qs)
     # centroid-only: stage 1+3 without stage 4 (scores from centroids alone)
-    sp = plaid.PlaidSearcher(
+    sp = plaid.PlaidEngine(
         idx,
         dataclasses.replace(
             plaid.params_for_k(10 * k), nprobe=4, t_cs=-1e9, ndocs=10 * k
@@ -76,7 +76,7 @@ def test_centroid_only_recall_high(small_index):
 
 def test_pruning_reduces_scored_tokens_but_keeps_quality(small_index):
     idx, qs, gold = small_index
-    strict = plaid.PlaidSearcher(
+    strict = plaid.PlaidEngine(
         idx, dataclasses.replace(plaid.params_for_k(10), t_cs=0.45)
     )
     _, pids = strict.search_batch(qs)
@@ -113,7 +113,7 @@ def test_paper_hyperparameters_table2():
 
 def test_search_deterministic(small_index):
     idx, qs, _ = small_index
-    s = plaid.PlaidSearcher(idx, plaid.params_for_k(10))
+    s = plaid.PlaidEngine(idx, plaid.params_for_k(10))
     a = s.search(qs[0])
     b = s.search(qs[0])
     np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))

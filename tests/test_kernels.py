@@ -68,8 +68,8 @@ def test_engine_pallas_impl_matches_ref_impl():
     docs, _ = syn.embedding_corpus(150, dim=32, seed=3)
     idx = index_mod.build_index(docs, num_centroids=32, nbits=2, kmeans_iters=3)
     qs, _ = syn.queries_from_docs(docs, 8)
-    ref = plaid.PlaidSearcher(idx, plaid.params_for_k(10, impl="ref"))
-    pal = plaid.PlaidSearcher(idx, plaid.params_for_k(10, impl="pallas"))
+    ref = plaid.PlaidEngine(idx, plaid.params_for_k(10, impl="ref"))
+    pal = plaid.PlaidEngine(idx, plaid.params_for_k(10, impl="pallas"))
     s1, p1 = ref.search_batch(jnp.asarray(qs))
     s2, p2 = pal.search_batch(jnp.asarray(qs))
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,549 @@
+"""Live index subsystem: multi-segment rank-identity vs. full rebuild,
+tombstoned deletes, compaction equivalence, v1/v2 manifest round-trips,
+and concurrent ingest-while-querying through the BatchingServer."""
+import json
+import os
+import tempfile
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import live, retrieval
+from repro.core import index as index_mod, indexer, plaid
+from repro.data import synthetic as syn
+
+#: Caps that cover every test corpus entirely, so no pipeline stage prunes
+#: a passage the from-scratch rebuild would keep — exact rank identity
+#: between segmented search and the rebuilt union index is well-defined.
+def _params(k, impl="ref"):
+    return plaid.SearchParams(
+        k=k, nprobe=4, t_cs=0.3, ndocs=256, candidate_cap=256, impl=impl
+    )
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    docs, _ = syn.embedding_corpus(140, dim=32, min_len=6, max_len=18, seed=0)
+    qs, gold = syn.queries_from_docs(docs, 10, q_len=6)
+    return docs, jnp.asarray(qs), gold
+
+
+@pytest.fixture(scope="module")
+def live_setup(corpus):
+    """Base (90 docs) + 2 delta segments + 1 tombstone per segment.
+
+    Read-only after construction — mutation tests build their own."""
+    docs, qs, gold = corpus
+    base = index_mod.build_index(
+        docs[:90], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+    lv = live.LiveIndex(base)
+    lv.add_passages(docs[90:115])
+    lv.add_passages(docs[115:])
+    lv.delete([7, 95, 120])
+    return docs, base, lv, qs
+
+
+def _rebuild_surviving(docs, base, lv):
+    """From-scratch PlaidIndex rebuild of the surviving union corpus
+    (same frozen centroid space + codec), and the rebuild->global pid map."""
+    alive = ~lv.tombstones()
+    surviving = [d for d, a in zip(docs, alive) if a]
+    rebuilt = index_mod.build_index(
+        surviving, centroids=base.centroids, codec=base.codec
+    )
+    return rebuilt, np.flatnonzero(alive)
+
+
+# --------------------------------------------------------------------------
+# Acceptance: ≥2 delta segments + tombstones == from-scratch rebuild
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_multi_segment_rank_identity_vs_rebuild(live_setup, corpus, impl):
+    """Segmented search over base+2 deltas with tombstoned passages returns
+    top-k pids/scores rank-identical to rebuilding the surviving corpus
+    from scratch, on both kernel paths."""
+    docs, base, lv, qs = live_setup
+    assert lv.num_deltas >= 2 and lv.num_deleted >= 1
+    rebuilt, to_global = _rebuild_surviving(docs, base, lv)
+
+    k = lv.num_alive  # full ranking: the strictest possible comparison
+    eng = live.LiveEngine(lv, _params(k, impl))
+    got_s, got_p = eng.search_batch(qs)
+    ref = plaid.PlaidEngine(rebuilt, _params(k, impl))
+    want_s, want_p = ref.search_batch(qs)
+    want_p_global = np.where(
+        np.asarray(want_p) >= 0, to_global[np.asarray(want_p)], -1
+    )
+    np.testing.assert_array_equal(np.asarray(got_p), want_p_global)
+    np.testing.assert_allclose(
+        np.asarray(got_s), np.asarray(want_s), atol=1e-5
+    )
+
+
+def test_multi_segment_agreement_at_paper_k(live_setup, corpus):
+    """At a serving-realistic k=10 cut, stage-3 truncation happens per
+    segment rather than globally (the same caveat as document-sharded
+    PLAID), so the exact guarantee is top-1 identity + high tail overlap."""
+    docs, base, lv, qs = live_setup
+    rebuilt, to_global = _rebuild_surviving(docs, base, lv)
+    got_s, got_p = live.LiveEngine(lv, _params(10)).search_batch(qs)
+    want_s, want_p = plaid.PlaidEngine(rebuilt, _params(10)).search_batch(qs)
+    want_global = to_global[np.asarray(want_p)]
+    np.testing.assert_array_equal(np.asarray(got_p)[:, 0], want_global[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(got_s)[:, 0], np.asarray(want_s)[:, 0], atol=1e-5
+    )
+    overlap = np.mean(
+        [
+            len(set(g) & set(w)) / 10
+            for g, w in zip(np.asarray(got_p), want_global)
+        ]
+    )
+    assert overlap >= 0.9
+
+
+def test_single_query_is_squeeze_of_batch(live_setup):
+    docs, base, lv, qs = live_setup
+    eng = live.LiveEngine(lv, _params(10))
+    s1, p1 = eng.search(qs[0])
+    sb, pb = eng.search_batch(qs[:1])
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(pb[0]))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(sb[0]))
+
+
+# --------------------------------------------------------------------------
+# Deletes
+# --------------------------------------------------------------------------
+def test_delete_then_query_excludes_tombstoned(corpus):
+    docs, qs, gold = corpus
+    base = index_mod.build_index(
+        docs[:120], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+    lv = live.LiveIndex(base)
+    lv.add_passages(docs[120:])
+    eng = live.LiveEngine(lv, _params(5))
+    _, before = eng.search_batch(qs)
+    target = int(np.asarray(before[0, 0]))  # the best hit for query 0
+    assert lv.delete([target]) == 1
+    assert lv.delete([target]) == 0  # idempotent
+    _, after = eng.search_batch(qs)
+    assert target not in np.asarray(after[0])
+    # every other lane still returns k live passages
+    assert (np.asarray(after) >= 0).all()
+    with pytest.raises(IndexError):
+        lv.delete([lv.num_passages + 3])
+
+
+def test_tombstone_and_t_cs_updates_never_recompile(corpus):
+    """Deletes only change the traced alive bitmap — zero retraces, like a
+    t_cs sweep."""
+    docs, qs, gold = corpus
+    base = index_mod.build_index(
+        docs[:80], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+    lv = live.LiveIndex(base)
+    lv.add_passages(docs[80:100])
+    eng = live.LiveEngine(lv, _params(5))
+    eng.search_batch(qs)  # warm both segment shapes
+    n0 = plaid.trace_count()
+    lv.delete([3, 85])
+    eng.search_batch(qs)
+    eng.search_batch(qs, t_cs=0.55)
+    lv.delete([17])
+    eng.search_batch(qs, t_cs=-1e9)
+    assert plaid.trace_count() == n0, "deletes/t_cs must not retrace"
+
+
+# --------------------------------------------------------------------------
+# Compaction
+# --------------------------------------------------------------------------
+def test_compaction_equivalence(corpus):
+    """Compacting (re-pack CSR arrays + both IVFs, drop tombstones) changes
+    neither scores nor ranking, and produces exactly the index a from-
+    scratch rebuild of the surviving corpus would."""
+    docs, qs, gold = corpus
+    base = index_mod.build_index(
+        docs[:90], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+    lv = live.LiveIndex(base)
+    lv.add_passages(docs[90:115])
+    lv.add_passages(docs[115:])
+    lv.delete([2, 40, 93, 116])
+    # lossless k: segmented and global stage-3 cuts both retain everything,
+    # so pre/post-compaction rankings must agree exactly, at full depth
+    eng = live.LiveEngine(lv, _params(lv.num_alive))
+    s0, p0 = eng.search_batch(qs)
+    rebuilt, _ = _rebuild_surviving(docs, base, lv)
+
+    pid_map = lv.compact()
+    assert lv.num_segments == 1 and lv.num_deleted == 0
+    assert lv.num_passages == 140 - 4
+
+    s1, p1 = eng.search_batch(qs)  # engine sees the swap via snapshot()
+    remapped = np.where(np.asarray(p0) >= 0, pid_map[np.asarray(p0)], -1)
+    np.testing.assert_array_equal(remapped, np.asarray(p1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-5)
+
+    # array-identical to the from-scratch rebuild (codes/residual bytes are
+    # reused verbatim; CSR + IVFs rebuilt by the shared assemble path)
+    for field in ("codes", "residuals", "doc_offsets", "ivf_pids",
+                  "ivf_offsets", "eivf_eids"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(lv.base, field)),
+            np.asarray(getattr(rebuilt, field)),
+            err_msg=field,
+        )
+
+
+def test_compact_reconciles_racing_mutations(corpus, monkeypatch):
+    """The expensive merge runs outside the index lock; deletes and appends
+    that land mid-merge must survive the swap (deletes re-applied to the
+    new base, racing segments kept as deltas, pid map covering the tail)."""
+    import repro.live.index as live_index_mod
+
+    docs, qs, gold = corpus
+    base = index_mod.build_index(
+        docs[:100], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+    lv = live.LiveIndex(base)
+    lv.add_passages(docs[100:120])
+
+    merged = threading.Event()
+    release = threading.Event()
+    real_compact = live_index_mod.compact_segments
+
+    def stalled_compact(segments, tombstones):
+        out = real_compact(segments, tombstones)
+        merged.set()  # merge done, swap not yet taken
+        assert release.wait(timeout=60)
+        return out
+
+    monkeypatch.setattr(live_index_mod, "compact_segments", stalled_compact)
+    result: dict = {}
+    t = threading.Thread(target=lambda: result.update(m=lv.compact()))
+    t.start()
+    assert merged.wait(timeout=60)
+    # race the swap: tombstone an old pid, append a new segment
+    assert lv.delete([5]) == 1
+    new_pids = lv.add_passages(docs[120:130])
+    release.set()
+    t.join(timeout=60)
+    full_map = result["m"]
+
+    assert lv.num_deltas == 1, "racing segment must survive the swap"
+    assert full_map.shape[0] == 130
+    # the racing delete was re-applied onto the compacted base
+    assert lv.tombstones()[full_map[5]]
+    assert lv.num_deleted == 1
+    # the racing segment's pids shifted by the compacted base size
+    np.testing.assert_array_equal(
+        full_map[new_pids], lv.base.num_passages + np.arange(10)
+    )
+    # and the reconciled index still searches correctly: exact-token query
+    # for a racing-segment doc finds it under its remapped pid
+    eng = live.LiveEngine(lv, _params(5))
+    _, pids = eng.search(jnp.asarray(docs[125][:6]))
+    assert int(np.asarray(pids)[0]) == int(full_map[new_pids[5]])
+    # ...and the tombstoned pid is gone
+    _, pids5 = eng.search(jnp.asarray(docs[5][:6]))
+    assert int(full_map[5]) not in np.asarray(pids5)
+
+
+def test_background_compactor_thread(corpus):
+    docs, qs, gold = corpus
+    base = index_mod.build_index(
+        docs[:80], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+    lv = live.LiveIndex(base)
+    with live.Compactor(lv, min_deltas=2, interval_s=0.01):
+        lv.add_passages(docs[80:100])
+        lv.add_passages(docs[100:120])
+        deadline = time.time() + 30
+        while lv.num_deltas >= 2 and time.time() < deadline:
+            time.sleep(0.02)
+    assert lv.num_deltas < 2, "background compactor never ran"
+    assert lv.num_passages == 120
+
+
+def test_compactor_stop_final_compact_flushes_pending(corpus):
+    """stop(final_compact=True) must compact/spill even below min_deltas —
+    shutdown is the last chance to persist pending deltas and tombstones."""
+    docs, qs, gold = corpus
+    base = index_mod.build_index(
+        docs[:80], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+    lv = live.LiveIndex(base)
+    lv.add_passages(docs[80:100])  # one delta: below min_deltas=4
+    lv.delete([3])
+    with tempfile.TemporaryDirectory() as d:
+        c = live.Compactor(lv, min_deltas=4, spill_path=d).start()
+        assert c.maybe_compact() is None  # threshold not reached
+        c.stop(final_compact=True)
+        assert lv.num_deltas == 0 and lv.num_deleted == 0
+        assert c.compactions == 1
+        lv2 = live.LiveIndex.load(d)
+    assert lv2.num_passages == 99 and lv2.num_deltas == 0
+
+
+def test_compacted_live_dir_still_sniffs_live(corpus):
+    """A bare live directory saved right after compaction (one clean
+    segment) must still restore with the mutation surface."""
+    docs, qs, gold = corpus
+    base = index_mod.build_index(
+        docs[:80], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+    lv = live.LiveIndex(base)
+    lv.add_passages(docs[80:100])
+    lv.compact()
+    with tempfile.TemporaryDirectory() as d:
+        lv.save(d)  # no retriever.json — registry must sniff the manifest
+        r = retrieval.load(d, params=retrieval.SearchParams(k=5))
+        assert r.backend_name == "live"
+        r.add_passages(docs[100:110])  # the mutation surface survived
+        assert r.describe()["index"]["num_passages"] == 110
+
+
+# --------------------------------------------------------------------------
+# Manifest: v2 round-trip, v1 compat, unknown-version failure, atomicity
+# --------------------------------------------------------------------------
+def test_live_save_load_roundtrip(live_setup):
+    docs, base, lv, qs = live_setup
+    eng = live.LiveEngine(lv, _params(7))
+    s0, p0 = eng.search_batch(qs)
+    with tempfile.TemporaryDirectory() as d:
+        lv.save(d)
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        assert manifest["format_version"] == 2
+        assert len(manifest["segments"]) == 3
+        assert manifest["generation"] == lv.generation
+        lv2 = live.LiveIndex.load(d)
+        assert lv2.num_deltas == 2 and lv2.num_deleted == lv.num_deleted
+        s1, p1 = live.LiveEngine(lv2, _params(7)).search_batch(qs)
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), rtol=1e-6)
+
+
+def test_v1_directory_loads_as_single_base_segment(corpus):
+    docs, qs, gold = corpus
+    idx = index_mod.build_index(
+        docs[:60], num_centroids=32, nbits=2, kmeans_iters=2
+    )
+    with tempfile.TemporaryDirectory() as d:
+        indexer.save_index_v1(d, idx)
+        # the plain loader still reads v1 flat layouts
+        again = indexer.load_index(d)
+        np.testing.assert_array_equal(
+            np.asarray(again.codes), np.asarray(idx.codes)
+        )
+        # and the live loader lifts them to a single-base-segment LiveIndex
+        lv = live.LiveIndex.load(d)
+    assert lv.num_segments == 1 and lv.num_deleted == 0
+    assert lv.num_passages == idx.num_passages
+    s_l, p_l = live.LiveEngine(lv, _params(6)).search_batch(qs)
+    s_p, p_p = plaid.PlaidEngine(idx, _params(6)).search_batch(qs)
+    np.testing.assert_array_equal(np.asarray(p_l), np.asarray(p_p))
+    np.testing.assert_allclose(np.asarray(s_l), np.asarray(s_p), atol=1e-5)
+
+
+def test_v2_single_segment_roundtrips_through_indexer(corpus):
+    docs, qs, gold = corpus
+    idx = index_mod.build_index(
+        docs[:60], num_centroids=32, nbits=2, kmeans_iters=2
+    )
+    with tempfile.TemporaryDirectory() as d:
+        indexer.save_index(d, idx)  # writes format_version 2
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        assert manifest["format_version"] == 2
+        loaded = indexer.load_index(d)
+    for field in ("codes", "residuals", "doc_offsets", "ivf_pids"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(loaded, field)),
+            np.asarray(getattr(idx, field)),
+            err_msg=field,
+        )
+
+
+def test_unknown_format_version_fails_loudly(corpus):
+    docs, qs, gold = corpus
+    idx = index_mod.build_index(
+        docs[:40], num_centroids=32, nbits=2, kmeans_iters=2
+    )
+    with tempfile.TemporaryDirectory() as d:
+        indexer.save_index(d, idx)
+        mpath = os.path.join(d, "manifest.json")
+        manifest = json.load(open(mpath))
+        manifest["format_version"] = 99
+        json.dump(manifest, open(mpath, "w"))
+        with pytest.raises(ValueError, match="format_version"):
+            indexer.load_index(d)
+        with pytest.raises(ValueError, match="format_version"):
+            live.LiveIndex.load(d)
+
+
+def test_multi_segment_dir_refuses_plain_load(live_setup):
+    docs, base, lv, qs = live_setup
+    with tempfile.TemporaryDirectory() as d:
+        lv.save(d)
+        with pytest.raises(ValueError, match="live"):
+            indexer.load_index(d)
+        # the facade sniffs bare live directories by their manifest
+        r = retrieval.load(d, params=retrieval.SearchParams(k=5))
+        assert r.backend_name == "live"
+
+
+def test_generation_swap_garbage_collects_stale_files(corpus):
+    docs, qs, gold = corpus
+    base = index_mod.build_index(
+        docs[:60], num_centroids=32, nbits=2, kmeans_iters=2
+    )
+    lv = live.LiveIndex(base)
+    lv.add_passages(docs[60:80])
+    lv.delete([3])
+    with tempfile.TemporaryDirectory() as d:
+        lv.save(d)
+        gen0 = lv.generation
+        first = set(os.listdir(d))
+        assert f"tombstones_{gen0:06d}.npy" in first
+        lv.compact()
+        lv.save(d)
+        after = set(os.listdir(d))
+        # stale segments + old tombstone bitmaps are collected post-swap
+        assert f"tombstones_{gen0:06d}.npy" not in after
+        assert len([e for e in after if e.startswith("seg_")]) == 1
+        lv2 = live.LiveIndex.load(d)
+        assert lv2.generation == lv.generation
+        assert lv2.num_passages == lv.num_passages
+
+
+# --------------------------------------------------------------------------
+# Facade backend + IndexWriter
+# --------------------------------------------------------------------------
+def test_live_backend_facade_roundtrip(corpus):
+    docs, qs, gold = corpus
+    params = retrieval.SearchParams(
+        k=5, nprobe=4, t_cs=0.3, ndocs=256, candidate_cap=256
+    )
+    r = retrieval.build(
+        docs[:100],
+        backend="live",
+        params=params,
+        index=dict(num_centroids=64, kmeans_iters=3),
+    )
+    assert isinstance(r, retrieval.MutableRetriever)
+    pids = r.add_passages(docs[100:])
+    np.testing.assert_array_equal(pids, np.arange(100, 140))
+    assert r.delete_passages(pids[:3]) == 3
+    res = r.search_batch(qs)
+    assert res.backend == "live" and res.pids.shape == (qs.shape[0], 5)
+    d = r.describe()
+    assert d["index"]["num_deltas"] == 1
+    assert d["index"]["num_deleted"] == 3
+    assert d["index"]["num_alive"] == 137
+    with tempfile.TemporaryDirectory() as tmp:
+        r.save(tmp)
+        r2 = retrieval.load(tmp)
+        assert r2.backend_name == "live"
+        np.testing.assert_array_equal(
+            np.asarray(r2.search_batch(qs).pids), np.asarray(res.pids)
+        )
+
+
+def test_index_writer_buffers_and_flushes(corpus):
+    docs, qs, gold = corpus
+    base = index_mod.build_index(
+        docs[:100], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+    lv = live.LiveIndex(base)
+    w = live.IndexWriter(lv)
+    w.add(docs[100])
+    w.add(docs[101:110])
+    assert w.pending == 10 and lv.num_deltas == 0  # buffered, not visible
+    pids = w.flush()
+    np.testing.assert_array_equal(pids, np.arange(100, 110))
+    assert lv.num_deltas == 1 and w.pending == 0
+    assert w.flush().size == 0  # empty flush is a no-op
+    assert w.delete(pids[:2]) == 2
+    # auto-flush threshold
+    w2 = live.IndexWriter(lv, flush_every=5)
+    for d in docs[110:115]:
+        w2.add(d)
+    assert w2.pending == 0 and lv.num_deltas == 2
+    # context manager flushes the tail
+    with live.IndexWriter(lv) as w3:
+        w3.add(docs[115:118])
+    assert lv.num_passages == 118
+
+
+# --------------------------------------------------------------------------
+# Serving: concurrent ingest / delete while queries are in flight
+# --------------------------------------------------------------------------
+def test_server_concurrent_ingest_while_querying(corpus):
+    from repro.serving.server import BatchingServer
+
+    docs, qs, gold = corpus
+    r = retrieval.build(
+        docs[:100],
+        backend="live",
+        params=retrieval.SearchParams(
+            k=5, nprobe=4, t_cs=0.3, ndocs=256, candidate_cap=256
+        ),
+        index=dict(num_centroids=64, kmeans_iters=3),
+    )
+    srv = BatchingServer(r, batch_size=4, max_wait_ms=2.0)
+    errors: list = []
+
+    def mutate():
+        try:
+            for i in range(4):
+                lo = 100 + 10 * i
+                pids = srv.add_passages([np.asarray(d) for d in docs[lo:lo + 10]])
+                srv.delete_passages(pids[:2])
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    try:
+        t = threading.Thread(target=mutate)
+        t.start()
+        futs = [srv.submit(np.asarray(qs[i % qs.shape[0]])) for i in range(24)]
+        got = [f.get(timeout=180) for f in futs]
+        t.join(timeout=180)
+    finally:
+        srv.shutdown()
+    assert not errors
+    for res in got:
+        assert res.pids.shape == (5,) and res.latency_ms > 0
+    # the ingest landed: an exact-token query for an added (non-deleted)
+    # passage finds it at rank 1, under its global pid
+    probe = jnp.asarray(docs[105][:6])
+    res = r.search(probe)
+    assert int(np.asarray(res.pids)[0]) == 105
+    # and the per-batch deletes are gone (pids 100,101,110,111,...)
+    for i in range(4):
+        dead = 100 + 10 * i
+        assert dead not in np.asarray(res.pids)
+    assert r.describe()["index"]["num_deleted"] == 8
+
+
+def test_server_rejects_mutation_on_static_backend(corpus):
+    from repro.serving.server import BatchingServer
+
+    docs, qs, gold = corpus
+    r = retrieval.build(
+        docs[:60],
+        backend="plaid",
+        params=retrieval.SearchParams(k=5),
+        index=dict(num_centroids=32, kmeans_iters=2),
+    )
+    assert not isinstance(r, retrieval.MutableRetriever)
+    srv = BatchingServer(r, batch_size=2, max_wait_ms=1.0)
+    try:
+        with pytest.raises(TypeError, match="live"):
+            srv.add_passages([np.asarray(docs[60])])
+        with pytest.raises(TypeError, match="live"):
+            srv.delete_passages([0])
+    finally:
+        srv.shutdown()

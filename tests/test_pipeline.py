@@ -2,6 +2,7 @@
 shared sentinels/caps, batched kernels, and the stage-1 single-matmul HLO
 regression guard."""
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +27,19 @@ def small_index():
     return idx, jnp.asarray(qs), gold
 
 
+def vmap_search_oracle(eng, qs, q_masks=None):
+    """The pre-refactor batch path — a plain ``jax.vmap`` over the
+    single-query ``plaid._search`` monolith, with the engine's clamped
+    static caps.  Defined here (its only remaining consumer) now that
+    ``PlaidEngine.search_batch_oracle`` has completed its removal cycle."""
+    if q_masks is None:
+        q_masks = jnp.ones(qs.shape[:2], jnp.float32)
+    fn = functools.partial(
+        plaid._search, t_cs=eng.params.t_cs, **eng._kwargs()
+    )
+    return jax.vmap(fn, in_axes=(None, 0, 0))(eng.index, qs, q_masks)
+
+
 # --------------------------------------------------------------------------
 # Acceptance: batched pipeline == vmap-of-_search oracle
 # --------------------------------------------------------------------------
@@ -36,7 +50,7 @@ def test_pipeline_matches_vmap_oracle(small_index, impl):
     idx, qs, _ = small_index
     eng = plaid.PlaidEngine(idx, plaid.params_for_k(10, impl=impl))
     new_s, new_p = eng.search_batch(qs)
-    old_s, old_p = eng.search_batch_oracle(qs)
+    old_s, old_p = vmap_search_oracle(eng, qs)
     np.testing.assert_array_equal(np.asarray(new_p), np.asarray(old_p))
     np.testing.assert_allclose(
         np.asarray(new_s), np.asarray(old_s), atol=1e-5

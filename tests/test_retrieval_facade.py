@@ -12,6 +12,7 @@ from repro.core import engine_sharded, index as index_mod, plaid, vanilla
 from repro.data import synthetic as syn
 
 BACKENDS = ["vanilla", "plaid", "plaid-pallas", "plaid-sharded"]
+ALL_BACKENDS = BACKENDS + ["live", "live-pallas"]  # live covered in test_live
 
 PARAMS = retrieval.SearchParams(
     k=5, nprobe=2, t_cs=0.4, ndocs=64, candidate_cap=128
@@ -34,7 +35,7 @@ def _retriever(idx, backend):
 # registry + construction
 # --------------------------------------------------------------------------
 def test_registry_lists_builtin_backends():
-    assert set(BACKENDS) <= set(retrieval.list_backends())
+    assert set(ALL_BACKENDS) <= set(retrieval.list_backends())
 
 
 def test_unknown_backend_raises_with_choices():
@@ -228,18 +229,17 @@ def test_search_request_object(built):
 
 
 # --------------------------------------------------------------------------
-# deprecation shims
+# deprecation cycle completed: the shims must stay gone
 # --------------------------------------------------------------------------
-def test_deprecated_searchers_warn_but_work(built):
-    docs, idx, qs, gold = built
-    with pytest.warns(DeprecationWarning, match="repro.retrieval"):
-        ps = plaid.PlaidSearcher(idx, plaid.params_for_k(5))
-    with pytest.warns(DeprecationWarning, match="repro.retrieval"):
-        vs = vanilla.VanillaSearcher(idx)
-    _, p_pids = ps.search_batch(qs)
-    assert p_pids.shape == (qs.shape[0], 5)
-    _, v_pids = vs.search_batch(qs)
-    assert v_pids.shape == (qs.shape[0], 10)
+def test_deprecated_shims_removed():
+    """PlaidSearcher/VanillaSearcher, search_batch_oracle and the server's
+    ``searcher`` alias finished their announced removal timeline."""
+    from repro.serving.server import BatchingServer
+
+    assert not hasattr(plaid, "PlaidSearcher")
+    assert not hasattr(vanilla, "VanillaSearcher")
+    assert not hasattr(plaid.PlaidEngine, "search_batch_oracle")
+    assert "searcher" not in vars(BatchingServer)
 
 
 # --------------------------------------------------------------------------

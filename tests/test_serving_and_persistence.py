@@ -22,8 +22,8 @@ def test_index_save_load_roundtrip(built):
     with tempfile.TemporaryDirectory() as d:
         indexer.save_index(d, idx)
         idx2 = indexer.load_index(d)
-    s1, p1 = plaid.PlaidSearcher(idx, plaid.params_for_k(5)).search_batch(qs)
-    s2, p2 = plaid.PlaidSearcher(idx2, plaid.params_for_k(5)).search_batch(qs)
+    s1, p1 = plaid.PlaidEngine(idx, plaid.params_for_k(5)).search_batch(qs)
+    s2, p2 = plaid.PlaidEngine(idx2, plaid.params_for_k(5)).search_batch(qs)
     np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
 
@@ -63,7 +63,7 @@ def test_batching_server_returns_correct_results(built):
     from repro.serving.server import BatchingServer
 
     docs, idx, qs, gold = built
-    searcher = plaid.PlaidSearcher(idx, plaid.params_for_k(5))
+    searcher = plaid.PlaidEngine(idx, plaid.params_for_k(5))
     # direct answers as the oracle
     _, want = searcher.search_batch(qs)
     srv = BatchingServer(searcher, batch_size=4, max_wait_ms=5.0)
