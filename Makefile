@@ -3,13 +3,17 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast smoke bench-dry ci
+.PHONY: test test-fast test-multidevice smoke bench-dry ci
 
 test:  ## tier-1: the full test suite
 	$(PY) -m pytest -x -q
 
 test-fast:  ## skip @pytest.mark.slow (arch smoke cells, multi-device subprocesses)
 	$(PY) -m pytest -q -m "not slow"
+
+test-multidevice:  ## @pytest.mark.multidevice tests (sharded-live grid etc.)
+	## on 4 fake in-process devices; these skip in the plain `make test` run
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" $(PY) -m pytest -q -m multidevice
 
 smoke:  ## quickest benchmark pipeline smoke (table3 only)
 	$(PY) -m benchmarks.run --dry --only table3
@@ -18,4 +22,4 @@ bench-dry:  ## EVERY registered benchmark at dry scale (incl. live_ingest):
 	## catches benchmark registration breakage before merge
 	$(PY) -m benchmarks.run --dry
 
-ci: test bench-dry
+ci: test test-multidevice bench-dry

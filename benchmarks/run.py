@@ -22,6 +22,7 @@ BENCHES = [
     "batched_throughput",  # q/s vs batch size: pipeline vs vmap oracle
     "roofline_report",  # HLO cost model of the batched pipeline
     "live_ingest",  # streaming ingest + latency vs delta count + compaction
+    "sharded_live",  # latency vs shard-count x delta-segment-count sweep
 ]
 
 

@@ -1,0 +1,87 @@
+"""Sharded live serving benchmark: latency vs shard count x delta count.
+
+The ``"live-sharded"`` composition (``repro.exec``: base segment sharded
+over the mesh, delta segments replicated, one shared top-k merge) trades
+three costs this sweep separates:
+
+1. **Shard speedup on the base** — each device searches 1/n of the corpus;
+   at laptop scale (fake host devices) the win is bounded by dispatch
+   overhead, so read trends, not absolutes.
+2. **Delta drag** — replicated deltas add one stacked-pipeline launch and
+   widen the final merge; the sweep holds the TOTAL corpus fixed and only
+   varies segmentation, isolating that overhead.
+3. **One-trace discipline** — the stacked delta program compiles once per
+   segment-count bucket; ``traces`` in the output counts pipeline
+   (re)compiles across the whole row and should stay flat within a bucket.
+
+Shard counts are limited by the visible device count: run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the
+``make test-multidevice`` environment) to sweep the multi-shard points.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro import live
+from repro.core import index as index_mod, pipeline, plaid
+from repro.data import synthetic as syn
+
+from benchmarks import common
+
+N_TOTAL = 8000
+CHUNK = 256  # docs per delta segment
+SHARD_COUNTS = (1, 2, 4)
+DELTA_COUNTS = (0, 1, 3)
+NUM_CENTROIDS = 2048
+
+
+def _segmented_live(docs, n_deltas, chunk, num_centroids):
+    """Same total corpus, segmented as base + n_deltas chunks."""
+    n_base = len(docs) - n_deltas * chunk
+    base = index_mod.build_index(
+        docs[:n_base], num_centroids=num_centroids, kmeans_iters=4
+    )
+    lv = live.LiveIndex(base)
+    for i in range(n_deltas):
+        lv.add_passages(docs[n_base + i * chunk : n_base + (i + 1) * chunk])
+    return lv
+
+
+def run(emit, dry: bool = False):
+    n_total = common.scaled(N_TOTAL, dry, 360)
+    chunk = common.scaled(CHUNK, dry, 24)
+    num_centroids = 256 if dry else NUM_CENTROIDS
+    trials = 1 if dry else 3
+    batch = 4 if dry else 16
+    n_queries = 8 if dry else 64
+    shard_counts = [s for s in SHARD_COUNTS if s <= len(jax.devices())]
+    if len(shard_counts) < len(SHARD_COUNTS):
+        print(
+            f"# sharded_live: only {len(jax.devices())} device(s) visible; "
+            f"sweeping shards={shard_counts} (force more via XLA_FLAGS)"
+        )
+
+    docs, _ = syn.embedding_corpus(n_total, dim=128, seed=0)
+    qs, _ = common.queries(docs, n_queries)
+    params = plaid.SearchParams(
+        k=10, nprobe=2, t_cs=0.45, ndocs=256, candidate_cap=1024
+    )
+
+    for n_deltas in DELTA_COUNTS:
+        lv = _segmented_live(docs, n_deltas, chunk, num_centroids)
+        for n_shards in shard_counts:
+            eng = live.LiveEngine(lv, params, n_shards=n_shards)
+            t0 = pipeline.trace_count()
+            ms = common.time_batched(
+                lambda q: eng.search_batch(q), qs, batch=batch, trials=trials
+            )
+            emit(
+                "sharded_live",
+                f"shards{n_shards}_deltas{n_deltas}",
+                n_docs=n_total,
+                n_shards=n_shards,
+                n_deltas=n_deltas,
+                ms_per_query=round(ms, 3),
+                traces=pipeline.trace_count() - t0,
+            )

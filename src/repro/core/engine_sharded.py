@@ -1,12 +1,16 @@
-"""Document-sharded PLAID engine: the production serving path.
+"""Document-sharded PLAID engine: host-side index partitioning + adapter.
 
 The corpus is partitioned into ``n_shards`` equal sub-corpora, one per mesh
 device (all three axes pod x data x model are used as one flat "docs" axis —
 retrieval is embarrassingly parallel over documents).  Centroids are
-replicated (they are K x 128, small).  Each device runs the full 4-stage
-PLAID pipeline on its shard under ``shard_map``, then the per-shard top-k
-tuples are merged with one small all-gather (bytes independent of corpus
-size, DESIGN §3).
+replicated (they are K x 128, small).
+
+Execution lives in the partition-execution layer: :mod:`repro.exec.sharded`
+runs the full 4-stage pipeline per shard under ``shard_map`` and joins the
+one shared merge in ``repro.distributed.topk`` — this module holds NO merge
+logic of its own.  What stays here is the *host-side* partitioner
+:func:`shard_index` (build one global index, split by document range) plus
+compatibility re-exports.
 
 Fault tolerance: a shard's index is a pure pytree of arrays — a respawned
 host reloads its shard from the index store and rejoins; no cross-shard
@@ -14,88 +18,21 @@ state exists.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-try:  # jax >= 0.8: public API; check_vma replaces check_rep
-    from jax import shard_map as _shard_map
-
-    def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
-        return _shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=check_rep,
-        )
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
-
-from repro.core import pipeline, plaid
+# Compatibility re-exports: the version shim lives in repro.compat, the
+# execution primitives in repro.exec.sharded.  Import from those homes in
+# new code.
+from repro.compat import shard_map  # noqa: F401
 from repro.core.index import PlaidIndex
-from repro.distributed import topk as dtopk
-
-DOC_AXES = ("pod", "data", "model")  # flattened into one logical docs axis
-
-
-def _doc_axes(mesh):
-    return tuple(a for a in DOC_AXES if a in mesh.axis_names)
-
-
-def index_shardings(mesh, index: PlaidIndex):
-    """NamedShardings for a globally-assembled sharded index.
-
-    Doc-partitioned arrays shard their leading axis over all mesh axes;
-    centroid-space arrays (centroids, codec tables, IVF offsets) replicate.
-    """
-    ax = _doc_axes(mesh)
-    doc = NamedSharding(mesh, P(ax))
-    rep = NamedSharding(mesh, P())
-    return PlaidIndex(
-        centroids=rep,
-        codes=doc,
-        residuals=doc,
-        tok_pid=doc,
-        doc_offsets=doc,
-        doc_lens=doc,
-        ivf_pids=doc,
-        ivf_offsets=doc,
-        ivf_lens=doc,
-        eivf_eids=doc,
-        eivf_offsets=doc,
-        eivf_lens=doc,
-        cutoffs=rep,
-        weights=rep,
-        dim=index.dim,
-        nbits=index.nbits,
-        doc_maxlen=index.doc_maxlen,
-        ivf_list_cap=index.ivf_list_cap,
-        eivf_list_cap=index.eivf_list_cap,
-    )
-
-
-_REPLICATED_FIELDS = {"centroids", "cutoffs", "weights"}
-
-
-def _index_spec_tree(doc, rep):
-    """Field-name -> PartitionSpec dict matching PlaidIndex's array fields
-    (dicts avoid treedef mismatches from PlaidIndex's static metadata)."""
-    import dataclasses as _dc
-
-    specs = {}
-    for f in _dc.fields(PlaidIndex):
-        if f.metadata.get("static"):
-            continue
-        specs[f.name] = rep if f.name in _REPLICATED_FIELDS else doc
-    return specs
-
-
-def _index_as_dict(index: PlaidIndex):
-    import dataclasses as _dc
-
-    return {
-        f.name: getattr(index, f.name)
-        for f in _dc.fields(PlaidIndex)
-        if not f.metadata.get("static")
-    }
+from repro.exec.sharded import (  # noqa: F401
+    DOC_AXES,
+    doc_axes as _doc_axes,
+    index_as_dict as _index_as_dict,
+    index_shardings,
+    index_spec_tree as _index_spec_tree,
+    make_sharded_search,
+)
 
 
 def static_meta_of(index: PlaidIndex) -> dict:
@@ -116,6 +53,12 @@ def shard_index(index: PlaidIndex, n_shards: int):
     Per-shard IVFs are recomputed over the shared centroids with LOCAL pids.
     Returns (index_dict, static_meta, docs_per_shard) ready for
     ``make_sharded_search``.
+
+    Shard ``i`` owns global pids ``[i * per, min((i + 1) * per, Nd))``, so
+    a sharded pid (``shard * per + local``) IS the original global pid —
+    padded tail slots (zero doc length, absent from every IVF) can never
+    surface as candidates.  ``repro.exec.live`` relies on this to shard a
+    LiveIndex base segment without remapping its pid space.
     """
     import numpy as np
 
@@ -191,68 +134,3 @@ def shard_index(index: PlaidIndex, n_shards: int):
         eivf_list_cap=eivf_cap,
     )
     return out, meta, per
-
-
-def make_sharded_search(
-    mesh,
-    params: plaid.SearchParams,
-    *,
-    docs_per_shard: int,
-    static_meta: dict | None = None,
-):
-    """Returns jit-able ``search(index, qs, q_masks) -> (scores, pids)``.
-
-    ``index`` holds the shard-stacked arrays: every doc-partitioned array has
-    a leading global axis = n_shards * per-shard size, sharded over the full
-    mesh; per-shard offset arrays are LOCAL (each shard's doc_offsets index
-    into its own codes/residuals).  Queries are replicated to all shards.
-    """
-    ax = _doc_axes(mesh)
-    doc = P(ax)
-    rep = P()
-    index_specs = _index_spec_tree(doc, rep)
-
-    # NOT clamped to candidate_cap here: the pipeline clamps stage-2's keep
-    # (n2) itself but derives stage-3's keep from the raw ndocs//4 — pre-
-    # clamping would silently shrink stage 3.
-    meta = dict(
-        dim=128, nbits=2, doc_maxlen=128, ivf_list_cap=256, eivf_list_cap=512
-    )
-    meta.update(static_meta or {})
-
-    def local_search(index_dict, qs, q_masks, t_cs):
-        axis = ax[0] if len(ax) == 1 else ax
-        index_local = PlaidIndex(**index_dict, **meta)
-        # The batch-first pipeline per shard: one C.Q^T matmul and one
-        # shared candidate-token gather for the whole query batch (§Perf
-        # S1) — the shard's centroid matrix streams from HBM once.
-        scores, pids = pipeline.run_pipeline_impl(
-            index_local, qs, q_masks, t_cs, params=params
-        )  # (B, k) per shard
-
-        def merge(s, p):
-            p = dtopk.local_to_global_pids(p, axis, docs_per_shard)
-            return dtopk.merge_topk(s, p, params.k, axis)
-
-        return jax.vmap(merge)(scores, pids)
-
-    search = shard_map(
-        local_search,
-        mesh=mesh,
-        in_specs=(index_specs, rep, rep, rep),
-        out_specs=(rep, rep),
-        check_rep=False,
-    )
-
-    def run(index, qs, q_masks, t_cs=None):
-        """index: PlaidIndex or a dict of its array fields (dry-run SDS).
-
-        ``t_cs`` is traced (replicated to every shard): sweeping it at serve
-        time reuses the compiled program; ``None`` means ``params.t_cs``.
-        """
-        if isinstance(index, PlaidIndex):
-            index = _index_as_dict(index)
-        t = jnp.float32(params.t_cs if t_cs is None else t_cs)
-        return search(index, qs, q_masks, t)
-
-    return jax.jit(run)

@@ -1,28 +1,60 @@
-"""Distributed top-k merge for sharded retrieval.
+"""THE top-k merge for partitioned retrieval (shards and segments alike).
 
-Each shard searches its local sub-corpus and produces (scores, local pids);
-the merge all-gathers only the (k, 2)-sized tuples — collective bytes are
-``n_shards * k * 8`` per query, INDEPENDENT of corpus size (DESIGN §3,
-beyond-paper optimization vs. gathering candidate scores).
+Every partitioned search in this repo — device shards under ``shard_map``,
+live-index segments stacked under one jit, and the cross-group merge in
+``repro.exec.plan`` — funnels through :func:`merge_topk`.  The collective
+case all-gathers only the ``(k,)``-sized tuples, so bytes on the wire are
+``n_partitions * k * 8`` per query, INDEPENDENT of corpus size (DESIGN §3);
+the local case is the degenerate one-device merge of already-materialized
+partition tuples.
+
+Determinism: ties are broken by ascending pid (the composite sort key is
+``(-score, pid)``), NOT by position in the gathered array.  Position order
+depends on how the corpus happens to be partitioned, so a positional
+tie-break would make ranked results vary with shard/segment count; the pid
+tie-break is a total order over (score, pid) tuples, which also makes the
+merge hierarchy-invariant — merging per-partition top-k lists yields the
+same ranking as one flat merge, however the partitions are grouped.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-
-def merge_topk(scores: jax.Array, pids: jax.Array, k: int, axis_name: str):
-    """Inside shard_map: local (k,) scores/pids -> global top-k (replicated).
-
-    pids are shard-local; the caller offsets them to global ids before or
-    after (we take a ``shard_offset`` approach: pass global pids in)."""
-    all_scores = jax.lax.all_gather(scores, axis_name, axis=0, tiled=True)
-    all_pids = jax.lax.all_gather(pids, axis_name, axis=0, tiled=True)
-    top, idx = jax.lax.top_k(all_scores, k)
-    return top, all_pids[idx]
+#: pid sort key for empty/padded slots (real pids are >= 0): sorts after
+#: every real pid, so among equal scores padding loses deterministically.
+_PAD_PID_KEY = jnp.iinfo(jnp.int32).max
 
 
-def local_to_global_pids(local_pids: jax.Array, axis_name: str, shard_size: int):
+def merge_topk(
+    scores: jax.Array, pids: jax.Array, k: int, axis_name=None
+):
+    """Merge partition top-k tuples into the global top-k.
+
+    ``scores``/``pids``: ``(..., m)`` score/pid tuples; ``pids`` are GLOBAL
+    ids (offset shard-local ids with :func:`local_to_global_pids` first),
+    ``-1`` marking padded slots (scored ``NEG`` by the pipeline).
+
+    With ``axis_name`` (inside ``shard_map``), each partition passes its
+    local tuples and they are first all-gathered along the trailing axis;
+    without it, the caller has already concatenated the partitions' tuples
+    along the trailing axis (the degenerate local case — e.g. stacked
+    live-index segments on one device).  Either way the merged tuples are
+    sorted by ``(-score, pid)`` and the top ``k`` returned.
+    """
+    if axis_name is not None:
+        ax = scores.ndim - 1
+        scores = jax.lax.all_gather(scores, axis_name, axis=ax, tiled=True)
+        pids = jax.lax.all_gather(pids, axis_name, axis=ax, tiled=True)
+    pid_key = jnp.where(pids >= 0, pids, _PAD_PID_KEY).astype(jnp.int32)
+    _, _, top_s, top_p = jax.lax.sort(
+        (-scores, pid_key, scores, pids), dimension=-1, num_keys=2
+    )
+    k = min(k, scores.shape[-1])
+    return top_s[..., :k], top_p[..., :k]
+
+
+def local_to_global_pids(local_pids: jax.Array, axis_name, shard_size: int):
     """Offset shard-local passage ids into the global id space."""
     shard = jax.lax.axis_index(axis_name)
     return jnp.where(

@@ -1,0 +1,45 @@
+"""``repro.exec`` — the partition-execution layer.
+
+Every partitioned search in the engine is an :class:`ExecutionPlan`: a set
+of partitions (device shards × live segments), each running the stock
+batch-first pipeline (``repro.core.pipeline.run_pipeline``) locally, joined
+by ONE shared top-k merge (``repro.distributed.topk.merge_topk`` — the only
+merge implementation; the local segment merge is its degenerate one-device
+case).
+
+Modules:
+
+* :mod:`repro.exec.plan`     — the plan abstraction + cross-group merge
+* :mod:`repro.exec.sharded`  — shard_map partition group (mesh devices)
+* :mod:`repro.exec.segments` — stacked-segment partition group (one jit
+  per segment-count bucket)
+* :mod:`repro.exec.live`     — plan builder/cache for mutable indexes,
+  composing both axes (sharded base × stacked deltas)
+
+``repro.core.engine_sharded`` and ``repro.live.engine`` are thin adapters
+over this package.
+"""
+from repro.exec.plan import ExecutionPlan
+from repro.exec.live import LiveExecutor, mesh_for_shards
+from repro.exec.segments import (
+    SegmentBucket,
+    bucket_for,
+    make_stacked_search,
+    pack_alive,
+    pack_offsets,
+    pack_segments,
+)
+from repro.exec.sharded import make_sharded_search
+
+__all__ = [
+    "ExecutionPlan",
+    "LiveExecutor",
+    "mesh_for_shards",
+    "SegmentBucket",
+    "bucket_for",
+    "make_stacked_search",
+    "pack_alive",
+    "pack_offsets",
+    "pack_segments",
+    "make_sharded_search",
+]

@@ -1,0 +1,50 @@
+"""ExecutionPlan: every partitioned search = partitions + ONE shared merge.
+
+PLAID search is embarrassingly parallel over documents (paper §5): any
+partitioning of the corpus — device shards, live-index segments, or shards
+× segments — runs the same local pipeline per partition and needs exactly
+one cheap top-k merge at the end.  A plan makes that structure explicit:
+
+    partitions (each: run_pipeline locally, pids offset to global space)
+        │ (B, k) score/pid tuples per partition group
+        ▼
+    distributed.topk.merge_topk   — the ONLY merge implementation
+
+A *partition group* is a callable executing one batch of partitions under
+one compiled program: :mod:`repro.exec.sharded` (shard_map over mesh
+devices, merging over the mesh axis internally) and
+:mod:`repro.exec.segments` (stacked segments under one jit, merging over
+the stacked axis internally).  A plan with one group returns that group's
+result as-is; with several, their tuples are concatenated and merged once
+more — which yields the same ranking as one flat merge because
+``merge_topk``'s ``(-score, pid)`` order is hierarchy-invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+from repro.distributed import topk as dtopk
+
+#: A partition group: (qs, q_masks, t_cs) -> ((B, k) scores, (B, k) global pids)
+PartitionGroup = Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """One search's structure: partition groups + the shared top-k merge."""
+
+    groups: Sequence[PartitionGroup]
+    k: int
+
+    def search_batch(self, qs, q_masks, t_cs):
+        """qs (B, nq, dim), q_masks (B, nq), t_cs traced scalar -> (B, k)."""
+        t = jnp.asarray(t_cs, jnp.float32)
+        parts = [g(qs, q_masks, t) for g in self.groups]
+        if len(parts) == 1:
+            return parts[0]
+        scores = jnp.concatenate([s for s, _ in parts], axis=-1)
+        pids = jnp.concatenate([p for _, p in parts], axis=-1)
+        return dtopk.merge_topk(scores, pids, self.k)

@@ -1,0 +1,223 @@
+"""Stacked-segment partition execution: N segments, ONE compiled program.
+
+The live index used to launch one ``run_pipeline`` per segment from a
+Python loop — one jit trace (and one kernel launch sequence) per distinct
+segment shape, growing with every differently-sized delta flush.  This
+module replaces that loop with *stacked* execution: segments are padded to
+a shared :class:`SegmentBucket` shape signature, stacked along a leading
+axis, and searched by ``vmap(run_pipeline_impl)`` under ONE jit entry whose
+trailing step is the one shared merge (``distributed.topk.merge_topk``, the
+degenerate local case).  Per-segment global-pid offsets and the tombstone
+``alive`` bitmap ride through as TRACED operands, so adds that stay inside
+the bucket, deletes, and ``t_cs`` sweeps all reuse the compiled program.
+
+Bucket ARRAY shapes (token / IVF-pair counts, segment count) round up to
+powers of two, so growth along those axes often lands in the existing
+program; the segment-count axis pads with empty filler segments (zero doc
+lengths: their IVF is empty, so they generate no candidates and their
+lanes merge away as ``NEG``).  The *passage-count* clamp basis
+(``nd_clamp``) is exact, not rounded — it feeds ``clamp_params`` and must
+match ``PlaidEngine``'s corpus clamp — so a delta exceeding the bucket's
+largest segment's passage count does recompile once.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.constants import NEG
+from repro.core import pipeline, plaid
+from repro.core.index import PlaidIndex
+from repro.distributed import topk as dtopk
+
+#: Centroid-space arrays shared by every segment (one frozen centroid space
+#: + codec per index lineage) — passed unstacked, vmap in_axes=None.
+SHARED_FIELDS = ("centroids", "cutoffs", "weights")
+
+#: Per-segment array fields padded/stacked along the new leading axis,
+#: keyed by which bucket cap bounds their leading dimension.
+_TOKEN_FIELDS = ("codes", "tok_pid", "eivf_eids")  # + residuals (2-D)
+_IVF_CSR_FIELDS = ("ivf_offsets", "ivf_lens", "eivf_offsets", "eivf_lens")
+
+
+def ceil_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentBucket:
+    """Static shape signature of one stacked-segment program.
+
+    Two segment lists with the same bucket share one compiled program;
+    everything here is a compile-cache key.
+    """
+
+    n_segments: int  # stacked axis size (fillers pad the tail)
+    nd_cap: int  # per-segment passage cap (pow2 array padding)
+    nd_clamp: int  # true max passage count: the param-clamp basis — the
+    # pow2 pad must NOT leak into ``clamp_params`` (it derives stage-3's
+    # keep from the clamped ndocs, so a padded basis would score a
+    # different survivor set than ``PlaidEngine`` under truncating caps)
+    nt_cap: int  # per-segment token cap
+    nnz_cap: int  # per-segment IVF (centroid, pid) pair cap
+    num_centroids: int
+    dim: int
+    nbits: int
+    doc_maxlen: int
+    ivf_list_cap: int
+    eivf_list_cap: int
+
+    def static_meta(self) -> dict:
+        return dict(
+            dim=self.dim,
+            nbits=self.nbits,
+            doc_maxlen=self.doc_maxlen,
+            ivf_list_cap=self.ivf_list_cap,
+            eivf_list_cap=self.eivf_list_cap,
+        )
+
+
+def bucket_for(segments, *, min_segments: int = 1) -> SegmentBucket:
+    """Pow2-rounded shape caps covering every segment in the list."""
+    assert segments, "bucket_for needs at least one segment"
+    first = segments[0]
+    for s in segments[1:]:
+        assert s.num_centroids == first.num_centroids, (
+            "stacked segments must share one centroid space"
+        )
+        assert (s.dim, s.nbits) == (first.dim, first.nbits)
+    return SegmentBucket(
+        n_segments=ceil_pow2(max(len(segments), min_segments)),
+        nd_cap=ceil_pow2(max(s.num_passages for s in segments)),
+        nd_clamp=max(s.num_passages for s in segments),
+        nt_cap=ceil_pow2(max(s.num_tokens for s in segments)),
+        nnz_cap=ceil_pow2(max(int(s.ivf_pids.shape[0]) for s in segments)),
+        num_centroids=first.num_centroids,
+        dim=first.dim,
+        nbits=first.nbits,
+        doc_maxlen=ceil_pow2(max(s.doc_maxlen for s in segments)),
+        ivf_list_cap=ceil_pow2(max(s.ivf_list_cap for s in segments)),
+        eivf_list_cap=ceil_pow2(max(s.eivf_list_cap for s in segments)),
+    )
+
+
+def _pad_to(a: np.ndarray, n: int) -> np.ndarray:
+    return np.pad(a, [(0, n - a.shape[0])] + [(0, 0)] * (a.ndim - 1))
+
+
+def pack_segments(segments, bucket: SegmentBucket):
+    """Pad + stack segment arrays to the bucket's caps.
+
+    Returns ``(stacked, shared)`` dicts of device arrays: ``stacked`` holds
+    the per-segment fields with a leading ``(bucket.n_segments, ...)`` axis
+    (filler segments are all-empty: zero doc lengths, empty IVF — they can
+    never produce a candidate), ``shared`` the replicated centroid-space
+    arrays of the first segment.
+    """
+    K = bucket.num_centroids
+    res_bytes = int(np.asarray(segments[0].residuals).shape[1])
+    stacked: dict[str, list] = {}
+
+    def put(name, arr):
+        stacked.setdefault(name, []).append(arr)
+
+    for seg in segments:
+        for f in _TOKEN_FIELDS:
+            put(f, _pad_to(np.asarray(getattr(seg, f)), bucket.nt_cap))
+        put("residuals", _pad_to(np.asarray(seg.residuals), bucket.nt_cap))
+        lens = _pad_to(np.asarray(seg.doc_lens), bucket.nd_cap)
+        offs = np.asarray(seg.doc_offsets)
+        offs = np.concatenate(
+            [offs, np.full(bucket.nd_cap - seg.num_passages, offs[-1], np.int32)]
+        )
+        put("doc_lens", lens)
+        put("doc_offsets", offs)
+        put("ivf_pids", _pad_to(np.asarray(seg.ivf_pids), bucket.nnz_cap))
+        for f in _IVF_CSR_FIELDS:
+            put(f, np.asarray(getattr(seg, f)))
+    for _ in range(bucket.n_segments - len(segments)):  # empty fillers
+        for f in _TOKEN_FIELDS:
+            put(f, np.zeros(bucket.nt_cap, np.int32))
+        put("residuals", np.zeros((bucket.nt_cap, res_bytes), np.uint8))
+        put("doc_lens", np.zeros(bucket.nd_cap, np.int32))
+        put("doc_offsets", np.zeros(bucket.nd_cap + 1, np.int32))
+        put("ivf_pids", np.zeros(bucket.nnz_cap, np.int32))
+        put("ivf_offsets", np.zeros(K + 1, np.int32))
+        put("ivf_lens", np.zeros(K, np.int32))
+        put("eivf_offsets", np.zeros(K + 1, np.int32))
+        put("eivf_lens", np.zeros(K, np.int32))
+    out = {k: jnp.asarray(np.stack(v)) for k, v in stacked.items()}
+    shared = {f: jnp.asarray(getattr(segments[0], f)) for f in SHARED_FIELDS}
+    return out, shared
+
+
+def pack_alive(alive_masks, bucket: SegmentBucket) -> jax.Array:
+    """Per-segment alive bitmaps -> one (n_segments, nd_cap) traced mask.
+
+    Padded doc slots and filler segments are dead by construction.
+    """
+    rows = np.zeros((bucket.n_segments, bucket.nd_cap), bool)
+    for i, m in enumerate(alive_masks):
+        m = np.asarray(m, bool)
+        rows[i, : m.shape[0]] = m
+    return jnp.asarray(rows)
+
+
+def pack_offsets(offsets, bucket: SegmentBucket) -> jax.Array:
+    """Per-segment global pid offsets, filler segments pinned to 0 (their
+    pids are all ``-1`` and never offset)."""
+    out = np.zeros(bucket.n_segments, np.int32)
+    out[: len(offsets)] = np.asarray(offsets, np.int32)
+    return jnp.asarray(out)
+
+
+def make_stacked_search(
+    params,  # plaid.SearchParams (static; t_cs field ignored)
+    bucket: SegmentBucket,
+    *,
+    interpret: bool | None = None,
+):
+    """ONE jit entry searching a whole segment bucket.
+
+    Returns ``run(stacked, shared, qs, q_masks, t_cs, offsets, alive) ->
+    ((B, k) scores, (B, k) global pids)``: ``vmap(run_pipeline_impl)`` over
+    the stacked segment axis, local->global pid offsetting, then the one
+    shared merge (``merge_topk``, local case).  ``t_cs``, ``offsets`` and
+    ``alive`` are traced — sweeps, adds-within-bucket and deletes reuse the
+    compiled program (trace-count tested in ``tests/test_exec.py``).
+    """
+    # per-bucket clamp against the LARGEST segment's true passage count:
+    # the same rule PlaidEngine applies per corpus, so a single-segment
+    # bucket is exactly the PlaidEngine program and under non-truncating
+    # caps every segment's candidates match a rebuild of that slice
+    p = dataclasses.replace(
+        plaid.clamp_params(params, bucket.nd_clamp), t_cs=0.0
+    )
+    meta = bucket.static_meta()
+    k = params.k
+
+    def body(seg_arrays, shared, qs, q_masks, t_cs, off, al):
+        index = PlaidIndex(**seg_arrays, **shared, **meta)
+        s, pid = pipeline.run_pipeline_impl(
+            index, qs, q_masks, t_cs, params=p, interpret=interpret, alive=al
+        )  # (B, kk) with kk = min(k, stage-3 keep)
+        if s.shape[1] < k:  # tiny bucket: pad its top-k to the plan-wide k
+            pad = ((0, 0), (0, k - s.shape[1]))
+            s = jnp.pad(s, pad, constant_values=NEG)
+            pid = jnp.pad(pid, pad, constant_values=-1)
+        pid = jnp.where(pid >= 0, pid + off, -1)
+        return s, pid
+
+    def run(stacked, shared, qs, q_masks, t_cs, offsets, alive):
+        s, pid = jax.vmap(
+            body, in_axes=(0, None, None, None, None, 0, 0)
+        )(stacked, shared, qs, q_masks, t_cs, offsets, alive)  # (S, B, k)
+        S, B, _ = s.shape
+        s = jnp.moveaxis(s, 0, 1).reshape(B, S * k)
+        pid = jnp.moveaxis(pid, 0, 1).reshape(B, S * k)
+        return dtopk.merge_topk(s, pid, k)
+
+    return jax.jit(run)

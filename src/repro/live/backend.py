@@ -1,17 +1,30 @@
-"""``"live"`` / ``"live-pallas"`` retrieval backends: mutable corpus serving.
+"""Mutable-corpus retrieval backends: ``"live"`` family behind the facade.
 
-Registers the LiveIndex engine behind the ``repro.retrieval`` facade.  On
-top of the standard Retriever protocol (search/search_batch/save/describe)
-the live backends expose the mutation surface:
+Registers the LiveIndex engines behind ``repro.retrieval``:
+
+================  =========================================================
+``live``          Segmented mutable index on one device (reference kernels)
+``live-pallas``   Same through the Pallas kernels (interpret off-TPU)
+``live-sharded``  Mutable index with the BASE segment document-sharded over
+                  the mesh (``repro.exec``: shard_map base + stacked deltas
+                  + one shared merge); deltas replicated
+``live-sharded-pallas``  The sharded live engine through the Pallas kernels
+================  =========================================================
+
+On top of the standard Retriever protocol (search/search_batch/save/
+describe) every live backend implements ``MutableRetriever``:
 
 * ``add_passages(docs)`` — encode + append one delta segment, returns the
   new global pids;
 * ``delete_passages(pids)`` — tombstone pids (no array rewrite);
 * ``writer(flush_every=...)`` — a buffered :class:`repro.live.IndexWriter`;
-* ``compact()`` — merge deltas into the base, dropping tombstoned docs.
+* ``compact()`` — merge deltas into the base, dropping tombstoned docs
+  (a sharded engine re-shards the new base on its next search).
 
-``retrieval.load`` restores a live retriever from both v2 (segment
-manifest) and legacy v1 index directories.
+``retrieval.load`` restores a live retriever from v2 (segment manifest)
+and legacy v1 index directories; sharded-live directories carry a
+``"sharding"`` manifest stamp so bare saves sniff back to the right
+backend.
 """
 from __future__ import annotations
 
@@ -46,8 +59,11 @@ class LiveRetriever:
     def __init__(self, live_index: LiveIndex, params: SearchParams | None = None):
         self.index = live_index
         self.params = params or SearchParams()
-        self._engine = LiveEngine(
-            live_index, to_engine_params(self.params, self.impl)
+        self._engine = self._make_engine()
+
+    def _make_engine(self) -> LiveEngine:
+        return LiveEngine(
+            self.index, to_engine_params(self.params, self.impl)
         )
 
     # ---- construction ----------------------------------------------------
@@ -140,5 +156,90 @@ class LiveRetriever:
 @registry.register("live-pallas")
 class LivePallasRetriever(LiveRetriever):
     """Live backend through the Pallas kernels (interpret off-TPU)."""
+
+    impl = "pallas"
+
+
+@registry.register("live-sharded")
+class ShardedLiveRetriever(LiveRetriever):
+    """Mutable index whose base segment is document-sharded over the mesh.
+
+    The base shards over every mesh device (same ``shard_index`` layout as
+    ``"plaid-sharded"``), delta segments stay replicated (they are small by
+    construction and re-absorbed into the sharded base at compaction), and
+    tombstones ride through both partition groups as traced alive masks —
+    mutations go through the standard ``MutableRetriever`` surface and the
+    ``BatchingServer`` unchanged.
+    """
+
+    impl = "ref"
+
+    def __init__(
+        self,
+        live_index: LiveIndex,
+        params: SearchParams | None = None,
+        *,
+        n_shards: int | None = None,
+    ):
+        import jax
+
+        self.n_shards = n_shards if n_shards is not None else len(jax.devices())
+        super().__init__(live_index, params)
+
+    def _make_engine(self) -> LiveEngine:
+        return LiveEngine(
+            self.index,
+            to_engine_params(self.params, self.impl),
+            n_shards=self.n_shards,
+        )
+
+    @classmethod
+    def build(cls, corpus_embs, cfg: RetrieverConfig, doc_lens=None):
+        base = _build_index(corpus_embs, cfg, doc_lens)
+        return cls(LiveIndex(base), cfg.params, n_shards=cfg.n_shards)
+
+    @classmethod
+    def from_index(cls, index, cfg: RetrieverConfig):
+        if not isinstance(index, LiveIndex):
+            index = LiveIndex(index)
+        return cls(index, cfg.params, n_shards=cfg.n_shards)
+
+    @classmethod
+    def load(cls, path: str, params: SearchParams | None = None):
+        import jax
+
+        from repro.live import manifest as manifest_mod
+
+        live = LiveIndex.load(path)
+        sharding = manifest_mod.read_manifest(path).get("sharding") or {}
+        n_shards = sharding.get("n_shards")
+        # the stamp is a PLACEMENT hint, not data: the segments themselves
+        # are device-independent, so a respawned host with fewer devices
+        # (the fault-tolerance story) re-shards to what it has instead of
+        # refusing to serve
+        if n_shards is not None:
+            n_shards = min(n_shards, len(jax.devices()))
+        return cls(live, params, n_shards=n_shards)
+
+    def save(self, path: str) -> None:
+        self.index.save(
+            path, extra_manifest=dict(sharding=dict(n_shards=self.n_shards))
+        )
+        registry.write_meta(path, self)
+
+    def describe(self) -> dict:
+        d = super().describe()
+        ex = self._engine._exec
+        d["sharding"] = dict(
+            n_shards=self.n_shards,
+            mesh=dict(ex.mesh.shape) if ex.mesh is not None else None,
+            deltas="replicated",
+        )
+        return d
+
+
+@registry.register("live-sharded-pallas")
+class ShardedLivePallasRetriever(ShardedLiveRetriever):
+    """Sharded live engine through the Pallas kernels (interpret off-TPU)."""
 
     impl = "pallas"

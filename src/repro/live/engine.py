@@ -1,45 +1,62 @@
-"""Search over a LiveIndex: per-segment pipeline + cross-segment top-k merge.
+"""Search over a LiveIndex — a thin adapter over ``repro.exec``.
 
-Each segment runs the stock batch-first pipeline
-(``repro.core.pipeline.run_pipeline``) with that segment's slice of the
-tombstone bitmap passed as the traced ``alive`` mask — dead passages drop
-out of the candidate set right after stage 1, exactly where a from-scratch
-rebuild of the surviving corpus would never have generated them.  Per-lane
-top-k tuples are then merged across segments: local pids shift to global
-pid space, tombstoned entries (a snapshot race guard — the alive mask
-already excluded them in-pipeline) are masked to ``NEG``, and one final
-``top_k`` sorts the union.  Because every segment shares one centroid
-space and one codec, per-passage scores are the same numbers a single
-merged index would produce, so multi-segment results are rank-identical
-to a from-scratch rebuild of the union corpus (given caps that do not
-truncate differently — the engine clamps per segment the same way
+The per-segment Python loop (one pipeline launch and one jit trace per
+distinct segment shape) is gone: searches now build an
+:class:`repro.exec.plan.ExecutionPlan` — base segment as one partition
+group, all delta segments stacked under ONE jit per segment-count bucket —
+and the cross-segment merge is the one shared implementation in
+``repro.distributed.topk`` (the degenerate local case; this module holds
+no merge logic).  The tombstone
+``alive`` bitmap, per-segment pid offsets and ``t_cs`` are traced through
+the plan, so deletes and threshold sweeps never recompile; because every
+segment shares one centroid space and codec, per-passage scores are the
+numbers a single merged index would produce, and multi-segment results are
+rank-identical to a from-scratch rebuild of the union corpus under
+non-truncating caps (the executor clamps per bucket the same way
 ``PlaidEngine`` clamps per corpus).
 
-Compile discipline: one pipeline compile per distinct segment shape;
-``t_cs`` and the alive bitmap are traced, so threshold sweeps and deletes
-never recompile.  A delta flush adds one small-shape compile the first
-time a segment of that shape is queried.
+Pass a mesh (or ``n_shards``) to device-shard the BASE segment over it —
+deltas stay replicated — which is how the ``"live-sharded"`` backends
+serve a mutable corpus at multi-device scale.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.constants import NEG
-from repro.core import pipeline, plaid
+from repro.core import plaid
+from repro.exec.live import LiveExecutor
 from repro.live.index import LiveIndex
 
 
 class LiveEngine:
     """Internal engine handle over one LiveIndex.
 
-    The public API is ``repro.retrieval`` (backend ``"live"``); raw
-    ``(scores, pids)`` tuples here, global pid space.
+    The public API is ``repro.retrieval`` (backends ``"live"`` /
+    ``"live-sharded"`` + pallas flavors); raw ``(scores, pids)`` tuples
+    here, global pid space.
     """
 
-    def __init__(self, live: LiveIndex, params: plaid.SearchParams | None = None):
+    def __init__(
+        self,
+        live: LiveIndex,
+        params: plaid.SearchParams | None = None,
+        *,
+        mesh=None,
+        n_shards: int | None = None,
+    ):
         self.live = live
         self.params = params or plaid.SearchParams()
+        self._exec = LiveExecutor(
+            live, self.params, mesh=mesh, n_shards=n_shards
+        )
+
+    @property
+    def n_shards(self) -> int:
+        return self._exec.n_shards
+
+    @property
+    def mesh(self):
+        return self._exec.mesh
 
     def search_batch(
         self,
@@ -50,38 +67,9 @@ class LiveEngine:
         interpret: bool | None = None,
     ):
         """qs: (B, nq, dim) -> (scores (B, k), global pids (B, k))."""
-        if q_masks is None:
-            q_masks = jnp.ones(qs.shape[:2], jnp.float32)
-        t = self.params.t_cs if t_cs is None else t_cs
-        k = self.params.k
-        snap = self.live.snapshot()
-
-        parts_s, parts_p = [], []
-        for seg, off, alive in zip(snap.segments, snap.offsets, snap.alive):
-            # per-segment clamp: the same rule PlaidEngine applies per
-            # corpus, so segment results match a rebuild of that slice
-            p = plaid.clamp_params(self.params, seg.num_passages)
-            s, pid = pipeline.run_pipeline(
-                seg, qs, q_masks, t, p, interpret=interpret, alive=alive
-            )
-            if s.shape[1] < k:  # tiny segment: pad its top-k to the global k
-                pad = ((0, 0), (0, k - s.shape[1]))
-                s = jnp.pad(s, pad, constant_values=NEG)
-                pid = jnp.pad(pid, pad, constant_values=-1)
-            parts_s.append(s)
-            parts_p.append(jnp.where(pid >= 0, pid + off, -1))
-
-        all_s = jnp.concatenate(parts_s, axis=1)  # (B, n_segments * k)
-        all_p = jnp.concatenate(parts_p, axis=1)
-        # tombstones masked to NEG before the final cross-segment sort
-        safe = jnp.where(all_p >= 0, all_p, 0)
-        dead = (all_p < 0) | ~snap.alive_global[safe]
-        all_s = jnp.where(dead, jnp.asarray(NEG, all_s.dtype), all_s)
-        all_p = jnp.where(dead, -1, all_p)
-        kk = min(k, all_s.shape[1])
-        top_s, idx = jax.lax.top_k(all_s, kk)
-        top_p = jnp.take_along_axis(all_p, idx, axis=1)
-        return top_s, top_p
+        return self._exec.search_batch(
+            qs, q_masks, t_cs=t_cs, interpret=interpret
+        )
 
     def search(
         self,
@@ -92,8 +80,4 @@ class LiveEngine:
         interpret: bool | None = None,
     ):
         """q: (nq, dim) -> (scores (k,), pids (k,)).  B=1 squeeze of batch."""
-        mask = None if q_mask is None else q_mask[None]
-        scores, pids = self.search_batch(
-            q[None], mask, t_cs=t_cs, interpret=interpret
-        )
-        return scores[0], pids[0]
+        return self._exec.search(q, q_mask, t_cs=t_cs, interpret=interpret)

@@ -94,9 +94,9 @@ class LiveSnapshot:
     """Immutable view a search runs against (see LiveIndex.snapshot)."""
 
     segments: tuple  # of PlaidIndex
+    seg_ids: tuple  # stable per-segment ids (cache keys for repro.exec)
     offsets: tuple  # global pid base per segment
     alive: tuple  # per-segment (Nd_s,) bool device arrays
-    alive_global: object  # (num_passages,) bool device array
     generation: int
     num_passages: int
 
@@ -295,22 +295,25 @@ class LiveIndex:
                     off += seg.num_passages
                 self._cached_snapshot = LiveSnapshot(
                     segments=tuple(self._segments),
+                    seg_ids=tuple(self._seg_ids),
                     offsets=tuple(offsets),
                     alive=tuple(alive),
-                    alive_global=jnp.asarray(~self._tombstones),
                     generation=self._generation,
                     num_passages=off,
                 )
             return self._cached_snapshot
 
     # ---- persistence -----------------------------------------------------
-    def save(self, path: str) -> None:
+    def save(self, path: str, *, extra_manifest: dict | None = None) -> None:
         """Write the v2 segment-manifest layout (atomic manifest swap).
 
         Saves of one LiveIndex serialize on their own lock (held across
         snapshot AND write, so generations reach disk in order even when a
         Compactor spill races a user save) without blocking mutations or
-        readers."""
+        readers.  ``extra_manifest`` entries are recorded verbatim in the
+        manifest (e.g. the ``"sharding"`` layout stamp the
+        ``"live-sharded"`` backend uses so bare directories sniff back to
+        the right backend)."""
         with self._save_lock:
             with self._lock:
                 segments = list(self._segments)
@@ -319,7 +322,7 @@ class LiveIndex:
                 generation = self._generation
             manifest_mod.save_segmented(
                 path, segments, seg_ids, tombstones, generation,
-                index_uuid=self._uuid,
+                index_uuid=self._uuid, extra_manifest=extra_manifest,
             )
 
     @classmethod

@@ -133,6 +133,7 @@ def save_segmented(
     tombstones: np.ndarray | None,
     generation: int,
     index_uuid: str | None = None,
+    extra_manifest: dict | None = None,
 ) -> None:
     """Write a v2 index directory (payloads first, manifest swap last).
 
@@ -141,6 +142,9 @@ def save_segmented(
     the CURRENT on-disk manifest (same uuid) already references are
     skipped — a periodic save after a delta flush costs O(delta) disk
     I/O, not O(corpus) re-serialization of the base.
+
+    ``extra_manifest`` entries merge into the manifest dict (they must not
+    collide with the reserved layout keys).
     """
     os.makedirs(path, exist_ok=True)
     names = [segment_name(i) for i in seg_ids]
@@ -164,7 +168,16 @@ def save_segmented(
             lambda f: np.save(f, np.asarray(tombstones, bool)),
         )
     base = segments[0]
+    extra = dict(extra_manifest or {})
+    reserved = {
+        "format_version", "generation", "index_uuid", "segments",
+        "tombstones", "num_passages", "num_centroids", "dim", "nbits",
+    }
+    clash = reserved & set(extra)
+    if clash:
+        raise ValueError(f"extra_manifest may not override {sorted(clash)}")
     manifest = dict(
+        extra,
         format_version=FORMAT_VERSION,
         generation=generation,
         index_uuid=index_uuid,

@@ -145,12 +145,14 @@ def interaction(p, x, edge_src, edge_dst, rbf, n_nodes, edge_mask):
             )
             return jax.lax.psum(agg, eaxes)
 
-        agg = jax.shard_map(
+        from repro.compat import shard_map
+
+        agg = shard_map(
             local,
             mesh=mesh,
             in_specs=(rep, rep, espec, espec, espec, espec),
             out_specs=rep,
-            check_vma=False,
+            check_rep=False,
         )(filt, xw, edge_src, edge_dst, rbf, edge_mask)
     else:
         agg = _cfconv_aggregate(

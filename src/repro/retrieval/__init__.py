@@ -10,7 +10,8 @@ One engine surface over every backend (PLAID paper Fig. 5 driver)::
     r.save("/idx");  r2 = retrieval.load("/idx")        # round-trips any backend
 
 Backends: ``"vanilla"``, ``"plaid"``, ``"plaid-pallas"``, ``"plaid-sharded"``,
-``"live"``, ``"live-pallas"`` (see ``retrieval.list_backends()``).
+``"live"``, ``"live-pallas"``, ``"live-sharded"``, ``"live-sharded-pallas"``
+(see ``retrieval.list_backends()``).
 ``SearchParams`` is split into static
 caps (recompile on change) and dynamic scalars (traced) — see
 ``repro/retrieval/types.py`` and README "Retrieval facade".

@@ -10,8 +10,9 @@
                   mesh device, small all-gather top-k merge).
 ================  =========================================================
 
-The mutable-corpus backends (``"live"`` / ``"live-pallas"``, implementing
-the ``MutableRetriever`` protocol) register from ``repro.live.backend``,
+The mutable-corpus backends (``"live"`` / ``"live-pallas"`` /
+``"live-sharded"`` / ``"live-sharded-pallas"``, implementing the
+``MutableRetriever`` protocol) register from ``repro.live.backend``,
 which reuses this module's request/result plumbing.
 
 Parameter mapping is uniform: ``SearchParams.candidate_cap`` is the stage-1

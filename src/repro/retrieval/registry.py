@@ -123,6 +123,21 @@ def read_meta(path: str) -> dict | None:
 
 
 def _sniff_backend(path: str) -> str:
+    """Identify the backend of a bare index directory from its manifest.
+
+    Recognized layouts (mutually exclusive by construction):
+
+    * shard layout (``indexer.save_sharded``): top-level ``n_shards``
+      -> ``"plaid-sharded"``
+    * v2 segment manifest (``repro.live.manifest``): ``segments`` list;
+      a ``"sharding"`` stamp marks a sharded-live save
+      -> ``"live-sharded"`` / ``"live"`` / ``"plaid"``
+    * legacy v1 flat layout: ``format_version == 1`` -> ``"plaid"``
+
+    A manifest matching several layouts (or none) is corrupt or from a
+    newer build — fail loudly with the recognized markers instead of
+    silently defaulting to a backend that would misread the arrays.
+    """
     manifest = os.path.join(path, "manifest.json")
     if not os.path.exists(manifest):
         raise FileNotFoundError(
@@ -130,16 +145,50 @@ def _sniff_backend(path: str) -> str:
         )
     with open(manifest) as f:
         m = json.load(f)
-    if "n_shards" in m:
+    has_shards = "n_shards" in m
+    has_segments = "segments" in m
+    if has_shards and has_segments:
+        raise ValueError(
+            f"{path!r} has a mixed manifest layout: both 'n_shards' (shard "
+            "directory) and 'segments' (segment manifest) are present — "
+            "the directory is corrupt or half-migrated; re-save it, or "
+            "pass backend= explicitly to retrieval.load"
+        )
+    if has_shards:
         return "plaid-sharded"
-    # LiveIndex.save stamps its lineage uuid, so a live-written directory
-    # sniffs as "live" even when freshly compacted (one clean segment) —
-    # recovery must not lose the mutation surface depending on whether a
-    # compaction happened to precede the last save
-    if m.get("index_uuid"):
-        return "live"
-    # a v2 segment manifest with pending deltas or tombstones is a live
-    # index; a single clean segment loads as a plain PlaidIndex
-    if len(m.get("segments", ())) > 1 or m.get("tombstones"):
-        return "live"
-    return "plaid"
+    version = m.get("format_version", 1)
+    if version not in (1, 2):
+        # a newer build may keep the 'segments' key while changing its
+        # encoding — never sniff past an unknown version, even when the
+        # markers look familiar
+        raise ValueError(
+            f"{path!r} has manifest.json with format_version={version!r}; "
+            "this build sniffs versions 1 and 2 only — refusing to guess.  "
+            "Pass backend= explicitly to retrieval.load if you know the "
+            "layout"
+        )
+    if has_segments:
+        # a sharded-live save stamps its shard layout in the manifest, so
+        # recovery keeps both the mutation surface and the mesh placement
+        if m.get("sharding"):
+            return "live-sharded"
+        # LiveIndex.save stamps its lineage uuid, so a live-written
+        # directory sniffs as "live" even when freshly compacted (one
+        # clean segment) — recovery must not lose the mutation surface
+        # depending on whether a compaction preceded the last save
+        if m.get("index_uuid"):
+            return "live"
+        # a v2 segment manifest with pending deltas or tombstones is a
+        # live index; a single clean segment loads as a plain PlaidIndex
+        if len(m["segments"]) > 1 or m.get("tombstones"):
+            return "live"
+        return "plaid"
+    if version == 1:  # legacy flat arrays.npz + manifest
+        return "plaid"
+    raise ValueError(
+        f"{path!r} has manifest.json with format_version={version!r} and "
+        "no recognized layout marker (expected 'n_shards', 'segments', or "
+        "format_version 1); it may come from a newer build — refusing to "
+        "guess.  Pass backend= explicitly to retrieval.load if you know "
+        "the layout"
+    )

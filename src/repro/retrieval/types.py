@@ -87,8 +87,8 @@ class RetrieverConfig:
 
     ``index`` is forwarded to the core index builder (``num_centroids``,
     ``nbits``, ``kmeans_iters``, ``seed``, ``ivf_list_cap``).  ``n_shards``
-    only applies to ``"plaid-sharded"``; ``None`` means one shard per
-    local device.
+    applies to the device-sharded backends (``"plaid-sharded"`` and the
+    ``"live-sharded"`` family); ``None`` means one shard per local device.
     """
 
     backend: str = "plaid"
@@ -186,10 +186,12 @@ class Retriever(Protocol):
 class MutableRetriever(Retriever, Protocol):
     """A Retriever whose corpus can change at serving time.
 
-    Implemented by the ``"live"`` / ``"live-pallas"`` backends
-    (``repro.live``): mutations are snapshot-consistent with in-flight
-    searches and never require an index rebuild.  ``BatchingServer``
-    forwards its ``add_passages`` / ``delete_passages`` to this surface.
+    Implemented by the ``"live"`` / ``"live-pallas"`` backends and their
+    device-sharded composition ``"live-sharded"`` /
+    ``"live-sharded-pallas"`` (``repro.live`` + ``repro.exec``): mutations
+    are snapshot-consistent with in-flight searches and never require an
+    index rebuild.  ``BatchingServer`` forwards its ``add_passages`` /
+    ``delete_passages`` to this surface.
     """
 
     def add_passages(self, doc_embeddings, doc_lens=None):

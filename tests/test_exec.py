@@ -1,0 +1,408 @@
+"""Partition-execution layer (``repro.exec``): merge determinism, stacked-
+segment compile discipline, sharded-live rank identity, backend plumbing.
+
+The ``{1,2,4} shards x {0,1,3} deltas`` grid runs fully under ``make
+test-multidevice`` (``XLA_FLAGS=--xla_force_host_platform_device_count=4``);
+on a single-device box the multi-shard points skip.
+"""
+import json
+import os
+import tempfile
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import live, retrieval
+from repro.constants import NEG
+from repro.core import index as index_mod, pipeline, plaid
+from repro.data import synthetic as syn
+from repro.distributed import topk as dtopk
+from repro.exec import segments as seg_exec
+
+multidevice = pytest.mark.multidevice
+
+
+def _skip_unless_devices(n: int):
+    if len(jax.devices()) < n:
+        pytest.skip(
+            f"needs {n} devices (run under make test-multidevice / "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+        )
+
+
+# --------------------------------------------------------------------------
+# merge_topk: deterministic tie-breaking, invariant under partition count
+# --------------------------------------------------------------------------
+def _ranked_by_score_then_pid(scores, pids, k):
+    order = np.lexsort((pids, -scores))
+    return pids[order][:k]
+
+
+def test_merge_topk_ties_invariant_under_partition_count():
+    """1, 2 and 4 partitions must produce IDENTICAL ranked pids on ties:
+    the merge breaks ties by ascending pid, never by gather position."""
+    rng = np.random.default_rng(0)
+    scores = np.repeat(np.asarray([5.0, 4.0, 3.0], np.float32), 8)  # 8-way ties
+    pids = rng.permutation(24).astype(np.int32)
+    k = 7
+    want = _ranked_by_score_then_pid(scores, pids, k)
+
+    got = {}
+    for n_parts in (1, 2, 4):
+        # per-partition local top-k (the degenerate one-device merge) ...
+        parts = [
+            dtopk.merge_topk(jnp.asarray(s), jnp.asarray(p), k)
+            for s, p in zip(
+                np.split(scores, n_parts), np.split(pids, n_parts)
+            )
+        ]
+        # ... then the one shared merge over the partitions' tuples
+        ms, mp = dtopk.merge_topk(
+            jnp.concatenate([s for s, _ in parts], axis=-1),
+            jnp.concatenate([p for _, p in parts], axis=-1),
+            k,
+        )
+        got[n_parts] = np.asarray(mp)
+        np.testing.assert_array_equal(np.asarray(mp), want)
+        assert np.all(np.diff(np.asarray(ms)) <= 0)  # scores descending
+    np.testing.assert_array_equal(got[1], got[2])
+    np.testing.assert_array_equal(got[2], got[4])
+
+
+def test_merge_topk_batched_padding_loses():
+    """Batched (B, m) merge: -1/NEG padded slots sort strictly last and the
+    pid tie-break applies per lane."""
+    scores = jnp.asarray(
+        [[1.0, 2.0, NEG, 2.0], [NEG, NEG, 0.5, 0.5]], jnp.float32
+    )
+    pids = jnp.asarray([[9, 7, -1, 3], [-1, -1, 8, 2]], jnp.int32)
+    s, p = dtopk.merge_topk(scores, pids, 3)
+    np.testing.assert_array_equal(np.asarray(p), [[3, 7, 9], [2, 8, -1]])
+    np.testing.assert_allclose(
+        np.asarray(s), [[2.0, 2.0, 1.0], [0.5, 0.5, NEG]]
+    )
+
+
+@pytest.mark.slow
+def test_merge_topk_collective_matches_local_4dev():
+    """Inside shard_map the all-gather + merge must equal the local merge
+    of the concatenated tuples, ties included."""
+    from tests.test_sharding_distributed import run_with_devices
+
+    out = run_with_devices(4, """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.distributed import topk as dt
+        mesh = jax.make_mesh((4,), ("data",))
+        scores = jnp.asarray(np.repeat([3.0, 2.0], 16).reshape(4, 8), jnp.float32)
+        pids = jnp.asarray(np.random.default_rng(0).permutation(32).reshape(4, 8), jnp.int32)
+
+        def local(s, p):
+            return dt.merge_topk(s[0], p[0], 5, "data")
+        f = shard_map(local, mesh=mesh, in_specs=(P("data"), P("data")),
+                      out_specs=(P(), P()), check_rep=False)
+        top, ids = f(scores, pids)
+        ls, lp = dt.merge_topk(scores.reshape(-1), pids.reshape(-1), 5)
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(lp))
+        np.testing.assert_allclose(np.asarray(top), np.asarray(ls))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+# --------------------------------------------------------------------------
+# Stacked segments: one jit trace per segment-count bucket
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def corpus():
+    # fixed doc length: keeps token counts (and so shape buckets)
+    # deterministic for the trace-count assertions
+    docs, _ = syn.embedding_corpus(140, dim=32, min_len=8, max_len=8, seed=0)
+    qs, _ = syn.queries_from_docs(docs, 6, q_len=6)
+    return docs, jnp.asarray(qs)
+
+
+@pytest.fixture(scope="module")
+def base_index(corpus):
+    docs, _ = corpus
+    return index_mod.build_index(
+        docs[:90], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+
+
+def test_stacked_segments_single_trace_per_bucket(corpus, base_index):
+    """3 differently-shaped deltas compile ONE stacked program (plus one
+    for the base) — the old per-segment loop compiled one per shape — and
+    deletes, t_cs sweeps, and adds within the bucket never retrace."""
+    docs, qs = corpus
+    lv = live.LiveIndex(base_index)
+    lv.add_passages(docs[90:102])   # 12 docs
+    lv.add_passages(docs[102:112])  # 10 docs
+    lv.add_passages(docs[112:120])  # 8 docs: 3 deltas, 3 distinct shapes
+    eng = live.LiveEngine(
+        lv, plaid.SearchParams(k=10, nprobe=4, t_cs=0.3, ndocs=256,
+                               candidate_cap=256)
+    )
+    n0 = pipeline.trace_count()
+    eng.search_batch(qs)
+    assert pipeline.trace_count() - n0 == 2, (
+        "one trace for the base partition + ONE for the whole delta bucket"
+    )
+    n1 = pipeline.trace_count()
+    lv.delete([3, 95])
+    eng.search_batch(qs)
+    eng.search_batch(qs, t_cs=0.6)
+    # a 4th delta no larger than the bucket's biggest segment: the pow2
+    # segment-count bucket (4) and every shape cap are unchanged
+    lv.add_passages(docs[120:127])
+    eng.search_batch(qs)
+    assert pipeline.trace_count() == n1, (
+        "deletes / t_cs sweeps / adds-within-bucket must not retrace"
+    )
+
+
+def test_stacked_matches_per_segment_oracle(corpus, base_index):
+    """The stacked program returns exactly what independent per-segment
+    pipeline runs + merge_topk produce."""
+    docs, qs = corpus
+    lv = live.LiveIndex(base_index)
+    lv.add_passages(docs[90:105])
+    lv.add_passages(docs[105:120])
+    lv.delete([5, 95, 110])
+    params = plaid.SearchParams(
+        k=12, nprobe=4, t_cs=0.3, ndocs=256, candidate_cap=256
+    )
+    got_s, got_p = live.LiveEngine(lv, params).search_batch(qs)
+
+    snap = lv.snapshot()
+    masks = jnp.ones(qs.shape[:2], jnp.float32)
+    parts_s, parts_p = [], []
+    for seg, off, alive in zip(snap.segments, snap.offsets, snap.alive):
+        p = plaid.clamp_params(params, seg.num_passages)
+        s, pid = pipeline.run_pipeline(seg, qs, masks, 0.3, p, alive=alive)
+        if s.shape[1] < params.k:
+            padw = ((0, 0), (0, params.k - s.shape[1]))
+            s = jnp.pad(s, padw, constant_values=NEG)
+            pid = jnp.pad(pid, padw, constant_values=-1)
+        parts_s.append(s)
+        parts_p.append(jnp.where(pid >= 0, pid + off, -1))
+    want_s, want_p = dtopk.merge_topk(
+        jnp.concatenate(parts_s, axis=1), jnp.concatenate(parts_p, axis=1),
+        params.k,
+    )
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    np.testing.assert_allclose(
+        np.asarray(got_s), np.asarray(want_s), atol=1e-5
+    )
+
+
+def test_bucket_pow2_rounding():
+    b = seg_exec.ceil_pow2
+    assert [b(0), b(1), b(2), b(3), b(8), b(9)] == [1, 1, 2, 4, 8, 16]
+
+
+# --------------------------------------------------------------------------
+# Acceptance grid: live-sharded == from-scratch single-shard rebuild
+# --------------------------------------------------------------------------
+_ORACLES: dict = {}
+
+
+def _oracle(docs, base, lv, impl, k):
+    """Full-depth search of a from-scratch rebuild of the survivors
+    (frozen centroids/codec), cached per (impl, tombstone-set)."""
+    alive = ~lv.tombstones()
+    key = (impl, alive.tobytes())
+    if key not in _ORACLES:
+        surviving = [d for d, a in zip(docs, alive) if a]
+        rebuilt = index_mod.build_index(
+            surviving, centroids=base.centroids, codec=base.codec
+        )
+        _ORACLES[key] = (rebuilt, np.flatnonzero(alive))
+    return _ORACLES[key]
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize(
+    "n_shards",
+    [1, pytest.param(2, marks=multidevice), pytest.param(4, marks=multidevice)],
+)
+@pytest.mark.parametrize("n_deltas", [0, 1, 3])
+def test_live_sharded_rank_identity_vs_rebuild(
+    corpus, base_index, impl, n_shards, n_deltas
+):
+    """`"live-sharded"` search (sharded base x stacked deltas) is
+    rank-identical, under non-truncating caps, to a from-scratch
+    single-shard rebuild of the surviving corpus — on ref and pallas
+    paths, across the shard x delta grid."""
+    _skip_unless_devices(n_shards)
+    docs, qs = corpus
+    lv = live.LiveIndex(base_index)
+    if n_deltas:
+        for chunk in np.array_split(np.arange(90, 140), n_deltas):
+            lv.add_passages([docs[i] for i in chunk])
+        lv.delete([7, 40, 95, 120])
+        used = docs[: lv.num_passages]
+    else:
+        lv.delete([7, 40])
+        used = docs[:90]
+
+    k = lv.num_alive  # full ranking: the strictest possible comparison
+    params = plaid.SearchParams(
+        k=k, nprobe=4, t_cs=0.3, ndocs=256, candidate_cap=256, impl=impl
+    )
+    eng = live.LiveEngine(lv, params, n_shards=n_shards)
+    assert eng.n_shards == n_shards
+    got_s, got_p = eng.search_batch(qs)
+
+    rebuilt, to_global = _oracle(used, base_index, lv, impl, k)
+    want_s, want_p = plaid.PlaidEngine(rebuilt, params).search_batch(
+        qs, jnp.ones(qs.shape[:2], jnp.float32)
+    )
+    want_global = np.where(
+        np.asarray(want_p) >= 0, to_global[np.asarray(want_p)], -1
+    )
+    np.testing.assert_array_equal(np.asarray(got_p), want_global)
+    np.testing.assert_allclose(
+        np.asarray(got_s), np.asarray(want_s), atol=1e-4
+    )
+
+
+# --------------------------------------------------------------------------
+# live-sharded backend: facade, mutation surface, persistence, serving
+# --------------------------------------------------------------------------
+def test_live_sharded_backend_roundtrip(corpus):
+    docs, qs = corpus
+    r = retrieval.build(
+        docs[:100],
+        backend="live-sharded",
+        n_shards=1,  # degenerate mesh: runs on any box
+        params=retrieval.SearchParams(
+            k=5, nprobe=4, t_cs=0.3, ndocs=256, candidate_cap=256
+        ),
+        index=dict(num_centroids=64, kmeans_iters=3),
+    )
+    assert isinstance(r, retrieval.MutableRetriever)
+    pids = r.add_passages(docs[100:120])
+    np.testing.assert_array_equal(pids, np.arange(100, 120))
+    assert r.delete_passages(pids[:2]) == 2
+    res = r.search_batch(qs)
+    assert res.backend == "live-sharded"
+    assert res.pids.shape == (qs.shape[0], 5)
+    d = r.describe()
+    assert d["sharding"]["n_shards"] == 1
+    assert d["index"]["num_deltas"] == 1
+    with tempfile.TemporaryDirectory() as tmp:
+        r.save(tmp)
+        manifest = json.load(open(os.path.join(tmp, "manifest.json")))
+        assert manifest["sharding"] == {"n_shards": 1}
+        # with retriever.json
+        r2 = retrieval.load(tmp)
+        assert r2.backend_name == "live-sharded" and r2.n_shards == 1
+        # bare directory: sniffed from the manifest's sharding stamp
+        os.unlink(os.path.join(tmp, "retriever.json"))
+        r3 = retrieval.load(tmp, params=retrieval.SearchParams(k=5))
+        assert r3.backend_name == "live-sharded"
+        np.testing.assert_array_equal(
+            np.asarray(r3.search_batch(qs).pids), np.asarray(res.pids)
+        )
+
+
+def test_live_sharded_through_batching_server(corpus):
+    from repro.serving.server import BatchingServer
+
+    docs, qs = corpus
+    r = retrieval.build(
+        docs[:100],
+        backend="live-sharded",
+        n_shards=1,
+        params=retrieval.SearchParams(
+            k=5, nprobe=4, t_cs=0.3, ndocs=256, candidate_cap=256
+        ),
+        index=dict(num_centroids=64, kmeans_iters=3),
+    )
+    srv = BatchingServer(r, batch_size=4, max_wait_ms=1.0)
+    try:
+        pids = srv.add_passages([np.asarray(d) for d in docs[100:110]])
+        assert srv.delete_passages(pids[:2]) == 2
+        res = srv.search(np.asarray(qs[0]))
+        assert res.pids.shape == (5,)
+    finally:
+        srv.shutdown()
+    assert r.describe()["index"]["num_deleted"] == 2
+
+
+@multidevice
+def test_live_sharded_compaction_reshards(corpus):
+    """After compact() the executor re-shards the new base and results
+    stay rank-identical to a rebuild."""
+    _skip_unless_devices(2)
+    docs, qs = corpus
+    base = index_mod.build_index(
+        docs[:90], num_centroids=64, nbits=2, kmeans_iters=3
+    )
+    lv = live.LiveIndex(base)
+    lv.add_passages(docs[90:120])
+    lv.delete([3, 100])
+    params = plaid.SearchParams(
+        k=10, nprobe=4, t_cs=0.3, ndocs=256, candidate_cap=256
+    )
+    eng = live.LiveEngine(lv, params, n_shards=2)
+    s0, p0 = eng.search_batch(qs)
+    pid_map = lv.compact()
+    s1, p1 = eng.search_batch(qs)  # re-sharded base, no deltas
+    remapped = np.where(np.asarray(p0) >= 0, pid_map[np.asarray(p0)], -1)
+    np.testing.assert_array_equal(remapped, np.asarray(p1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# _sniff_backend: loud failures on mixed/unknown layouts
+# --------------------------------------------------------------------------
+def _write_manifest(d, m):
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(m, f)
+
+
+def test_sniff_rejects_mixed_manifest_layout():
+    with tempfile.TemporaryDirectory() as d:
+        _write_manifest(
+            d, dict(format_version=2, n_shards=4, segments=[], generation=0)
+        )
+        with pytest.raises(ValueError, match="mixed manifest layout"):
+            retrieval.load(d)
+
+
+def test_sniff_rejects_unknown_layout():
+    with tempfile.TemporaryDirectory() as d:
+        _write_manifest(d, dict(format_version=2, something_else=True))
+        with pytest.raises(ValueError, match="refusing to guess"):
+            retrieval.load(d)
+    with tempfile.TemporaryDirectory() as d:
+        # a familiar-looking 'segments' key must not bypass the version gate
+        _write_manifest(d, dict(format_version=3, segments=[], generation=0))
+        with pytest.raises(ValueError, match="refusing to guess"):
+            retrieval.load(d)
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(FileNotFoundError):
+            retrieval.load(d)
+
+
+# --------------------------------------------------------------------------
+# No residual merge logic outside the exec layer
+# --------------------------------------------------------------------------
+def test_adapters_hold_no_merge_logic():
+    """engine_sharded and live.engine are thin adapters: the only merge
+    implementation is distributed.topk.merge_topk (used via repro.exec)."""
+    import inspect
+
+    from repro.core import engine_sharded
+    from repro.live import engine as live_engine
+
+    for mod in (engine_sharded, live_engine):
+        src = inspect.getsource(mod)
+        for needle in ("top_k", "all_gather", "lax.sort", "merge_topk"):
+            assert needle not in src, f"{mod.__name__} still has {needle!r}"
