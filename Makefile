@@ -19,7 +19,10 @@ smoke:  ## quickest benchmark pipeline smoke (table3 only)
 	$(PY) -m benchmarks.run --dry --only table3
 
 bench-dry:  ## EVERY registered benchmark at dry scale (incl. live_ingest):
-	## catches benchmark registration breakage before merge
-	$(PY) -m benchmarks.run --dry
+	## catches benchmark registration breakage before merge.  CI passes
+	## BENCH_FLAGS="--json BENCH_dry.json" to upload results as an artifact.
+	$(PY) -m benchmarks.run --dry $(BENCH_FLAGS)
 
+# The GitHub workflow runs these three targets as PARALLEL jobs (tests /
+# multidevice / bench-dry); `make ci` remains the serial local equivalent.
 ci: test test-multidevice bench-dry

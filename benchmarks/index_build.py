@@ -1,0 +1,131 @@
+"""Index-build benchmark: streaming two-pass vs monolithic, memory + speed.
+
+What the streaming builder (``repro.build``) buys is a HOST-MEMORY bound,
+not single-box speed: the monolithic ``build_index`` holds every token
+embedding in one float32 array (4·Nt·d bytes), the streaming builder holds
+``sample + one chunk`` regardless of corpus size.  This benchmark reports,
+per corpus size:
+
+* build throughput (tokens/s) for both paths and the streaming/monolithic
+  time ratio (the two-pass + chunking overhead);
+* the builder's peak float32 materialization (``BuildStats``) vs the
+  monolithic path's full-corpus array — the memory-bound headline;
+* process peak RSS (``ru_maxrss``) for reference — monotonic across cases,
+  so read per-case deltas with care;
+* a device sweep (1 .. all visible devices) of the mesh-parallel pass-1 /
+  row-sharded pass-2 build.  On fake host devices (one physical core) the
+  wall-clock win is bounded by dispatch overhead — read trends on real
+  meshes, and bit-identity here (asserted in tests, reported as
+  ``identical``).
+"""
+from __future__ import annotations
+
+import resource
+import time
+
+import jax
+import numpy as np
+
+from repro.build import StreamingIndexBuilder
+from repro.core import index as index_mod
+from repro.data import synthetic as syn
+
+from benchmarks import common
+
+SIZES = (2000, 8000)
+CHUNK_DOCS = 256
+NUM_CENTROIDS = 1024
+KMEANS_ITERS = 4
+SAMPLE_SIZE = 1 << 15
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def run(emit, dry: bool = False):
+    sizes = [common.scaled(n, dry, 200) for n in SIZES]
+    num_centroids = 128 if dry else NUM_CENTROIDS
+    sample = 2048 if dry else SAMPLE_SIZE
+    chunk_docs = common.scaled(CHUNK_DOCS, dry, 32)
+
+    for n_docs in sizes:
+        docs, _ = syn.embedding_corpus(n_docs, dim=128, seed=0)
+        packed = np.concatenate(docs)
+        n_tokens = packed.shape[0]
+        corpus_f32_bytes = packed.nbytes
+
+        t0 = time.perf_counter()
+        index_mod.build_index(
+            docs, num_centroids=num_centroids, kmeans_iters=KMEANS_ITERS
+        )
+        t_mono = time.perf_counter() - t0
+
+        builder = StreamingIndexBuilder(
+            num_centroids=num_centroids,
+            kmeans_iters=KMEANS_ITERS,
+            sample_size=sample,
+            chunk_docs=chunk_docs,
+        )
+        t0 = time.perf_counter()
+        builder.build(docs)
+        t_stream = time.perf_counter() - t0
+        st = builder.stats
+
+        emit(
+            "index_build",
+            f"docs{n_docs}",
+            n_tokens=n_tokens,
+            mono_s=round(t_mono, 3),
+            stream_s=round(t_stream, 3),
+            mono_tokens_per_s=int(n_tokens / max(t_mono, 1e-9)),
+            stream_tokens_per_s=int(n_tokens / max(t_stream, 1e-9)),
+            stream_over_mono=round(t_stream / max(t_mono, 1e-9), 2),
+            corpus_f32_mb=round(corpus_f32_bytes / 2**20, 2),
+            builder_peak_f32_mb=round(st.peak_host_f32_bytes / 2**20, 2),
+            mem_bound_ratio=round(
+                st.peak_host_f32_bytes / max(corpus_f32_bytes, 1), 3
+            ),
+            sample_tokens=st.sample_tokens,
+            n_chunks=st.n_chunks,
+            rss_mb=round(_rss_mb(), 1),
+        )
+
+    # device sweep: mesh-parallel pass 1 + row-sharded pass 2.  Output is
+    # bit-identical across counts by construction (tests assert it); here
+    # we track the wall-clock trend.
+    n_docs = sizes[0]
+    docs, _ = syn.embedding_corpus(n_docs, dim=128, seed=0)
+    # largest device count the default block granularity supports (an
+    # odd visible count — 3, 6 — must not abort the whole bench run)
+    from repro.build import DEFAULT_STAT_BLOCKS
+
+    usable = max(
+        d
+        for d in range(1, len(jax.devices()) + 1)
+        if DEFAULT_STAT_BLOCKS % d == 0
+    )
+    counts = sorted({1, usable})
+    if len(counts) == 1:
+        print(
+            "# index_build: single visible device — run under XLA_FLAGS="
+            "--xla_force_host_platform_device_count=4 for the mesh sweep"
+        )
+    for n_dev in counts:
+        builder = StreamingIndexBuilder(
+            num_centroids=num_centroids,
+            kmeans_iters=KMEANS_ITERS,
+            sample_size=sample,
+            chunk_docs=chunk_docs,
+            n_devices=n_dev,
+        )
+        t0 = time.perf_counter()
+        builder.build(docs)
+        emit(
+            "index_build",
+            f"mesh_dev{n_dev}",
+            n_devices=n_dev,
+            build_s=round(time.perf_counter() - t0, 3),
+            pass1_s=round(builder.stats.pass1_s, 3),
+            pass2_s=round(builder.stats.pass2_s, 3),
+        )

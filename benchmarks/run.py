@@ -3,12 +3,14 @@
 ``PYTHONPATH=src python -m benchmarks.run [--only table3] [--dry]`` prints
 ``bench,case,key=value,...`` CSV-ish lines (machine-greppable) and a summary.
 ``--dry`` shrinks corpora/query counts to smoke-test the full pipeline in CI
-(numbers are NOT meaningful at dry scale).
+(numbers are NOT meaningful at dry scale).  ``--json PATH`` additionally
+writes every result row as structured JSON (bench/case/values + run
+metadata) — the artifact CI uploads per run so perf enters the trajectory.
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import json
 import time
 
 BENCHES = [
@@ -23,7 +25,22 @@ BENCHES = [
     "roofline_report",  # HLO cost model of the batched pipeline
     "live_ingest",  # streaming ingest + latency vs delta count + compaction
     "sharded_live",  # latency vs shard-count x delta-segment-count sweep
+    "index_build",  # streaming vs monolithic build: throughput + host memory
 ]
+
+
+def _jsonable(v):
+    """Coerce benchmark values (numpy scalars etc.) into JSON-safe types."""
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    try:
+        import numpy as np
+
+        if isinstance(v, np.generic):
+            return v.item()
+    except ImportError:  # pragma: no cover
+        pass
+    return str(v)
 
 
 def main() -> None:
@@ -31,18 +48,26 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="substring filter")
     ap.add_argument("--dry", action="store_true",
                     help="tiny corpora / single trial: CI smoke run")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as machine-readable JSON")
     args = ap.parse_args()
 
     rows = []
+    records = []
 
     def emit(bench, case, **kv):
         parts = ",".join(f"{k}={v}" for k, v in kv.items())
         line = f"{bench},{case},{parts}"
         rows.append(line)
+        records.append(
+            dict(bench=bench, case=case,
+                 **{k: _jsonable(v) for k, v in kv.items()})
+        )
         print(line, flush=True)
 
     import importlib
 
+    t_start = time.time()
     for name in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -53,6 +78,32 @@ def main() -> None:
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
 
     print(f"# total {len(rows)} results")
+
+    if args.json:
+        import platform
+
+        try:
+            import jax
+
+            jax_meta = dict(
+                jax_version=jax.__version__,
+                backend=jax.default_backend(),
+                n_devices=len(jax.devices()),
+            )
+        except ImportError:  # pragma: no cover
+            jax_meta = {}
+        payload = dict(
+            dry=args.dry,
+            only=args.only,
+            finished_unix=time.time(),
+            wall_s=time.time() - t_start,
+            python=platform.python_version(),
+            **jax_meta,
+            results=records,
+        )
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(records)} records to {args.json}")
 
 
 if __name__ == "__main__":

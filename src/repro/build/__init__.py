@@ -1,0 +1,55 @@
+"""``repro.build`` — streaming, mesh-parallel index construction.
+
+The bounded-memory replacement for one-shot ``core.index.build_index``
+at corpus scale (see ``repro.build.streaming`` for the two-pass design
+and the array-identity contract).  The ``retrieval.build*`` factories and
+``core.indexer.build_from_encoder`` route through here; the monolithic
+builder remains as the small-corpus oracle the tests compare against.
+"""
+from repro.build.chunks import (
+    ChunkStream,
+    array_stream,
+    as_stream,
+    encoder_stream,
+    iterator_stream,
+)
+from repro.build.emit import LAYOUTS, emit, save_live, save_sharded, save_v2, to_live_index
+from repro.build.kmeans_mesh import (
+    BUILD_AXIS,
+    DEFAULT_STAT_BLOCKS,
+    build_mesh,
+    kmeans_fit_mesh,
+)
+from repro.build.sampling import ReservoirSampler, token_priorities
+from repro.build.streaming import (
+    BuildStats,
+    DEFAULT_CHUNK_DOCS,
+    DEFAULT_SAMPLE_SIZE,
+    StreamingIndexBuilder,
+    build_index_streaming,
+)
+
+__all__ = [
+    "BUILD_AXIS",
+    "BuildStats",
+    "ChunkStream",
+    "DEFAULT_CHUNK_DOCS",
+    "DEFAULT_SAMPLE_SIZE",
+    "DEFAULT_STAT_BLOCKS",
+    "LAYOUTS",
+    "ReservoirSampler",
+    "StreamingIndexBuilder",
+    "array_stream",
+    "as_stream",
+    "build_index_streaming",
+    "build_mesh",
+    "emit",
+    "encoder_stream",
+    "iterator_stream",
+    "kmeans_fit_mesh",
+    "save_live",
+    "save_sharded",
+    "save_v2",
+    "to_live_index",
+    "token_priorities",
+]

@@ -1,0 +1,373 @@
+"""Two-pass, bounded-memory, mesh-parallel PLAID index construction.
+
+The monolithic ``core.index.build_index`` materializes every token
+embedding in one host float32 array and trains/quantizes on one device —
+fine at laptop scale, impossible at PLAID's 140M-passage scale.  This
+builder streams the corpus twice and never holds more than ``sample_size
++ chunk`` float32 rows:
+
+* **pass 1** — stream chunks through the encoder, reservoir-sample tokens
+  by order-invariant priorities (``repro.build.sampling``), then train
+  centroids with mesh-parallel Lloyd iterations
+  (``repro.build.kmeans_mesh``: ``shard_map`` assignment over token-block
+  shards, ``psum``/ordered-reduce of per-cluster sums and counts) and fit
+  the residual codec on the sample's residuals.  Skipped entirely when
+  both ``centroids`` and ``codec`` are frozen (the online-ingest path).
+* **pass 2** — re-stream chunks through ONE fused jitted
+  encode→assign→residual→compress step per chunk; only compact payloads
+  (codes i32 + packed residuals u8) reach the host, and
+  ``core.index.IndexAssembler`` folds them into the CSR incrementally.
+
+The contract that makes the refactor safe: given the same training sample
+and frozen codec tables, pass 2 is ARRAY-IDENTICAL to the monolithic
+``build_index`` — per-token assignment/quantization is row-wise math that
+does not depend on chunking or on which device computed it
+(``tests/test_build_streaming.py`` pins this on ref and pallas backends,
+1 vs 4 devices).  Deviations when pass 1 is not frozen, by design:
+
+* the training sample is the priority reservoir, not
+  ``train_centroids``'s one-shot ``jax.random.choice`` draw;
+* the codec is fit on the SAMPLE's residuals, not the full corpus's
+  (identical when the corpus fits in the sample, statistically
+  indistinguishable beyond it — the PLAID reproducibility study shows
+  quality is robust to far larger perturbations of this stage).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.build import chunks as chunks_mod
+from repro.build import kmeans_mesh
+from repro.build.sampling import ReservoirSampler
+from repro.core import index as index_mod
+from repro.core import kmeans as _kmeans
+from repro.core import residual_codec as rc
+from repro.core.index import PlaidIndex
+
+DEFAULT_SAMPLE_SIZE = 1 << 18  # matches core.kmeans.train_centroids
+DEFAULT_CHUNK_DOCS = 256
+
+
+@dataclasses.dataclass
+class BuildStats:
+    """What the build did and what it cost (memory numbers are the
+    builder's own float32 materializations — the bounded-memory tests
+    assert they stay O(sample + chunk) while the corpus grows)."""
+
+    n_docs: int = 0
+    n_tokens: int = 0
+    n_chunks: int = 0
+    num_centroids: int = 0
+    sample_tokens: int = 0
+    peak_chunk_tokens: int = 0
+    peak_host_f32_bytes: int = 0
+    n_devices: int = 1
+    pass1_s: float = 0.0
+    pass2_s: float = 0.0
+    trained: bool = False  # False = frozen centroids+codec (single pass)
+
+    def note_f32(self, n_values: int) -> None:
+        self.peak_host_f32_bytes = max(self.peak_host_f32_bytes, 4 * n_values)
+
+
+def _quantize_core(emb, centroids, codec):
+    """assign → residual → compress; row-wise, so chunk/device invariant.
+
+    Calls the SAME ``_assign_chunked`` the monolithic ``build_index`` uses
+    (fixed 16384-row windows), which is what makes streaming output
+    bit-identical to the monolithic path under frozen tables.
+    """
+    emb = emb.astype(jnp.float32)
+    codes, _ = _kmeans._assign_chunked(emb, centroids)
+    packed = rc.compress_residuals(codec, emb - centroids[codes])
+    return codes, packed
+
+
+@functools.lru_cache(maxsize=8)
+def _sharded_quantize(mesh):
+    """Row-sharded quantize: each device runs the identical per-row math on
+    its row slice, so the gathered result matches the single-device one."""
+    return jax.jit(
+        shard_map(
+            _quantize_core,
+            mesh=mesh,
+            in_specs=(P(kmeans_mesh.BUILD_AXIS), P(), P()),
+            out_specs=(
+                P(kmeans_mesh.BUILD_AXIS),
+                P(kmeans_mesh.BUILD_AXIS),
+            ),
+            check_rep=False,
+        )
+    )
+
+
+class StreamingIndexBuilder:
+    """Two-pass streaming builder; see module docstring.
+
+    One-shot use::
+
+        builder = StreamingIndexBuilder(num_centroids=4096)
+        index = builder.build(corpus)          # or a ChunkStream / callable
+        builder.save(path, layout="sharded", n_shards=4)
+
+    or drive the passes yourself: ``train(stream)`` then ``quantize(stream)``.
+    """
+
+    def __init__(
+        self,
+        *,
+        num_centroids: int | None = None,
+        nbits: int = 2,
+        seed: int = 0,
+        kmeans_iters: int = 8,
+        sample_size: int = DEFAULT_SAMPLE_SIZE,
+        ivf_list_cap: int | None = None,
+        chunk_docs: int = DEFAULT_CHUNK_DOCS,
+        n_devices: int | None = None,
+        stat_blocks: int = kmeans_mesh.DEFAULT_STAT_BLOCKS,
+        centroids=None,
+        codec: rc.ResidualCodec | None = None,
+    ):
+        self.num_centroids = num_centroids
+        self.nbits = nbits if codec is None else codec.nbits
+        self.seed = seed
+        self.kmeans_iters = kmeans_iters
+        self.sample_size = int(sample_size)
+        self.ivf_list_cap = ivf_list_cap
+        self.chunk_docs = chunk_docs
+        if n_devices is None:
+            # default mesh: the most devices whose count divides the block
+            # granularity (an odd device count must not make building FAIL;
+            # explicit n_devices= still validates strictly in kmeans_mesh)
+            n_local = len(jax.devices())
+            n_devices = max(
+                d for d in range(1, n_local + 1) if stat_blocks % d == 0
+            )
+        self.mesh = kmeans_mesh.build_mesh(n_devices)
+        self.stat_blocks = stat_blocks
+        self.centroids = (
+            None if centroids is None else jnp.asarray(centroids, jnp.float32)
+        )
+        self.codec = codec
+        self.stats = BuildStats(n_devices=self.mesh.devices.size)
+        self.index: PlaidIndex | None = None
+
+    # ---- pass 1: sample + train --------------------------------------
+    def train(self, stream) -> tuple[jax.Array, rc.ResidualCodec]:
+        """Stream once; train centroids (unless frozen) and fit the codec
+        (unless frozen).  Returns the (centroids, codec) tables pass 2
+        quantizes against."""
+        stream = chunks_mod.as_stream(stream, chunk_docs=self.chunk_docs)
+        t0 = time.perf_counter()
+        need_centroids = self.centroids is None
+        need_codec = self.codec is None
+        if not (need_centroids or need_codec):
+            return self.centroids, self.codec
+
+        reservoir = ReservoirSampler(self.sample_size, seed=self.seed)
+        n_tokens = n_docs = n_chunks = 0
+        for payload, doc_lens in stream.chunks():
+            emb_np = self._embed_host(stream, payload)
+            self.stats.note_f32(emb_np.size)
+            reservoir.offer(emb_np, n_tokens)
+            self.stats.note_f32((reservoir.n_kept + emb_np.shape[0]) *
+                                emb_np.shape[1])
+            n_tokens += emb_np.shape[0]
+            n_docs += len(doc_lens)
+            n_chunks += 1
+            self.stats.peak_chunk_tokens = max(
+                self.stats.peak_chunk_tokens, emb_np.shape[0]
+            )
+        if n_tokens == 0:
+            raise ValueError("corpus stream yielded no tokens")
+        self.stats.n_docs, self.stats.n_tokens = n_docs, n_tokens
+        self.stats.n_chunks = n_chunks
+        self.stats.sample_tokens = reservoir.n_kept
+        sample = jnp.asarray(reservoir.sample())
+
+        if need_centroids:
+            k = self.num_centroids
+            if k is None:
+                k = _kmeans.num_centroids_for(n_tokens)
+            # same key discipline as core.kmeans.train_centroids: one split,
+            # sample-draw key (unused here — the reservoir is priority-
+            # based) and fit key kept independent
+            _, key_fit = jax.random.split(jax.random.PRNGKey(self.seed))
+            self.centroids = kmeans_mesh.kmeans_fit_mesh(
+                sample,
+                k,
+                key=key_fit,
+                iters=self.kmeans_iters,
+                mesh=self.mesh,
+                stat_blocks=self.stat_blocks,
+            )
+        self.stats.num_centroids = int(self.centroids.shape[0])
+        if need_codec:
+            codes, _ = _kmeans._assign_chunked(sample, self.centroids)
+            residuals = sample - self.centroids[codes]
+            self.codec = rc.fit_codec(residuals, self.nbits)
+        self.stats.trained = True
+        self.stats.pass1_s = time.perf_counter() - t0
+        return self.centroids, self.codec
+
+    # ---- pass 2: fused quantize + incremental CSR --------------------
+    def quantize(self, stream) -> PlaidIndex:
+        """Re-stream; one fused jitted encode→assign→residual→compress per
+        chunk, assembled incrementally.  Requires tables (``train`` first,
+        or frozen ``centroids=``/``codec=`` at construction)."""
+        if self.centroids is None or self.codec is None:
+            raise RuntimeError(
+                "no centroid/codec tables: call train() first or construct "
+                "with frozen centroids= and codec="
+            )
+        stream = chunks_mod.as_stream(stream, chunk_docs=self.chunk_docs)
+        t0 = time.perf_counter()
+        assembler = index_mod.IndexAssembler(
+            self.centroids,
+            cutoffs=self.codec.cutoffs,
+            weights=self.codec.weights,
+            nbits=self.codec.nbits,
+            ivf_list_cap=self.ivf_list_cap,
+        )
+        n_chunks = 0
+        for payload, doc_lens in stream.chunks():
+            codes, packed = self._quantize_chunk(stream, payload)
+            assembler.add_chunk(codes, packed, doc_lens)
+            n_chunks += 1
+        self.index = assembler.finish()
+        self.stats.n_chunks = max(self.stats.n_chunks, n_chunks)
+        if not self.stats.n_tokens:  # frozen-tables single-pass build
+            self.stats.n_tokens = self.index.num_tokens
+            self.stats.n_docs = self.index.num_passages
+            self.stats.num_centroids = self.index.num_centroids
+        self.stats.pass2_s = time.perf_counter() - t0
+        return self.index
+
+    def build(self, corpus, doc_lens=None) -> PlaidIndex:
+        """Both passes over any supported corpus input (see
+        ``repro.build.chunks.as_stream``)."""
+        stream = chunks_mod.as_stream(
+            corpus, doc_lens, chunk_docs=self.chunk_docs
+        )
+        self.train(stream)
+        return self.quantize(stream)
+
+    # ---- emit ----------------------------------------------------------
+    def save(self, path: str, *, layout: str = "v2", n_shards: int | None = None):
+        """Write the built index in any serving layout (see repro.build.emit)."""
+        from repro.build import emit as emit_mod
+
+        if self.index is None:
+            raise RuntimeError("build() / quantize() before save()")
+        return emit_mod.emit(self.index, path, layout=layout, n_shards=n_shards)
+
+    # ---- internals -----------------------------------------------------
+    def _embed_host(self, stream, payload) -> np.ndarray:
+        """Pass-1 embedding of one chunk, host-resident for the reservoir.
+
+        Already-host embedding chunks stay on host (the naive jnp round
+        trip would ship the whole corpus over PCIe and back with zero
+        compute in between); only encoder output crosses the device
+        boundary, once.
+        """
+        if stream.encode_fn is None:
+            return np.asarray(payload, np.float32)
+        emb = stream.encode_fn(jnp.asarray(payload))
+        return np.asarray(emb, np.float32).reshape(-1, emb.shape[-1])
+
+    def _quantize_chunk(self, stream, payload):
+        """Fused per-chunk step -> (codes, packed) pulled to host compact."""
+        if stream.encode_fn is not None:
+            # encoder chunks: encode→assign→residual→compress in one jit
+            # (single-program; sharding the encoder is the serving mesh's
+            # job, not the builder's)
+            fn = _encoder_quantize(stream.encode_fn)
+            codes, packed = fn(jnp.asarray(payload), self.centroids, self.codec)
+            return np.asarray(codes), np.asarray(packed)
+        emb = np.asarray(payload, np.float32)
+        nt = emb.shape[0]
+        self.stats.peak_chunk_tokens = max(self.stats.peak_chunk_tokens, nt)
+        n_dev = self.mesh.devices.size
+        # Chunks are cut on document boundaries, so every chunk has its own
+        # token count — jitting on the raw shape would recompile per chunk.
+        # Pad rows up to a power-of-2 bucket (zero rows, sliced off after:
+        # per-row math keeps the result bit-identical), O(log) traces total.
+        bucket = max(64, 1 << (nt - 1).bit_length())
+        bucket += (-bucket) % n_dev
+        if bucket != nt:
+            emb = np.pad(emb, ((0, bucket - nt), (0, 0)))
+        self.stats.note_f32(emb.size)  # the padded pass-2 chunk copy
+        quantize = (
+            _jit_quantize if n_dev == 1 else _sharded_quantize(self.mesh)
+        )
+        codes, packed = quantize(
+            jnp.asarray(emb), self.centroids, self.codec
+        )
+        return np.asarray(codes[:nt]), np.asarray(packed[:nt])
+
+_jit_quantize = jax.jit(_quantize_core)
+
+
+@functools.lru_cache(maxsize=8)
+def _encoder_quantize(encode_fn):
+    """Fused encode→assign→residual→compress program per encoder.
+
+    Module-level cache keyed on the encoder alone (never on a builder
+    instance — an instance key would pin the builder and its built index
+    in the cache for process lifetime)."""
+
+    def fn(payload, centroids, codec):
+        emb = encode_fn(payload)
+        return _quantize_core(emb.reshape(-1, emb.shape[-1]), centroids, codec)
+
+    return jax.jit(fn)
+
+
+def build_index_streaming(
+    corpus,
+    doc_lens=None,
+    *,
+    num_centroids: int | None = None,
+    nbits: int = 2,
+    seed: int = 0,
+    kmeans_iters: int = 8,
+    ivf_list_cap: int | None = None,
+    centroids=None,
+    codec: rc.ResidualCodec | None = None,
+    chunk_docs: int = DEFAULT_CHUNK_DOCS,
+    sample_size: int = DEFAULT_SAMPLE_SIZE,
+    n_devices: int | None = None,
+    stat_blocks: int = kmeans_mesh.DEFAULT_STAT_BLOCKS,
+    return_stats: bool = False,
+):
+    """Build a PLAID index with the streaming two-pass pipeline.
+
+    Drop-in superset of ``core.index.build_index``'s keyword surface (the
+    ``retrieval.build*`` factories route here); extra knobs control the
+    streaming geometry.  ``corpus`` may be a list of per-doc arrays, a
+    packed ``(Nt, d)`` array with ``doc_lens``, a ``ChunkStream``, or a
+    zero-arg callable yielding ``(embeddings, doc_lens)`` chunks.
+    """
+    builder = StreamingIndexBuilder(
+        num_centroids=num_centroids,
+        nbits=nbits,
+        seed=seed,
+        kmeans_iters=kmeans_iters,
+        sample_size=sample_size,
+        ivf_list_cap=ivf_list_cap,
+        chunk_docs=chunk_docs,
+        n_devices=n_devices,
+        stat_blocks=stat_blocks,
+        centroids=centroids,
+        codec=codec,
+    )
+    index = builder.build(corpus, doc_lens)
+    return (index, builder.stats) if return_stats else index

@@ -74,6 +74,14 @@ class PlaidIndex:
         return rc.decompress(self.codec, codes, packed, self.centroids)
 
 
+def _unique_code_pid_pairs(codes_np: np.ndarray, tok_pid: np.ndarray) -> np.ndarray:
+    """Sorted unique (code, pid) rows — the IVF's nonzero pattern."""
+    return np.unique(
+        np.stack([codes_np.astype(np.int64), tok_pid.astype(np.int64)], 1),
+        axis=0,
+    )
+
+
 def assemble_index(
     centroids: jax.Array,
     codes: np.ndarray,
@@ -84,15 +92,19 @@ def assemble_index(
     weights,
     nbits: int,
     ivf_list_cap: int | None = None,
+    pairs: np.ndarray | None = None,
 ) -> PlaidIndex:
     """Assemble a PlaidIndex from already-quantized token payloads.
 
     The host-side CSR construction shared by every index producer: the
-    offline ``build_index`` path, online delta-segment builds against
-    frozen centroids (``repro.live``), and compaction (which re-packs
-    surviving codes/residuals with no re-quantization).  ``codes`` and
-    ``doc_lens`` are host numpy; ``packed_residuals`` may be device- or
-    host-resident.
+    offline ``build_index`` path, the streaming two-pass builder
+    (``repro.build``, via :class:`IndexAssembler`), online delta-segment
+    builds against frozen centroids (``repro.live``), and compaction
+    (which re-packs surviving codes/residuals with no re-quantization).
+    ``codes`` and ``doc_lens`` are host numpy; ``packed_residuals`` may be
+    device- or host-resident.  ``pairs`` lets incremental producers pass
+    pre-merged unique ``(code, pid)`` rows (sorted lexicographically, the
+    ``np.unique`` order) instead of re-deriving them from scratch.
     """
     codes_np = np.asarray(codes)
     doc_lens = np.asarray(doc_lens, np.int32)
@@ -104,10 +116,8 @@ def assemble_index(
     tok_pid = np.repeat(np.arange(len(doc_lens), dtype=np.int32), doc_lens)
 
     # IVF: centroid -> sorted unique passage ids (host-side CSR build)
-    pairs = np.unique(
-        np.stack([codes_np.astype(np.int64), tok_pid.astype(np.int64)], 1),
-        axis=0,
-    )
+    if pairs is None:
+        pairs = _unique_code_pid_pairs(codes_np, tok_pid)
     ivf_lens = np.bincount(pairs[:, 0], minlength=num_centroids).astype(np.int32)
     ivf_offsets = np.zeros(num_centroids + 1, np.int32)
     np.cumsum(ivf_lens, out=ivf_offsets[1:])
@@ -147,6 +157,92 @@ def assemble_index(
     )
 
 
+class IndexAssembler:
+    """Incremental CSR assembly: feed per-chunk quantized payloads, finish
+    into a :class:`PlaidIndex` array-identical to a one-shot
+    :func:`assemble_index` over the concatenated payloads.
+
+    The streaming builder's pass-2 sink (``repro.build``): chunks arrive as
+    compact ``(codes i32, packed residuals u8, doc_lens i32)`` — never raw
+    float32 embeddings — and the IVF's ``(code, pid)`` unique-pair set is
+    folded in per chunk, so the only O(corpus) host state is the compressed
+    payload that becomes the index itself.  Chunks must cover disjoint,
+    consecutive pid ranges (chunk boundaries on document boundaries), which
+    makes per-chunk ``np.unique`` results globally unique and the final
+    merge a lexsort, exactly matching ``np.unique`` over the full corpus.
+    """
+
+    def __init__(
+        self,
+        centroids,
+        *,
+        cutoffs,
+        weights,
+        nbits: int,
+        ivf_list_cap: int | None = None,
+    ):
+        self._centroids = jnp.asarray(centroids, jnp.float32)
+        self._cutoffs = cutoffs
+        self._weights = weights
+        self._nbits = nbits
+        self._ivf_list_cap = ivf_list_cap
+        self._codes: list[np.ndarray] = []
+        self._packed: list[np.ndarray] = []
+        self._doc_lens: list[np.ndarray] = []
+        self._pairs: list[np.ndarray] = []
+        self._n_docs = 0
+        self._finished = False
+
+    @property
+    def num_docs(self) -> int:
+        return self._n_docs
+
+    @property
+    def num_tokens(self) -> int:
+        return sum(c.shape[0] for c in self._codes)
+
+    def add_chunk(self, codes, packed_residuals, doc_lens) -> None:
+        """One quantized chunk: codes (nt,), packed (nt, d*b/8), doc_lens (nd,)."""
+        codes_np = np.asarray(codes, np.int32)
+        packed_np = np.asarray(packed_residuals, np.uint8)
+        doc_lens = np.asarray(doc_lens, np.int32)
+        if int(doc_lens.sum()) != codes_np.shape[0]:
+            raise ValueError(
+                f"chunk doc_lens sum {int(doc_lens.sum())} != chunk tokens "
+                f"{codes_np.shape[0]}"
+            )
+        tok_pid = self._n_docs + np.repeat(
+            np.arange(len(doc_lens), dtype=np.int64), doc_lens
+        )
+        self._pairs.append(_unique_code_pid_pairs(codes_np, tok_pid))
+        self._codes.append(codes_np)
+        self._packed.append(packed_np)
+        self._doc_lens.append(doc_lens)
+        self._n_docs += len(doc_lens)
+
+    def finish(self) -> PlaidIndex:
+        if self._finished:
+            raise RuntimeError("IndexAssembler.finish() called twice")
+        self._finished = True
+        if self._n_docs == 0:
+            raise ValueError("no chunks were added")
+        pairs = np.concatenate(self._pairs)
+        # chunk pid ranges are disjoint, so rows are already globally
+        # unique; the lexsort reproduces np.unique's (code, pid) row order
+        pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+        return assemble_index(
+            self._centroids,
+            np.concatenate(self._codes),
+            np.concatenate(self._packed),
+            np.concatenate(self._doc_lens),
+            cutoffs=self._cutoffs,
+            weights=self._weights,
+            nbits=self._nbits,
+            ivf_list_cap=self._ivf_list_cap,
+            pairs=pairs,
+        )
+
+
 def build_index(
     doc_embeddings: list[np.ndarray] | np.ndarray,
     doc_lens: np.ndarray | None = None,
@@ -165,6 +261,13 @@ def build_index(
     (Nt, d) array with ``doc_lens`` giving per-document token counts.
     One-time host-side work (CSR construction) uses numpy; all quantization
     math runs through the jitted codec/kmeans paths.
+
+    This is the MONOLITHIC builder: the whole corpus is materialized as
+    one float32 array.  Corpus-scale construction goes through the
+    streaming two-pass pipeline (``repro.build``) — which the
+    ``retrieval.build*`` factories use — and under frozen
+    ``centroids=``/``codec=`` the two are asserted array-identical, which
+    is why this one survives as the small-corpus oracle.
 
     Passing ``centroids`` (and optionally ``codec``) skips k-means training
     / codec fitting and quantizes against the FROZEN tables instead — the

@@ -21,7 +21,7 @@ import os
 import jax
 import numpy as np
 
-from repro.core import engine_sharded, index as index_mod
+from repro.core import engine_sharded
 from repro.core.index import PlaidIndex
 from repro.live import manifest as manifest_mod
 
@@ -145,17 +145,21 @@ def build_from_encoder(
     *,
     chunk: int = 256,
     doc_lens: np.ndarray | None = None,
+    return_stats: bool = False,
     **build_kwargs,
-) -> PlaidIndex:
-    """Offline encode (chunked, bounded host memory) then build."""
-    import jax.numpy as jnp
+):
+    """Offline encode + build, streaming: a thin adapter over the two-pass
+    ``repro.build`` pipeline.  Token chunks flow through one fused jitted
+    encode→assign→residual→compress step, so the full corpus never exists
+    as a host float32 array (``return_stats=True`` returns the
+    ``BuildStats`` that prove it).  ``build_kwargs`` take the
+    ``build_index_streaming`` keyword surface (a superset of the old
+    ``build_index`` one)."""
+    from repro import build as build_mod
 
-    N, L = corpus_tokens.shape
-    embs = []
-    for i in range(0, N, chunk):
-        e = encode_fn(jnp.asarray(corpus_tokens[i : i + chunk]))
-        embs.append(np.asarray(e, np.float32))
-    packed = np.concatenate(embs).reshape(-1, embs[0].shape[-1])
-    if doc_lens is None:
-        doc_lens = np.full(N, L, np.int32)
-    return index_mod.build_index(packed, doc_lens=doc_lens, **build_kwargs)
+    stream = build_mod.encoder_stream(
+        encode_fn, corpus_tokens, chunk_docs=chunk, doc_lens=doc_lens
+    )
+    return build_mod.build_index_streaming(
+        stream, return_stats=return_stats, **build_kwargs
+    )

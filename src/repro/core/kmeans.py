@@ -89,8 +89,11 @@ def train_centroids(
     n = emb.shape[0]
     if k is None:
         k = num_centroids_for(n)
-    key = jax.random.PRNGKey(seed)
+    # Independent keys for the two draws: reusing one key would correlate
+    # WHICH tokens train with WHERE the Lloyd iteration starts (the sampled
+    # rows and the init rows come from the same permutation stream).
+    key_sample, key_fit = jax.random.split(jax.random.PRNGKey(seed))
     if n > sample:
-        idx = jax.random.choice(key, n, shape=(sample,), replace=False)
+        idx = jax.random.choice(key_sample, n, shape=(sample,), replace=False)
         emb = emb[idx]
-    return kmeans_fit(emb, k, key=key, iters=iters)
+    return kmeans_fit(emb, k, key=key_fit, iters=iters)

@@ -1,1 +1,1 @@
-from repro.distributed import sharding  # noqa: F401
+from repro.distributed import reduce, sharding  # noqa: F401

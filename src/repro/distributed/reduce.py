@@ -1,0 +1,46 @@
+"""Deterministic cross-device reductions for the index-build collectives.
+
+``jax.lax.psum`` of float partials is not bitwise reproducible across
+device counts: float addition is non-associative and the all-reduce
+combines partials in a topology-dependent order, so the same corpus
+trained on 1 vs 4 devices drifts in the last ulp — which cascades through
+Lloyd iterations into visibly different centroids.  The streaming index
+build promises *bit-identical* output for any device count (ROADMAP /
+build-determinism tests), so its statistics reductions come from here:
+
+* :func:`ordered_block_sum` — partials are computed at a FIXED block
+  granularity (independent of device count), all-gathered in global block
+  order, and summed sequentially.  Same blocks + same order = same bits,
+  whatever the mesh size.
+* integer-valued accumulators (cluster counts) stay on plain ``psum`` —
+  integer-valued float sums are exact, hence order-invariant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ordered_block_sum(partials: jax.Array, axis_name: str | None) -> jax.Array:
+    """Sum leading-axis block partials across the mesh in global block order.
+
+    ``partials``: (local_blocks, ...) — this device's slice of a globally
+    fixed block decomposition (blocks assigned to devices in contiguous
+    rank order, the ``PartitionSpec(axis)`` layout).  Returns the replicated
+    (...,) total, bitwise identical for every device count that divides the
+    global block count.  ``axis_name=None`` skips the gather (single-device
+    caller outside ``shard_map``): the sequential reduction is the same.
+    """
+    if axis_name is not None:
+        # tiled gather concatenates device slices in rank order == the
+        # global block order of the fixed decomposition
+        partials = jax.lax.all_gather(partials, axis_name, axis=0, tiled=True)
+    total = partials.shape[0]
+
+    def body(i, acc):
+        return acc + partials[i]
+
+    # fori_loop forces one left-to-right addition chain: XLA cannot re-tree
+    # the reduction, so the result is independent of how many blocks each
+    # device contributed.
+    return jax.lax.fori_loop(0, total, body, jnp.zeros_like(partials[0]))

@@ -49,12 +49,23 @@ def build_delta_segment(
     existing centroids and residual-compressed with its cutoffs/weights, so
     the segment is queryable with the base's stage-1 score matrix and is
     array-identical to what a full rebuild would produce for these docs.
+
+    Routed through the streaming quantize pass (``repro.build``) — frozen
+    tables mean pass 1 is skipped entirely, and the builder's identity
+    contract guarantees the same arrays as the monolithic ``build_index``
+    while a bulk ingest only ever holds one chunk of raw embeddings.
     """
-    return index_mod.build_index(
+    from repro.build import build_index_streaming
+
+    # n_devices=1: a delta is a handful of documents — padding it through
+    # the row-sharded shard_map would be pure dispatch overhead on the
+    # online-ingest hot path (results are bit-identical either way)
+    return build_index_streaming(
         doc_embeddings,
         doc_lens=doc_lens,
         centroids=base.centroids,
         codec=base.codec,
+        n_devices=1,
     )
 
 

@@ -31,7 +31,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine_sharded
-from repro.core import index as index_mod
 from repro.core import indexer
 from repro.core import pipeline as pipeline_mod
 from repro.core import plaid as plaid_mod
@@ -48,7 +47,14 @@ from repro.retrieval.types import (
 
 
 def _build_index(corpus_embs, cfg: RetrieverConfig, doc_lens):
-    return index_mod.build_index(corpus_embs, doc_lens=doc_lens, **cfg.index)
+    """Every facade ``build`` routes through the streaming two-pass builder
+    (``repro.build``): bounded host memory, mesh-parallel pass 1, and the
+    same keyword surface as the monolithic ``build_index`` plus the
+    streaming knobs (``chunk_docs``, ``sample_size``, ``n_devices``,
+    ``stat_blocks``) via ``RetrieverConfig.index``."""
+    from repro.build import build_index_streaming
+
+    return build_index_streaming(corpus_embs, doc_lens=doc_lens, **cfg.index)
 
 
 def to_engine_params(p: SearchParams, impl: str = "ref") -> plaid_mod.SearchParams:

@@ -85,10 +85,14 @@ def params_for_k(k: int, candidate_cap: int | None = None) -> SearchParams:
 class RetrieverConfig:
     """Everything ``retrieval.build`` needs: backend choice + parameters.
 
-    ``index`` is forwarded to the core index builder (``num_centroids``,
-    ``nbits``, ``kmeans_iters``, ``seed``, ``ivf_list_cap``).  ``n_shards``
-    applies to the device-sharded backends (``"plaid-sharded"`` and the
-    ``"live-sharded"`` family); ``None`` means one shard per local device.
+    ``index`` is forwarded to the streaming index builder
+    (``repro.build.build_index_streaming``): the classic knobs
+    (``num_centroids``, ``nbits``, ``kmeans_iters``, ``seed``,
+    ``ivf_list_cap``, frozen ``centroids``/``codec``) plus the streaming
+    geometry (``chunk_docs``, ``sample_size``, ``n_devices``,
+    ``stat_blocks``).  ``n_shards`` applies to the device-sharded backends
+    (``"plaid-sharded"`` and the ``"live-sharded"`` family); ``None``
+    means one shard per local device.
     """
 
     backend: str = "plaid"

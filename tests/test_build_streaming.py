@@ -1,0 +1,413 @@
+"""Streaming two-pass build (``repro.build``): array-identity vs the
+monolithic ``build_index``, bit-determinism across chunk sizes and device
+counts, bounded host memory, emitter round-trips, and the kmeans PRNG
+key-split discipline.
+
+The multi-shard points run under ``make test-multidevice``
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``); on a
+single-device box they skip.
+"""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container images without hypothesis: skip only the
+    # property-based tests; the rest of the module still runs
+    import pytest as _pytest
+
+    def given(*_a, **_k):
+        return lambda f: _pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+from repro import build as build_mod
+from repro import retrieval
+from repro.build.sampling import ReservoirSampler
+from repro.core import index as index_mod
+from repro.core import indexer
+from repro.core import kmeans as km
+from repro.core import plaid
+from repro.data import synthetic as syn
+
+multidevice = pytest.mark.multidevice
+
+ARRAY_FIELDS = [
+    f.name
+    for f in dataclasses.fields(index_mod.PlaidIndex)
+    if not f.metadata.get("static")
+]
+STATIC_FIELDS = [
+    f.name
+    for f in dataclasses.fields(index_mod.PlaidIndex)
+    if f.metadata.get("static")
+]
+
+
+def assert_indexes_identical(a, b, msg=""):
+    """Bitwise equality over every array AND static field of a PlaidIndex."""
+    for f in ARRAY_FIELDS:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        assert x.dtype == y.dtype and x.shape == y.shape, (msg, f)
+        np.testing.assert_array_equal(x, y, err_msg=f"{msg}: field {f}")
+    for f in STATIC_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (msg, f)
+
+
+def _skip_unless_devices(n: int):
+    if len(jax.devices()) < n:
+        pytest.skip(
+            f"needs {n} devices (run under make test-multidevice / "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+        )
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    docs, _ = syn.embedding_corpus(220, dim=32, seed=3)
+    return docs
+
+
+@pytest.fixture(scope="module")
+def mono_index(corpus):
+    return index_mod.build_index(
+        corpus, num_centroids=64, kmeans_iters=3, seed=0
+    )
+
+
+# --------------------------------------------------------------------------
+# Acceptance: streaming == monolithic under frozen centroids + codec
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk_docs", [7, 64, 10_000])
+def test_frozen_tables_streaming_identical_to_monolithic(
+    corpus, mono_index, chunk_docs
+):
+    """Pass 2 is per-token row math: re-chunking the corpus must reproduce
+    the monolithic build bit-for-bit given the same frozen tables."""
+    streamed = build_mod.build_index_streaming(
+        corpus,
+        centroids=mono_index.centroids,
+        codec=mono_index.codec,
+        chunk_docs=chunk_docs,
+    )
+    assert_indexes_identical(mono_index, streamed, f"chunk_docs={chunk_docs}")
+
+
+@pytest.mark.parametrize("backend", ["plaid", "plaid-pallas"])
+def test_frozen_identity_holds_through_search(corpus, mono_index, backend):
+    """The identity is end-to-end: ref and pallas engines return the same
+    ranking from a streaming-built index as from the monolithic one."""
+    streamed = build_mod.build_index_streaming(
+        corpus,
+        centroids=mono_index.centroids,
+        codec=mono_index.codec,
+        chunk_docs=31,
+    )
+    qs, _ = syn.queries_from_docs(corpus, 6)
+    qs = jnp.asarray(qs)
+    params = retrieval.SearchParams(
+        k=5, nprobe=4, t_cs=0.3, ndocs=128, candidate_cap=128
+    )
+    want = retrieval.from_index(mono_index, backend=backend, params=params)
+    got = retrieval.from_index(streamed, backend=backend, params=params)
+    res_w, res_g = want.search_batch(qs), got.search_batch(qs)
+    np.testing.assert_array_equal(np.asarray(res_w.pids), np.asarray(res_g.pids))
+    np.testing.assert_array_equal(
+        np.asarray(res_w.scores), np.asarray(res_g.scores)
+    )
+
+
+# --------------------------------------------------------------------------
+# Determinism: same seed -> bit-identical index, whatever the chunking
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk_docs", [13, 100])
+def test_full_build_bit_identical_across_chunk_sizes(corpus, chunk_docs):
+    """Pass 1 included: the priority reservoir + fixed-block Lloyd make the
+    WHOLE build (training sample, centroids, codec, payload) a pure
+    function of (corpus, seed) — chunk geometry cancels out."""
+    ref = build_mod.build_index_streaming(
+        corpus, num_centroids=64, kmeans_iters=3, seed=0, chunk_docs=1_000_000
+    )
+    got = build_mod.build_index_streaming(
+        corpus, num_centroids=64, kmeans_iters=3, seed=0, chunk_docs=chunk_docs
+    )
+    assert_indexes_identical(ref, got, f"chunk_docs={chunk_docs}")
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_docs=st.integers(3, 40),
+    dim=st.sampled_from([16, 32]),
+    max_len=st.integers(4, 24),
+    chunk_a=st.integers(1, 50),
+    chunk_b=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+    sample_size=st.sampled_from([64, 1 << 18]),
+)
+def test_build_determinism_property(
+    n_docs, dim, max_len, chunk_a, chunk_b, seed, sample_size
+):
+    """Hypothesis over corpus shapes: two arbitrary chunkings of the same
+    corpus + seed produce bit-identical indexes, including when the
+    reservoir actually subsamples (sample_size=64)."""
+    docs, _ = syn.embedding_corpus(
+        n_docs, dim=dim, min_len=2, max_len=max_len, seed=seed % 997
+    )
+    kw = dict(
+        num_centroids=16, kmeans_iters=2, seed=seed, sample_size=sample_size
+    )
+    a = build_mod.build_index_streaming(docs, chunk_docs=chunk_a, **kw)
+    b = build_mod.build_index_streaming(docs, chunk_docs=chunk_b, **kw)
+    assert_indexes_identical(a, b, f"chunks {chunk_a} vs {chunk_b}")
+
+
+def test_token_priorities_distinct_across_nearby_seeds():
+    """Regression: the seed must be hashed before offsetting the index
+    stream — a raw ``idx + c*seed`` mix made seed pairs (2k, 2k+1) select
+    identical training samples."""
+    idx = np.arange(256)
+    prios = [build_mod.token_priorities(idx, s) for s in range(4)]
+    for i in range(len(prios)):
+        assert np.unique(prios[i]).size == idx.size  # bijective per seed
+        for j in range(i + 1, len(prios)):
+            assert not np.array_equal(prios[i], prios[j]), (i, j)
+
+
+def test_reservoir_is_chunking_invariant():
+    rng = np.random.default_rng(0)
+    rows = rng.standard_normal((500, 8)).astype(np.float32)
+    whole = ReservoirSampler(64, seed=7)
+    whole.offer(rows, 0)
+    pieces = ReservoirSampler(64, seed=7)
+    for lo in range(0, 500, 33):
+        pieces.offer(rows[lo : lo + 33], lo)
+    np.testing.assert_array_equal(whole.sample(), pieces.sample())
+    assert whole.n_kept == 64
+
+
+# --------------------------------------------------------------------------
+# Determinism + identity across DEVICE COUNTS (multidevice grid)
+# --------------------------------------------------------------------------
+@multidevice
+@pytest.mark.parametrize("n_devices", [2, 4])
+def test_full_build_bit_identical_across_device_counts(corpus, n_devices):
+    """shard_map Lloyd + row-sharded quantize reproduce the single-device
+    build bit-for-bit (ordered block reduction, see distributed.reduce)."""
+    _skip_unless_devices(n_devices)
+    kw = dict(num_centroids=64, kmeans_iters=3, seed=0)
+    ref = build_mod.build_index_streaming(
+        corpus, chunk_docs=33, n_devices=1, **kw
+    )
+    got = build_mod.build_index_streaming(
+        corpus, chunk_docs=57, n_devices=n_devices, **kw
+    )
+    assert_indexes_identical(ref, got, f"n_devices={n_devices}")
+
+
+@multidevice
+def test_frozen_tables_multidevice_identical_to_monolithic(corpus, mono_index):
+    _skip_unless_devices(4)
+    streamed = build_mod.build_index_streaming(
+        corpus,
+        centroids=mono_index.centroids,
+        codec=mono_index.codec,
+        chunk_docs=41,
+        n_devices=4,
+    )
+    assert_indexes_identical(mono_index, streamed, "4-device frozen build")
+
+
+# --------------------------------------------------------------------------
+# Bounded memory
+# --------------------------------------------------------------------------
+def test_builder_memory_is_sample_plus_chunk_bounded(corpus):
+    """The builder's float32 materializations stay O(sample + chunk) while
+    the corpus is an order of magnitude bigger."""
+    dim = corpus[0].shape[1]
+    corpus_bytes = 4 * dim * sum(len(d) for d in corpus)
+    builder = build_mod.StreamingIndexBuilder(
+        num_centroids=32, kmeans_iters=2, sample_size=256, chunk_docs=8
+    )
+    idx = builder.build(corpus)
+    assert idx.num_passages == len(corpus)
+    st_ = builder.stats
+    budget = 4 * dim * (256 + 2 * st_.peak_chunk_tokens)
+    assert st_.peak_host_f32_bytes <= budget
+    assert st_.peak_host_f32_bytes < corpus_bytes / 4
+
+
+def test_iterator_stream_never_needs_a_full_corpus_array():
+    """Corpora that only exist as a stream build fine: chunks are generated
+    on the fly, twice (two passes)."""
+    rng = np.random.default_rng(5)
+    n_chunks, docs_per_chunk = 12, 10
+    passes = []
+
+    def factory():
+        passes.append(0)
+        gen = np.random.default_rng(42)  # re-create identical chunks
+        for _ in range(n_chunks):
+            lens = gen.integers(4, 12, docs_per_chunk).astype(np.int32)
+            emb = gen.standard_normal((int(lens.sum()), 16)).astype(np.float32)
+            yield emb, lens
+
+    idx = build_mod.build_index_streaming(
+        build_mod.iterator_stream(factory), num_centroids=16, kmeans_iters=2
+    )
+    assert len(passes) == 2  # pass 1 (sample+train) and pass 2 (quantize)
+    assert idx.num_passages == n_chunks * docs_per_chunk
+    del rng
+
+
+def test_build_from_encoder_is_streaming_and_identical(corpus):
+    """The indexer adapter: bounded stats, and with frozen tables the
+    output equals encoding everything then building monolithically."""
+    rng = np.random.default_rng(0)
+    dim = 16
+    basis = jnp.asarray(rng.standard_normal((64, dim)), jnp.float32)
+
+    def fake_encode(tokens):
+        e = basis[tokens % 64]
+        return e / jnp.linalg.norm(e, axis=-1, keepdims=True)
+
+    tokens = rng.integers(0, 64, (120, 8)).astype(np.int32)
+    full_emb = np.asarray(fake_encode(jnp.asarray(tokens))).reshape(-1, dim)
+    mono = index_mod.build_index(
+        full_emb,
+        doc_lens=np.full(120, 8, np.int32),
+        num_centroids=16,
+        kmeans_iters=2,
+    )
+    streamed, stats = indexer.build_from_encoder(
+        fake_encode,
+        tokens,
+        chunk=16,
+        centroids=mono.centroids,
+        codec=mono.codec,
+        return_stats=True,
+    )
+    assert_indexes_identical(mono, streamed, "encoder adapter")
+    # pass 1 skipped under frozen tables -> the encoder path never pulled
+    # a float32 embedding chunk to host at all
+    assert stats.peak_host_f32_bytes == 0
+    assert not stats.trained
+
+
+# --------------------------------------------------------------------------
+# kmeans PRNG discipline (bugfix pin)
+# --------------------------------------------------------------------------
+def test_train_centroids_splits_sample_and_init_keys():
+    """The training-sample draw and the kmeans init draw must come from
+    INDEPENDENT keys (one split of PRNGKey(seed)) — reusing one key made
+    'which tokens train' correlate with 'where Lloyd starts'."""
+    rng = np.random.default_rng(1)
+    emb = rng.standard_normal((400, 8)).astype(np.float32)
+    seed, sample = 9, 128
+    key_sample, key_fit = jax.random.split(jax.random.PRNGKey(seed))
+    idx = jax.random.choice(key_sample, 400, shape=(sample,), replace=False)
+    want = km.kmeans_fit(jnp.asarray(emb)[idx], 16, key=key_fit, iters=3)
+    got = km.train_centroids(emb, 16, seed=seed, sample=sample, iters=3)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    # and the no-subsampling path uses the SAME fit key (sample key unused)
+    want_full = km.kmeans_fit(jnp.asarray(emb), 16, key=key_fit, iters=3)
+    got_full = km.train_centroids(emb, 16, seed=seed, sample=1 << 20, iters=3)
+    np.testing.assert_array_equal(np.asarray(want_full), np.asarray(got_full))
+
+
+# --------------------------------------------------------------------------
+# Incremental CSR assembly + emitters
+# --------------------------------------------------------------------------
+def test_index_assembler_matches_one_shot_assemble(mono_index):
+    codes = np.asarray(mono_index.codes)
+    packed = np.asarray(mono_index.residuals)
+    doc_lens = np.asarray(mono_index.doc_lens)
+    offsets = np.asarray(mono_index.doc_offsets)
+    asm = index_mod.IndexAssembler(
+        mono_index.centroids,
+        cutoffs=mono_index.cutoffs,
+        weights=mono_index.weights,
+        nbits=mono_index.nbits,
+    )
+    for lo in range(0, len(doc_lens), 17):
+        hi = min(lo + 17, len(doc_lens))
+        asm.add_chunk(
+            codes[offsets[lo] : offsets[hi]],
+            packed[offsets[lo] : offsets[hi]],
+            doc_lens[lo:hi],
+        )
+    assert_indexes_identical(mono_index, asm.finish(), "IndexAssembler")
+
+
+def test_emit_v2_and_live_layouts(corpus, mono_index):
+    streamed = build_mod.build_index_streaming(
+        corpus,
+        centroids=mono_index.centroids,
+        codec=mono_index.codec,
+        chunk_docs=50,
+    )
+    with tempfile.TemporaryDirectory() as tmp:
+        p_v2 = os.path.join(tmp, "v2")
+        build_mod.emit(streamed, p_v2, layout="v2")
+        assert_indexes_identical(mono_index, indexer.load_index(p_v2), "v2")
+
+        p_live = os.path.join(tmp, "live")
+        build_mod.emit(streamed, p_live, layout="live")
+        r = retrieval.load(p_live)  # bare dir: sniffed from the manifest
+        assert r.backend_name == "live"
+        r.add_passages(corpus[:2])  # the mutation surface survived the emit
+        assert r.index.num_passages == mono_index.num_passages + 2
+
+
+def test_emit_sharded_layout_matches_shard_index(corpus, mono_index):
+    from repro.core import engine_sharded
+
+    streamed = build_mod.build_index_streaming(
+        corpus,
+        centroids=mono_index.centroids,
+        codec=mono_index.codec,
+    )
+    with tempfile.TemporaryDirectory() as tmp:
+        build_mod.emit(streamed, tmp, layout="sharded", n_shards=4)
+        loaded, meta, per = indexer.load_sharded(tmp)
+    direct, meta2, per2 = engine_sharded.shard_index(mono_index, 4)
+    assert per == per2 and meta == meta2
+    for k in direct:
+        np.testing.assert_array_equal(
+            np.asarray(loaded[k]), np.asarray(direct[k])
+        )
+
+
+def test_unknown_layout_and_missing_shards_raise(mono_index):
+    with pytest.raises(ValueError, match="unknown layout"):
+        build_mod.emit(mono_index, "/nonexistent", layout="parquet")
+    with pytest.raises(ValueError, match="n_shards"):
+        build_mod.emit(mono_index, "/nonexistent", layout="sharded")
+
+
+def test_retrieval_build_routes_through_streaming(corpus):
+    """The facade factory builds via repro.build (bounded memory) and the
+    result serves: recall floor + mutation surface on the live backend."""
+    r = retrieval.build(
+        corpus,
+        backend="live",
+        params=retrieval.SearchParams(
+            k=5, nprobe=8, t_cs=0.3, ndocs=128, candidate_cap=128
+        ),
+        index=dict(num_centroids=256, kmeans_iters=8, chunk_docs=37),
+    )
+    qs, gold = syn.queries_from_docs(corpus, 16)
+    res = r.search_batch(jnp.asarray(qs))
+    assert (np.asarray(res.pids[:, 0]) == gold).mean() >= 0.75

@@ -303,8 +303,10 @@ def test_live_sharded_backend_roundtrip(corpus):
         r2 = retrieval.load(tmp)
         assert r2.backend_name == "live-sharded" and r2.n_shards == 1
         # bare directory: sniffed from the manifest's sharding stamp
+        # (retriever.json is gone, so pass the ORIGINAL params — result
+        # identity is only defined under the same search configuration)
         os.unlink(os.path.join(tmp, "retriever.json"))
-        r3 = retrieval.load(tmp, params=retrieval.SearchParams(k=5))
+        r3 = retrieval.load(tmp, params=r.params)
         assert r3.backend_name == "live-sharded"
         np.testing.assert_array_equal(
             np.asarray(r3.search_batch(qs).pids), np.asarray(res.pids)

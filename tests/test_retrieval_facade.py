@@ -44,16 +44,20 @@ def test_unknown_backend_raises_with_choices():
 
 
 def test_build_from_corpus_embeddings():
+    # 16 queries / 4 Lloyd iterations: enough statistics that the recall
+    # floor tests clustering QUALITY, not which local optimum a particular
+    # PRNG stream lands on (2 iterations over 4 queries flipped with the
+    # kmeans key-split fix)
     docs, _ = syn.embedding_corpus(80, dim=16, seed=1)
     r = retrieval.build(
         docs,
         retrieval.RetrieverConfig(
             backend="plaid",
             params=PARAMS,
-            index=dict(num_centroids=32, kmeans_iters=2),
+            index=dict(num_centroids=64, kmeans_iters=4),
         ),
     )
-    qs, gold = syn.queries_from_docs(docs, 4)
+    qs, gold = syn.queries_from_docs(docs, 16)
     res = r.search_batch(jnp.asarray(qs))
     assert (np.asarray(res.pids[:, 0]) == gold).mean() >= 0.75
 
