@@ -1,12 +1,23 @@
-"""Batched-throughput benchmark: queries/sec vs batch size.
+"""Batched-throughput benchmark: queries/sec vs batch size, plus the
+serving tier under bursty open-loop load.
 
 The PLAID reproducibility study (MacAvaney & Macdonald, 2024) argues that
 throughput under multi-query load — not single-query latency — is where
-engine design dominates.  This benchmark sweeps the batch size and compares
+engine design dominates.  Part one sweeps the batch size and compares
 the batch-first stage pipeline (``core.pipeline.run_pipeline``) against the
 pre-refactor vmap-of-``_search`` oracle on the same index and queries, so
 the batching win (one C·Qᵀ matmul + one shared candidate gather per batch)
 is measured directly.
+
+Part two measures the *serving tier*: a deterministic bursty Poisson
+arrival process (open loop — arrivals don't wait for completions, the
+honest way to measure a queueing system) is replayed against two
+``BatchingServer`` configurations over the same engine: legacy fixed-batch
+padding (every dispatch runs at ``batch_size``) vs pow2 bucketed dispatch
+(a burst of 3 runs at B=4).  Reported per config: sustained q/s, p50/p99
+request latency, and the shed rate from the bounded admission queue.  At
+low offered load bucketing must win p99 outright — the lone arrival no
+longer pays the full-batch padded program.
 """
 from __future__ import annotations
 
@@ -15,6 +26,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import plaid
 
@@ -22,6 +34,129 @@ from benchmarks import common
 
 N_DOCS = 8000
 BATCH_SIZES = (1, 4, 16, 64)
+
+# ---- serving-tier load generation ----------------------------------------
+SERVE_ARRIVALS = 200
+SERVE_BURST = 4  # mean burst size (arrivals per burst)
+SERVE_BATCH = 16  # server batch_size cap
+SERVE_SEED = 7
+
+
+def bursty_arrivals(
+    n: int, rate_qps: float, burst: float, seed: int
+) -> np.ndarray:
+    """Deterministic bursty Poisson arrival times (seconds).
+
+    Bursts of ``1 + Poisson(burst - 1)`` back-to-back arrivals separated
+    by exponential gaps with mean ``E[burst]/rate_qps``, so the long-run
+    offered rate is ``rate_qps`` while short windows see ``burst``-deep
+    pileups — the coalescing opportunity bucketed dispatch exploits.
+    """
+    rng = np.random.default_rng(seed)
+    out: list[float] = []
+    t = 0.0
+    while len(out) < n:
+        t += rng.exponential(burst / rate_qps)
+        for _ in range(min(1 + rng.poisson(burst - 1), n - len(out))):
+            out.append(t)
+    return np.asarray(out)
+
+
+def _warm_buckets(engine, qs_pool, sizes, t_cs: float) -> None:
+    """Compile exactly the programs the server will dispatch: each batch
+    bucket with a per-lane traced t_cs vector."""
+    for n in sizes:
+        qs = jnp.asarray(
+            np.stack([qs_pool[i % len(qs_pool)] for i in range(n)])
+        )
+        ts = jnp.full((n,), t_cs, jnp.float32)
+        jax.block_until_ready(engine.search_batch(qs, t_cs=ts)[1])
+
+
+def _replay(server, qs_pool, arrivals) -> dict:
+    """Replay the arrival schedule open-loop against ``server``."""
+    from repro.serving import QueueFull
+
+    futs, shed = [], 0
+    t0 = time.perf_counter()
+    for i, at in enumerate(arrivals):
+        delay = at - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        try:
+            futs.append(
+                server.submit(np.asarray(qs_pool[i % len(qs_pool)]))
+            )
+        except QueueFull:
+            shed += 1
+    lats = np.asarray([f.get(timeout=600).latency_ms for f in futs])
+    wall = time.perf_counter() - t0
+    return dict(
+        completed=len(futs),
+        shed=shed,
+        wall_s=wall,
+        qps=len(futs) / wall,
+        p50_ms=float(np.percentile(lats, 50)) if len(lats) else 0.0,
+        p99_ms=float(np.percentile(lats, 99)) if len(lats) else 0.0,
+    )
+
+
+def _serve_load(emit, engine, qs_pool, *, dry: bool) -> None:
+    from repro.serving import BatchingServer
+    from repro.serving.buckets import bucket_ladder
+
+    batch = 8 if dry else SERVE_BATCH
+    n_arrivals = 24 if dry else SERVE_ARRIVALS
+    t_cs = engine.params.t_cs
+
+    # steady-state measurement: compile every dispatch shape up front
+    _warm_buckets(engine, qs_pool, bucket_ladder(batch), t_cs)
+
+    # offered load is calibrated to the warm single-query service time:
+    # ~30% of serial B=1 capacity = the "low load" regime where queues
+    # drain between bursts and fixed batching's padding tax (every
+    # dispatch runs the full-batch program) is pure p99 loss
+    q1 = jnp.asarray(qs_pool[:1])
+    t1 = jnp.full((1,), t_cs, jnp.float32)
+    jax.block_until_ready(engine.search_batch(q1, t_cs=t1)[1])
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(engine.search_batch(q1, t_cs=t1)[1])
+    lat1 = (time.perf_counter() - t0) / 3
+    rate = 0.3 / lat1
+
+    arrivals = bursty_arrivals(
+        n_arrivals, rate, SERVE_BURST, SERVE_SEED
+    )
+    for bucketed in (False, True):
+        srv = BatchingServer(
+            engine,
+            batch_size=batch,
+            max_wait_ms=2.0,
+            bucketed=bucketed,
+            max_pending=256,
+            cache_size=None,  # measure dispatch, not the result cache
+        )
+        try:
+            r = _replay(srv, qs_pool, arrivals)
+            st = srv.stats()
+        finally:
+            srv.shutdown()
+        total = r["completed"] + r["shed"]
+        emit(
+            "batched_throughput",
+            "serve_bucketed" if bucketed else "serve_fixed",
+            arrivals=total,
+            offered_qps=round(rate, 1),
+            burst=SERVE_BURST,
+            qps=round(r["qps"], 1),
+            p50_ms=round(r["p50_ms"], 2),
+            p99_ms=round(r["p99_ms"], 2),
+            shed_rate=round(r["shed"] / total, 3),
+            buckets=";".join(
+                f"{b}x{c}" for b, c in st.get("buckets", {}).items()
+            ),
+        )
 
 
 def _vmap_oracle(engine: plaid.PlaidEngine):
@@ -70,3 +205,5 @@ def run(emit, dry: bool = False):
             qps_vmap_oracle=round(qps_vmap, 1),
             speedup=round(qps_pipe / qps_vmap, 3),
         )
+
+    _serve_load(emit, engine, qs_all, dry=dry)

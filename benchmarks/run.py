@@ -21,7 +21,8 @@ BENCHES = [
     "fig6_ablation",
     "fig7_scaling",
     "fig8_parallel",
-    "batched_throughput",  # q/s vs batch size: pipeline vs vmap oracle
+    "batched_throughput",  # q/s vs batch size + bursty open-loop serving:
+    # fixed vs bucketed dispatch (q/s, p50/p99, shed rate)
     "roofline_report",  # HLO cost model of the batched pipeline
     "live_ingest",  # streaming ingest + latency vs delta count + compaction
     "sharded_live",  # latency vs shard-count x delta-segment-count sweep

@@ -206,7 +206,8 @@ def run_pipeline_impl(
     index: PlaidIndex,
     qs: jax.Array,  # (B, nq, dim)
     q_masks: jax.Array,  # (B, nq)
-    t_cs: jax.Array,  # TRACED scalar: changing it never recompiles
+    t_cs: jax.Array,  # TRACED: scalar or per-lane (B,) vector — changing
+    # values never recompiles (switching scalar<->vector is one retrace)
     *,
     params,  # plaid.SearchParams (static; t_cs field ignored)
     diag: bool = False,
@@ -248,7 +249,12 @@ def run_pipeline_impl(
     )  # (B, cap); tombstoned passages never reach stage 2
 
     # ---- Stage 2: pruned centroid interaction over the shared gather
-    keep = scoring.prune_mask(s_cq, t_cs)  # (B, K)
+    # t_cs may be a scalar (one threshold for the batch) or a per-lane (B,)
+    # vector (the serving tier's per-request latency/quality knob); either
+    # way it is traced, so value changes reuse the compiled program.
+    t_arr = jnp.asarray(t_cs)
+    t_bcast = t_arr if t_arr.ndim == 0 else t_arr[:, None]  # vs (B, K) max
+    keep = scoring.prune_mask(s_cq, t_bcast)  # (B, K)
     codes_blk, tok_valid = gather_candidate_tokens_shared(index, candidates)
     approx2 = interaction(s_cq, codes_blk, q_masks, keep)  # (B, cap)
     approx2 = jnp.where(candidates >= 0, approx2, NEG)
@@ -329,6 +335,8 @@ def run_pipeline(
     ``plaid.SearchParams`` (static: one compile per distinct cap/impl
     combination); its ``t_cs`` field is normalized out of the cache key —
     only the traced ``t_cs`` argument matters, so threshold sweeps are free.
+    ``t_cs`` may be a scalar or a per-lane ``(B,)`` vector (per-request
+    thresholds in one coalesced serving batch).
     ``alive`` is an optional traced (num_passages,) tombstone mask (see
     ``run_pipeline_impl``); updating tombstones never recompiles.
     """

@@ -24,10 +24,12 @@ from repro.exec.live import LiveExecutor, mesh_for_shards
 from repro.exec.segments import (
     SegmentBucket,
     bucket_for,
+    ceil_pow2,
     make_stacked_search,
     pack_alive,
     pack_offsets,
     pack_segments,
+    pow2_bucket,
 )
 from repro.exec.sharded import make_sharded_search
 
@@ -37,6 +39,8 @@ __all__ = [
     "mesh_for_shards",
     "SegmentBucket",
     "bucket_for",
+    "ceil_pow2",
+    "pow2_bucket",
     "make_stacked_search",
     "pack_alive",
     "pack_offsets",

@@ -47,6 +47,23 @@ def ceil_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
+def pow2_bucket(n: int, *, lo: int = 1, hi: int | None = None) -> int:
+    """The pow2 padding discipline as one reusable rule: the smallest
+    power-of-two >= ``n``, clamped to ``[lo, hi]``.
+
+    This is the shape-bucketing trick every padded axis in the repo uses —
+    segment counts and array caps here, and the *query-batch* axis in the
+    serving tier (``repro.serving.buckets``): occupancy anywhere inside a
+    bucket reuses that bucket's one compiled program, and a non-pow2 ``hi``
+    (e.g. a server's max batch size) is itself a terminal bucket so the cap
+    never inflates past what the operator configured.
+    """
+    b = max(ceil_pow2(n), ceil_pow2(lo))
+    if hi is not None:
+        b = min(b, int(hi))
+    return b
+
+
 @dataclasses.dataclass(frozen=True)
 class SegmentBucket:
     """Static shape signature of one stacked-segment program.
@@ -90,7 +107,7 @@ def bucket_for(segments, *, min_segments: int = 1) -> SegmentBucket:
         )
         assert (s.dim, s.nbits) == (first.dim, first.nbits)
     return SegmentBucket(
-        n_segments=ceil_pow2(max(len(segments), min_segments)),
+        n_segments=pow2_bucket(len(segments), lo=min_segments),
         nd_cap=ceil_pow2(max(s.num_passages for s in segments)),
         nd_clamp=max(s.num_passages for s in segments),
         nt_cap=ceil_pow2(max(s.num_tokens for s in segments)),

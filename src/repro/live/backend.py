@@ -86,6 +86,20 @@ class LiveRetriever:
         self.index.save(path)
         registry.write_meta(path, self)
 
+    # ---- generation ------------------------------------------------------
+    @property
+    def generation(self) -> int:
+        """The LiveIndex's monotonic mutation counter.
+
+        Bumped atomically (under the index lock) by every ``add_passages``
+        / ``delete_passages`` / compaction swap — the serving tier's result
+        cache (``repro.serving.cache``) keys entries on it, so one integer
+        compare invalidates *all* stale entries without a scan.  Static
+        backends have no ``generation`` attribute; consumers treat them as
+        a constant generation 0.
+        """
+        return self.index.generation
+
     # ---- mutation --------------------------------------------------------
     def add_passages(self, doc_embeddings, doc_lens=None):
         """Ingest passages as one delta segment -> global pids."""

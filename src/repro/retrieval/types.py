@@ -106,13 +106,29 @@ class RetrieverConfig:
 
 @dataclasses.dataclass
 class SearchRequest:
-    """One search call: a query (or batch) plus per-request dynamic knobs."""
+    """One search call: a query (or batch) plus per-request dynamic knobs.
+
+    ``t_cs`` and ``k`` are the per-request latency/quality SLO knobs the
+    serving tier (``repro.serving``) exposes: ``t_cs`` rides through the
+    coalesced batch as a traced per-lane scalar (never recompiles) and
+    ``k`` is served by max-``k`` dispatch + per-request truncation (the
+    batch runs at the retriever's compiled ``params.k``; a request's
+    ``k`` must not exceed it).  ``priority`` / ``deadline_ms`` feed the
+    serving tier's admission control: two-level priority queues
+    ("interactive" ahead of "batch") and expiry-before-dispatch.  Direct
+    ``Retriever.search*`` calls ignore the serving-only fields.
+    """
 
     q: Any  # (nq, dim) single query matrix, or (B, nq, dim) batch
     q_mask: Any | None = None  # (nq,) / (B, nq); None = all tokens valid
     t_cs: float | None = None  # dynamic override — never recompiles
     with_diagnostics: bool = False  # per-stage survivor counts (one extra
     # compile the first time it is flipped; static flag)
+    # --- serving-tier per-request knobs (repro.serving) -----------------
+    k: int | None = None  # truncate the result to k <= retriever params.k
+    priority: str = "interactive"  # admission class: "interactive" | "batch"
+    deadline_ms: float | None = None  # relative deadline; expired requests
+    # are failed with DeadlineExceeded instead of dispatched
 
     @property
     def batched(self) -> bool:
@@ -196,6 +212,11 @@ class MutableRetriever(Retriever, Protocol):
     are snapshot-consistent with in-flight searches and never require an
     index rebuild.  ``BatchingServer`` forwards its ``add_passages`` /
     ``delete_passages`` to this surface.
+
+    Mutable backends additionally expose a monotonic ``generation``
+    property (the LiveIndex mutation counter): the serving tier's result
+    cache stamps entries with it, so ingest/delete/compaction invalidate
+    cached results atomically (one integer compare, no scan).
     """
 
     def add_passages(self, doc_embeddings, doc_lens=None):

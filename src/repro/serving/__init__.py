@@ -1,0 +1,49 @@
+"""``repro.serving`` — the continuous-batching serving tier.
+
+The robustness/perf front door for every retrieval backend:
+
+* :mod:`repro.serving.server`    — :class:`BatchingServer`: bucketed
+  coalescing dispatch, per-request ``t_cs``/``k`` knobs, cache-fronted
+  submit, graceful drain
+* :mod:`repro.serving.buckets`   — pow2 batch-shape buckets on the query
+  axis (the ``repro.exec.segments`` padding discipline)
+* :mod:`repro.serving.admission` — typed errors, bounded two-level
+  priority queue, load shedding, deadlines
+* :mod:`repro.serving.cache`     — exact-match result cache with
+  LiveIndex-generation invalidation
+* :mod:`repro.serving.replicas`  — :class:`ReplicaPool`:
+  least-outstanding-work routing over N retrievers
+* :mod:`repro.serving.stats`     — bounded latency window + counters
+
+See README "Serving tier".
+"""
+from repro.serving.admission import (
+    AdmissionError,
+    AdmissionQueue,
+    DeadlineExceeded,
+    QueueFull,
+    ServerClosed,
+    ServingError,
+)
+from repro.serving.buckets import bucket_batch_size, bucket_ladder
+from repro.serving.cache import ResultCache
+from repro.serving.replicas import ReplicaPool
+from repro.serving.server import BatchingServer, RetrievalResult, ResultFuture
+from repro.serving.stats import LatencyWindow
+
+__all__ = [
+    "BatchingServer",
+    "RetrievalResult",
+    "ResultFuture",
+    "ReplicaPool",
+    "ResultCache",
+    "LatencyWindow",
+    "AdmissionQueue",
+    "ServingError",
+    "AdmissionError",
+    "QueueFull",
+    "DeadlineExceeded",
+    "ServerClosed",
+    "bucket_batch_size",
+    "bucket_ladder",
+]

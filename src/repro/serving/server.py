@@ -1,32 +1,49 @@
-"""Micro-batching retrieval front-end.
+"""Continuous-batching retrieval front-end.
 
-Production serving shape: requests arrive one at a time; the server coalesces
-them into fixed-size batches (padding the tail) so the jitted search runs at
-its compiled batch size, and tracks per-request latency percentiles.  A
-thread-safe queue + single dispatcher thread — the JAX compute itself is
-single-stream per device, which is exactly what a TPU serving binary does.
+The serving tier's entry point: requests arrive one at a time and the
+server coalesces them into *bucketed* batches.  Where the original
+micro-batcher padded every tail to one fixed compiled batch size (a lone
+arrival at B=16 paid 16 lanes of compute for one answer), dispatch now
+rounds the coalesced count up to the smallest pow2 bucket
+(``repro.serving.buckets``, the ``repro.exec.segments`` padding discipline
+applied to the query axis): a burst of 3 runs at B=4, and a server capped
+at ``batch_size=16`` holds at most 5 compiled programs, warm after one
+pass over the bucket ladder.
 
-Each dispatched batch runs the batch-first stage pipeline
-(``repro.core.pipeline.run_pipeline`` via the retriever's ``search_batch``):
-one stage-1 ``C·Qᵀ`` matmul and one shared candidate-token gather for the
-whole coalesced batch, rather than a per-lane vmap of the single-query
-program — the engine-side half of the micro-batching bargain.
+Per-request knobs (the PLAID latency/quality operating point is a
+per-deployment — here per-*request* — tunable):
 
-The server takes any ``repro.retrieval.Retriever`` (facade backends return
-``SearchResult``) and also accepts the raw core engines (plain
-``(scores, pids)`` tuples).
+* ``t_cs`` rides through the batch as a traced per-lane vector, so one
+  coalesced batch serves requests at different pruning aggressiveness
+  with zero recompiles;
+* ``k`` is served by max-``k`` dispatch: the batch runs at the
+  retriever's compiled ``params.k`` and each result is truncated to the
+  request's ``k`` (<= ``params.k``) on completion;
+* ``priority`` and ``timeout_ms`` feed admission control
+  (``repro.serving.admission``): a bounded queue with load shedding,
+  interactive-over-batch dispatch order, and expiry-before-dispatch.
 
-With a mutable backend (``"live"``), ``add_passages`` / ``delete_passages``
-update the corpus while queries are in flight: LiveIndex mutations swap
-immutable references under a lock and searches run on snapshots, so the
-dispatcher thread needs no coordination — a batch dispatched before an
-ingest completes against the old snapshot, the next batch sees the new
-segment.
+An exact-match result cache (``repro.serving.cache``) fronts the queue,
+invalidated atomically by the mutable backends' ``generation`` counter —
+ingest/delete/compaction through this server (or directly on the index)
+make every stale entry unreachable with one integer bump.
+
+The server takes any ``repro.retrieval.Retriever`` (facade backends
+return ``SearchResult``) and also accepts the raw core engines (plain
+``(scores, pids)`` tuples).  Each dispatched batch runs the batch-first
+stage pipeline — one stage-1 ``C·Qᵀ`` matmul and one shared
+candidate-token gather for the whole coalesced batch.  With a mutable
+backend, ``add_passages`` / ``delete_passages`` / ``compact`` update the
+corpus while queries are in flight: LiveIndex mutations swap immutable
+references under a lock and searches run on snapshots, so a batch
+dispatched before an ingest completes against the old snapshot and the
+next batch sees the new segment.
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
+import inspect
+import queue as queue_mod
 import threading
 import time
 
@@ -34,30 +51,127 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving import buckets as buckets_mod
+from repro.serving.admission import (
+    AdmissionQueue,
+    DeadlineExceeded,
+    ServerClosed,
+)
+from repro.serving.cache import ResultCache, query_key
+from repro.serving.stats import Counters, LatencyWindow
+
 
 @dataclasses.dataclass
 class RetrievalResult:
     pids: np.ndarray  # (k,)
     scores: np.ndarray  # (k,)
     latency_ms: float
+    t_cs: float | None = None  # the effective threshold this lane ran with
+    k: int | None = None  # the per-request k the result was truncated to
+    cached: bool = False  # served from the generation-stamped result cache
+
+
+class ResultFuture:
+    """Single-result handle: ``get(timeout)`` returns the
+    :class:`RetrievalResult` or raises the request's typed error.
+
+    Drop-in for the single-slot ``queue.Queue`` the server used to return
+    (same ``get`` signature; ``queue.Empty`` on timeout).
+    """
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._result = None
+        self._exc: BaseException | None = None
+
+    # ---- producer side (server internals) --------------------------------
+    def set(self, result) -> None:
+        self._result = result
+        self._done.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._done.set()
+
+    # ---- consumer side ----------------------------------------------------
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def get(self, timeout: float | None = None):
+        if not self._done.wait(timeout):
+            raise queue_mod.Empty(
+                f"no result within {timeout}s (request still queued or "
+                "in flight)"
+            )
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One admitted request, queued for dispatch."""
+
+    q: np.ndarray
+    t_cs: float  # effective (default-resolved) threshold
+    k: int  # effective (default-resolved) result size
+    t0: float  # submit time (perf_counter)
+    deadline: float | None  # absolute perf_counter expiry, or None
+    future: ResultFuture
+    cache_key: tuple | None  # None = don't cache this request
+
+    def fail(self, exc: BaseException) -> None:
+        self.future.set_exception(exc)
 
 
 class BatchingServer:
-    """Coalesces single-query requests into fixed-size search batches."""
+    """Coalesces single-query requests into bucketed search batches."""
 
     def __init__(
         self,
         retriever,  # repro.retrieval.Retriever (or a raw core engine)
         batch_size: int = 16,
         max_wait_ms: float = 2.0,
+        *,
+        bucketed: bool = True,  # False = legacy fixed-batch padding
+        max_pending: int = 1024,
+        cache_size: int | None = 1024,  # None/0 disables the result cache
+        latency_window: int = 2048,
     ):
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         self.retriever = retriever
         self.batch_size = batch_size
         self.max_wait = max_wait_ms / 1e3
-        self._q: queue.Queue = queue.Queue()
+        self.bucketed = bucketed
+        self._q = AdmissionQueue(max_pending)
         self._stop = threading.Event()
-        self._lock = threading.Lock()  # guards _latencies and _expected_shape
-        self._latencies: list[float] = []
+        self._drain = True
+        self._closed = False
+        self._lock = threading.Lock()  # guards _expected_shape + warm sets
+        self._latencies = LatencyWindow(latency_window)
+        self._counters = Counters(
+            "submitted", "completed", "cache_hits", "expired", "errors",
+            "dispatches", "retraces",
+        )
+        self._bucket_dispatches: dict[int, int] = {}
+        self._warm: set = set()  # (bucket, generation) pairs already traced
+        self._inflight = 0
+        self.cache = (
+            ResultCache(cache_size) if cache_size else None
+        )
+
+        # per-request knob support is sniffed once: raw core engines differ
+        # (PlaidEngine takes t_cs, VanillaEngine does not)
+        params = getattr(retriever, "params", None)
+        self._default_t_cs = float(getattr(params, "t_cs", 0.0) or 0.0)
+        self._k_serve = getattr(params, "k", None)
+        try:
+            sig = inspect.signature(retriever.search_batch)
+            self._accepts_t_cs = "t_cs" in sig.parameters
+        except (TypeError, ValueError):  # builtins / C callables
+            self._accepts_t_cs = False
+
         # query contract: (nq, dim) float.  dim comes from the retriever's
         # describe() when available; nq is fixed by the first request (the
         # compiled batch stacks queries, so every request must match).
@@ -73,6 +187,10 @@ class BatchingServer:
         self._thread.start()
 
     # ---- client API ------------------------------------------------------
+    def _generation(self) -> int:
+        """The retriever's corpus generation; 0 for immutable backends."""
+        return int(getattr(self.retriever, "generation", 0))
+
     def _validate(self, q_emb: np.ndarray) -> np.ndarray:
         q = np.asarray(q_emb)
         if q.ndim != 2:
@@ -96,18 +214,101 @@ class BatchingServer:
                 )
         return q
 
-    def submit(self, q_emb: np.ndarray) -> "queue.Queue[RetrievalResult]":
-        """Non-blocking: returns a single-slot queue with the result.
+    def _resolve_knobs(self, t_cs, k) -> tuple[float, int]:
+        if t_cs is None:
+            t = self._default_t_cs
+        else:
+            if not self._accepts_t_cs:
+                raise ValueError(
+                    "per-request t_cs is not supported by this retriever "
+                    "(its search_batch has no t_cs parameter)"
+                )
+            t = float(t_cs)
+        if k is None:
+            kk = self._k_serve
+            if kk is None:
+                raise ValueError(
+                    "retriever exposes no params.k; pass k= explicitly"
+                )
+        else:
+            kk = int(k)
+            if kk < 1:
+                raise ValueError(f"k must be >= 1, got {kk}")
+            if self._k_serve is not None and kk > self._k_serve:
+                raise ValueError(
+                    f"per-request k={kk} exceeds the compiled serving "
+                    f"k={self._k_serve} (max-k dispatch truncates, it "
+                    "cannot extend; raise SearchParams.k)"
+                )
+        return t, int(kk)
 
-        Raises ``ValueError`` immediately on malformed queries instead of
-        poisoning the dispatcher's batch."""
+    def submit(
+        self,
+        q_emb,
+        *,
+        t_cs: float | None = None,
+        k: int | None = None,
+        priority: str = "interactive",
+        timeout_ms: float | None = None,
+    ) -> ResultFuture:
+        """Non-blocking admit: returns a :class:`ResultFuture`.
+
+        Raises ``ValueError`` immediately on malformed queries/knobs,
+        ``QueueFull`` when the bounded queue sheds the request, and
+        ``ServerClosed`` after shutdown.  Also accepts a
+        ``retrieval.SearchRequest`` carrying the same per-request knobs.
+        """
+        req = q_emb
+        if hasattr(req, "q") and hasattr(req, "t_cs"):  # SearchRequest
+            q_emb = req.q
+            t_cs = req.t_cs if t_cs is None else t_cs
+            k = getattr(req, "k", None) if k is None else k
+            priority = getattr(req, "priority", priority)
+            if timeout_ms is None:
+                timeout_ms = getattr(req, "deadline_ms", None)
+        if self._closed:  # checked before the cache: a closed server
+            # serves nothing, not even hits
+            raise ServerClosed("server is shut down; submit refused")
         q = self._validate(q_emb)
-        out: queue.Queue = queue.Queue(maxsize=1)
-        self._q.put((q, time.perf_counter(), out))
-        return out
+        t, kk = self._resolve_knobs(t_cs, k)
+        self._counters.inc("submitted")
+        t0 = time.perf_counter()
 
-    def search(self, q_emb: np.ndarray, timeout: float = 30.0) -> RetrievalResult:
-        return self.submit(q_emb).get(timeout=timeout)
+        key = None
+        if self.cache is not None:
+            key = query_key(q, t)
+            hit = self.cache.get(key, self._generation())
+            if hit is not None:
+                scores, pids = hit
+                fut = ResultFuture()
+                lat = time.perf_counter() - t0
+                fut.set(
+                    RetrievalResult(
+                        pids=pids[:kk],
+                        scores=scores[:kk],
+                        latency_ms=lat * 1e3,
+                        t_cs=t,
+                        k=kk,
+                        cached=True,
+                    )
+                )
+                self._counters.inc("cache_hits")
+                self._counters.inc("completed")
+                self._latencies.add(lat)
+                return fut
+
+        deadline = (
+            None if timeout_ms is None else t0 + float(timeout_ms) / 1e3
+        )
+        pending = _Pending(
+            q=q, t_cs=t, k=kk, t0=t0, deadline=deadline,
+            future=ResultFuture(), cache_key=key,
+        )
+        self._q.put(pending, priority)  # QueueFull / ServerClosed
+        return pending.future
+
+    def search(self, q_emb, timeout: float = 30.0, **kw) -> RetrievalResult:
+        return self.submit(q_emb, **kw).get(timeout=timeout)
 
     # ---- corpus mutation (live backends) ---------------------------------
     def _mutable(self, op: str):
@@ -125,67 +326,193 @@ class BatchingServer:
         """Ingest passages into a live backend while serving; returns the
         new global pids.  Safe to call concurrently with ``submit``: the
         underlying LiveIndex swaps snapshots, so in-flight batches finish
-        against the old corpus and later batches see the new passages."""
+        against the old corpus and later batches see the new passages.
+        The generation bump atomically invalidates the result cache."""
         return self._mutable("add_passages")(doc_embeddings, doc_lens=doc_lens)
 
     def delete_passages(self, pids) -> int:
         """Tombstone passages in a live backend while serving; returns the
         number newly deleted.  Batches dispatched after this call no longer
-        return the deleted pids."""
+        return the deleted pids, and cached results from earlier
+        generations become unreachable."""
         return self._mutable("delete_passages")(pids)
 
-    def stats(self) -> dict:
-        with self._lock:
-            lat = np.asarray(self._latencies) * 1e3
-        if not len(lat):
-            return {}
-        return {
-            "n": len(lat),
-            "mean_ms": float(lat.mean()),
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p99_ms": float(np.percentile(lat, 99)),
-        }
+    def compact(self):
+        """Run a live backend's compaction now; returns the old->new pid
+        map.  The compaction swap bumps the generation, invalidating the
+        result cache atomically."""
+        return self._mutable("compact")()
 
-    def shutdown(self):
+    # ---- introspection ---------------------------------------------------
+    @property
+    def outstanding(self) -> int:
+        """Backlog + in-flight: the load metric ReplicaPool routes on."""
+        return len(self._q) + self._inflight
+
+    def stats(self) -> dict:
+        """Latency percentiles over the bounded window plus serving
+        counters.  ``{}`` until the first request completes (legacy
+        contract)."""
+        base = self._latencies.summary()
+        if not base:
+            return {}
+        base.update(self._counters.snapshot())
+        base["shed"] = self._q.shed
+        base["rejected"] = self._q.rejected
+        base["pending"] = len(self._q)
+        with self._lock:
+            base["buckets"] = dict(sorted(self._bucket_dispatches.items()))
+        if self.cache is not None:
+            base["cache"] = self.cache.stats()
+        return base
+
+    def assert_zero_retrace(self) -> None:
+        """Raise if any warmed (bucket, generation) pair retraced the
+        pipeline — the serving-tier compile-discipline guard: bucket
+        reuse and per-request ``t_cs``/``k`` variation must hit the
+        compiled programs."""
+        n = self._counters["retraces"]
+        if n:
+            raise RuntimeError(
+                f"{n} dispatch(es) retraced an already-warm batch bucket; "
+                "per-request knobs or bucket reuse recompiled (see "
+                "stats()['buckets'])"
+            )
+
+    # ---- shutdown --------------------------------------------------------
+    def shutdown(self, drain: bool = True, timeout: float = 30.0) -> None:
+        """Stop serving.  ``drain=True`` (default) dispatches every queued
+        request before the dispatcher exits; ``drain=False`` fails queued
+        waiters with ``ServerClosed``.  Either way, subsequent submits
+        raise ``ServerClosed`` and the dispatcher thread is joined."""
+        self._drain = drain
+        self._closed = True
+        self._q.close()  # future puts raise ServerClosed
         self._stop.set()
-        self._thread.join(timeout=5)
+        self._thread.join(timeout=timeout)
 
     # ---- dispatcher ------------------------------------------------------
+    def _expire(self, batch: list) -> list:
+        """Fail already-expired requests; return the live remainder."""
+        now = time.perf_counter()
+        live = []
+        for p in batch:
+            if p.deadline is not None and now > p.deadline:
+                p.fail(
+                    DeadlineExceeded(
+                        f"deadline expired {1e3 * (now - p.deadline):.1f}ms "
+                        "before dispatch"
+                    )
+                )
+                self._counters.inc("expired")
+            else:
+                live.append(p)
+        return live
+
     def _loop(self):
         while not self._stop.is_set():
-            batch = []
-            try:
-                batch.append(self._q.get(timeout=0.05))
-            except queue.Empty:
+            first = self._q.get(timeout=0.05)
+            if first is None:
                 continue
+            batch = [first]
             deadline = time.perf_counter() + self.max_wait
             while len(batch) < self.batch_size:
-                remaining = deadline - time.perf_counter()
-                if remaining <= 0:
+                remaining = (
+                    0.0
+                    if self._stop.is_set()
+                    else deadline - time.perf_counter()
+                )
+                nxt = self._q.get(timeout=max(remaining, 0.0))
+                if nxt is None:
                     break
+                batch.append(nxt)
+            batch = self._expire(batch)
+            if not batch:
+                continue
+            self._inflight = len(batch)
+            try:
+                self._dispatch(batch)
+            except Exception as exc:
+                # propagate into every waiter instead of hanging them, and
+                # keep the dispatcher alive for subsequent batches
+                self._counters.inc("errors")
+                for p in batch:
+                    p.fail(exc)
+            finally:
+                self._inflight = 0
+        # stopped: drain or fail whatever is still queued
+        leftovers = self._q.drain()
+        if self._drain:
+            while leftovers:
+                chunk = self._expire(leftovers[: self.batch_size])
+                leftovers = leftovers[self.batch_size:]
+                if not chunk:
+                    continue
                 try:
-                    batch.append(self._q.get(timeout=remaining))
-                except queue.Empty:
-                    break
-            self._dispatch(batch)
+                    self._dispatch(chunk)
+                except Exception as exc:
+                    self._counters.inc("errors")
+                    for p in chunk:
+                        p.fail(exc)
+        else:
+            for p in leftovers:
+                p.fail(ServerClosed("server shut down without drain"))
 
-    def _dispatch(self, batch):
+    def _dispatch(self, batch: list) -> None:
+        from repro.core import pipeline as pipeline_mod
+
         n = len(batch)
-        qs = np.stack([b[0] for b in batch])
-        if n < self.batch_size:  # pad the tail to the compiled batch size
-            pad = np.repeat(qs[-1:], self.batch_size - n, axis=0)
-            qs = np.concatenate([qs, pad])
-        out = self.retriever.search_batch(jnp.asarray(qs))
+        bucket = (
+            buckets_mod.bucket_batch_size(n, self.batch_size)
+            if self.bucketed
+            else self.batch_size
+        )
+        qs, ts = buckets_mod.pad_batch(
+            [p.q for p in batch], [p.t_cs for p in batch], bucket
+        )
+        gen0 = self._generation()
+        warm_key = (bucket, gen0)
+        traces_before = pipeline_mod.trace_count()
+
+        kwargs = {}
+        if self._accepts_t_cs:
+            # per-lane traced thresholds: one compiled program per bucket
+            # serves every per-request t_cs combination
+            kwargs["t_cs"] = jnp.asarray(ts)
+        out = self.retriever.search_batch(jnp.asarray(qs), **kwargs)
         scores, pids = out  # SearchResult iterates as (scores, pids)
         jax.block_until_ready(pids)
+
+        with self._lock:
+            if warm_key in self._warm:
+                if pipeline_mod.trace_count() != traces_before:
+                    self._counters.inc("retraces")
+            else:
+                self._warm.add(warm_key)
+            self._bucket_dispatches[bucket] = (
+                self._bucket_dispatches.get(bucket, 0) + 1
+            )
+        self._counters.inc("dispatches")
+
         now = time.perf_counter()
         scores = np.asarray(scores)
         pids = np.asarray(pids)
-        results = []
-        for i, (_, t0, out_q) in enumerate(batch):
-            lat = now - t0
-            results.append((lat, out_q, RetrievalResult(pids[i], scores[i], lat * 1e3)))
-        with self._lock:
-            self._latencies.extend(lat for lat, _, _ in results)
-        for _, out_q, res in results:
-            out_q.put(res)
+        # cache only if no mutation raced the batch: the snapshot the
+        # search actually ran against is then unambiguously gen0
+        gen_ok = self.cache is not None and self._generation() == gen0
+        for i, p in enumerate(batch):
+            if gen_ok and p.cache_key is not None:
+                self.cache.put(p.cache_key, gen0, scores[i], pids[i])
+            lat = now - p.t0
+            self._latencies.add(lat)
+            self._counters.inc("completed")
+            p.future.set(
+                RetrievalResult(
+                    pids=pids[i][: p.k],
+                    scores=scores[i][: p.k],
+                    latency_ms=lat * 1e3,
+                    t_cs=p.t_cs,
+                    k=p.k,
+                    cached=False,
+                )
+            )
