@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast test-multidevice smoke bench-dry ci
+.PHONY: test test-fast test-multidevice smoke bench-dry bench-diff ci
 
 test:  ## tier-1: the full test suite
 	$(PY) -m pytest -x -q
@@ -22,6 +22,11 @@ bench-dry:  ## EVERY registered benchmark at dry scale (incl. live_ingest):
 	## catches benchmark registration breakage before merge.  CI passes
 	## BENCH_FLAGS="--json BENCH_dry.json" to upload results as an artifact.
 	$(PY) -m benchmarks.run --dry $(BENCH_FLAGS)
+
+bench-diff:  ## gate per-kernel hbm_bytes against the committed baseline
+	## (>15% growth, vanished kernels, or fused >= unfused all fail);
+	## CURRENT defaults to the bench-dry artifact.
+	$(PY) -m benchmarks.bench_diff BENCH_seed.json $(or $(CURRENT),BENCH_dry.json)
 
 # The GitHub workflow runs these three targets as PARALLEL jobs (tests /
 # multidevice / bench-dry); `make ci` remains the serial local equivalent.

@@ -1,0 +1,133 @@
+"""Gate per-kernel HBM-bytes regressions against a committed baseline.
+
+  PYTHONPATH=src python -m benchmarks.bench_diff BENCH_seed.json BENCH_dry.json
+
+Compares two ``benchmarks.run --json`` payloads and FAILS (exit 1) when:
+
+* any record carrying ``hbm_bytes`` regressed by more than the threshold
+  (default 15%) against the baseline record with the same (bench, case);
+* a baseline ``hbm_bytes`` record disappeared from the current run (a
+  silently-dropped kernel is a regression, not an improvement);
+* a ``fused_vs_unfused_*`` record stops showing fused strictly below
+  unfused (the megakernel's reason to exist);
+* the payloads' ``schema_version`` differ.
+
+Only ``hbm_bytes`` records are gated: they are analytic shape arithmetic
+(``repro.kernels.costs``), deterministic across machines and jax versions.
+The HLO-derived ``roofline_pipeline`` records (``hbm_mb``) are reported as
+informational drift but never fail the build — they move with XLA versions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_THRESHOLD = 0.15
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _keyed(payload: dict, field: str) -> dict:
+    out = {}
+    for r in payload.get("results", []):
+        if field in r:
+            out[(r["bench"], r["case"])] = r
+    return out
+
+
+def diff(baseline: dict, current: dict, threshold: float = DEFAULT_THRESHOLD):
+    """Returns (failures, infos) lists of message strings."""
+    failures: list[str] = []
+    infos: list[str] = []
+
+    bv = baseline.get("schema_version", 0)
+    cv = current.get("schema_version", 0)
+    if bv != cv:
+        failures.append(
+            f"schema_version mismatch: baseline={bv} current={cv}"
+        )
+        return failures, infos
+
+    base = _keyed(baseline, "hbm_bytes")
+    cur = _keyed(current, "hbm_bytes")
+    for key, b in sorted(base.items()):
+        c = cur.get(key)
+        name = "/".join(key)
+        if c is None:
+            failures.append(f"{name}: hbm_bytes record disappeared")
+            continue
+        b_bytes, c_bytes = float(b["hbm_bytes"]), float(c["hbm_bytes"])
+        if b_bytes > 0 and c_bytes > b_bytes * (1.0 + threshold):
+            failures.append(
+                f"{name}: hbm_bytes {b_bytes:.0f} -> {c_bytes:.0f} "
+                f"(+{(c_bytes / b_bytes - 1) * 100:.1f}% > "
+                f"{threshold * 100:.0f}% threshold)"
+            )
+        elif c_bytes != b_bytes:
+            infos.append(
+                f"{name}: hbm_bytes {b_bytes:.0f} -> {c_bytes:.0f} "
+                f"({(c_bytes / b_bytes - 1) * 100:+.1f}%)"
+            )
+    for key in sorted(set(cur) - set(base)):
+        infos.append(f"{'/'.join(key)}: new hbm_bytes record (not gated)")
+
+    # the fused megakernel must keep beating the materialized path
+    for r in current.get("results", []):
+        if "fused_hbm_bytes" in r and "unfused_hbm_bytes" in r:
+            f_b = float(r["fused_hbm_bytes"])
+            u_b = float(r["unfused_hbm_bytes"])
+            name = f"{r['bench']}/{r['case']}"
+            if not f_b < u_b:
+                failures.append(
+                    f"{name}: fused hbm_bytes {f_b:.0f} is not strictly "
+                    f"below unfused {u_b:.0f}"
+                )
+            else:
+                infos.append(
+                    f"{name}: fused saves "
+                    f"{(1 - f_b / u_b) * 100:.1f}% of unfused bytes"
+                )
+
+    # informational: HLO-derived pipeline traffic drift (never fails)
+    b_pipe = _keyed(baseline, "hbm_mb")
+    c_pipe = _keyed(current, "hbm_mb")
+    for key in sorted(set(b_pipe) & set(c_pipe)):
+        b_mb = float(b_pipe[key]["hbm_mb"])
+        c_mb = float(c_pipe[key]["hbm_mb"])
+        if b_mb and c_mb != b_mb:
+            infos.append(
+                f"{'/'.join(key)}: hbm_mb {b_mb} -> {c_mb} "
+                f"({(c_mb / b_mb - 1) * 100:+.1f}%, informational)"
+            )
+    return failures, infos
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed baseline JSON (BENCH_seed.json)")
+    ap.add_argument("current", help="this run's JSON artifact")
+    ap.add_argument(
+        "--threshold", type=float, default=DEFAULT_THRESHOLD,
+        help="max allowed fractional hbm_bytes growth (default 0.15)",
+    )
+    args = ap.parse_args()
+    failures, infos = diff(
+        _load(args.baseline), _load(args.current), args.threshold
+    )
+    for msg in infos:
+        print(f"INFO  {msg}")
+    for msg in failures:
+        print(f"FAIL  {msg}")
+    if failures:
+        print(f"# bench_diff: {len(failures)} regression(s)")
+        return 1
+    print("# bench_diff: no kernel bytes regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -105,3 +105,43 @@ def run(emit, dry: bool = False):
     tv = _timeit(jax.jit(vanilla_lookup_decompress), q)
     emit("fig2", "vanilla_lookup_decompress", ms=round(tv, 3),
          note="the paper's Fig2a bottleneck PLAID removes")
+
+    # ---- fused vs unfused stage-3-5 tail: the per-stage layout above no
+    # longer describes the fused pipeline (one megakernel replaces gather +
+    # decompress + maxsim), so the comparison is end-to-end batched
+    # run_pipeline timings plus the analytic bytes the fusion removes.
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core import pipeline
+    from repro.kernels import costs
+    from repro.retrieval import backends
+
+    B = 4
+    qs_b = qs[:B] if qs.shape[0] >= B else jnp.tile(qs, (B, 1, 1))[:B]
+    masks_b = jnp.ones(qs_b.shape[:2], jnp.float32)
+    core_p = plaid.clamp_params(
+        backends.to_engine_params(p, impl="pallas"), index.num_passages
+    )
+    for fused in (False, True):
+        pp = dataclasses.replace(core_p, fused=fused)
+        t = _timeit(
+            lambda qs_, m: pipeline.run_pipeline(index, qs_, m, p.t_cs, pp),
+            qs_b, masks_b, reps=5 if dry else 20,
+        )
+        emit("fig2", f"pipeline_B{B}_{'fused' if fused else 'unfused'}",
+             ms=round(t, 3))
+    n2 = min(core_p.ndocs, core_p.candidate_cap)
+    n3 = min(max(core_p.ndocs // 4, core_p.k), n2)
+    geom = dict(
+        B=B, n3=n3, L=index.doc_maxlen,
+        pd=int(np.asarray(index.residuals).shape[1]),
+        K=index.num_centroids, d=index.dim, nq=int(qs_b.shape[1]),
+        nbits=index.nbits,
+    )
+    fb = costs.fused_stage345_cost(**geom)["hbm_bytes"]
+    ub = costs.unfused_stage345_cost(**geom)["hbm_bytes"]
+    emit("fig2", f"stage345_bytes_B{B}", fused_hbm_bytes=int(fb),
+         unfused_hbm_bytes=int(ub),
+         bytes_saved_ratio=round(1.0 - fb / ub, 4))

@@ -145,6 +145,44 @@ def run(emit, dry: bool = False):
             useful_ratio=round(terms.useful_ratio, 3),
         )
 
+    # ---- per-kernel analytic traffic (CI-gated via benchmarks.bench_diff)
+    # Shape arithmetic over each kernel's actual (grid, block, index_map)
+    # triple (repro.kernels.costs): deterministic across machines and jax
+    # versions — unlike the HLO-derived hbm_mb above — so these hbm_bytes
+    # records carry the hard >15% regression gate.
+    from repro.kernels import costs
+
+    L = index.doc_maxlen
+    pd = int(np.asarray(index.residuals).shape[1])
+    K_, d_ = index.num_centroids, index.dim
+    n2 = min(params.ndocs, params.candidate_cap)
+    n3 = min(max(params.ndocs // 4, params.k), n2)
+    for B in (1, 8) if dry else (1, 8, 32):
+        geom = dict(B=B, L=L, pd=pd, K=K_, d=d_, nq=nq, nbits=index.nbits)
+        ci = costs.centroid_interaction_batched_cost(
+            B=B, nd=params.candidate_cap, L=L, K=K_, nq=nq
+        )
+        ds = costs.decompress_and_score_batched_cost(nd=n3, **geom)
+        fused = costs.fused_stage345_cost(n3=n3, **geom)
+        unfused = costs.unfused_stage345_cost(n3=n3, **geom)
+        emit("kernel_bytes", f"centroid_interaction_B{B}",
+             hbm_bytes=int(ci["hbm_bytes"]), flops=int(ci["flops"]))
+        emit("kernel_bytes", f"decompress_score_B{B}",
+             hbm_bytes=int(ds["hbm_bytes"]), flops=int(ds["flops"]))
+        emit("kernel_bytes", f"fused_stage345_B{B}",
+             hbm_bytes=int(fused["hbm_bytes"]), flops=int(fused["flops"]))
+        emit("kernel_bytes", f"unfused_stage345_B{B}",
+             hbm_bytes=int(unfused["hbm_bytes"]), flops=int(unfused["flops"]))
+        emit(
+            "kernel_bytes",
+            f"fused_vs_unfused_B{B}",
+            fused_hbm_bytes=int(fused["hbm_bytes"]),
+            unfused_hbm_bytes=int(unfused["hbm_bytes"]),
+            bytes_saved_ratio=round(
+                1.0 - fused["hbm_bytes"] / unfused["hbm_bytes"], 4
+            ),
+        )
+
 
 if __name__ == "__main__":
     main()

@@ -13,6 +13,12 @@ import argparse
 import json
 import time
 
+#: Version of the ``--json`` payload layout.  Bump ONLY on breaking schema
+#: changes (renamed/removed keys); adding record fields is backward
+#: compatible.  ``benchmarks.bench_diff`` refuses to compare payloads with
+#: mismatched major versions.
+SCHEMA_VERSION = 1
+
 BENCHES = [
     "table3_endtoend",
     "fig2_breakdown",
@@ -94,6 +100,7 @@ def main() -> None:
         except ImportError:  # pragma: no cover
             jax_meta = {}
         payload = dict(
+            schema_version=SCHEMA_VERSION,
             dry=args.dry,
             only=args.only,
             finished_unix=time.time(),

@@ -112,6 +112,8 @@ def shard_index(index: PlaidIndex, n_shards: int):
 
     out = {
         "centroids": index.centroids,
+        "centroids_q": index.centroids_q,
+        "centroids_scale": index.centroids_scale,
         "cutoffs": index.cutoffs,
         "weights": index.weights,
     }

@@ -26,6 +26,14 @@ from repro.core import residual_codec as rc
 class PlaidIndex:
     # --- centroid space ---
     centroids: jax.Array  # (K, d) f32
+    #: int8 symmetric per-row quantization of ``centroids`` plus its f32
+    #: dequant scale — the low-precision stage-1 operands
+    #: (``SearchParams.stage1_dtype in ("int8", ...)``).  Derived
+    #: deterministically from ``centroids`` by :func:`quantize_centroids`
+    #: inside :func:`assemble_index`, so every build path (offline,
+    #: streaming, live delta, compaction) produces bitwise-identical tables.
+    centroids_q: jax.Array  # (K, d) i8
+    centroids_scale: jax.Array  # (K,) f32  per-row dequant scale
     # --- packed token payload (ordered by passage) ---
     codes: jax.Array  # (Nt,) i32  centroid id per token
     residuals: jax.Array  # (Nt, d*b/8) u8
@@ -72,6 +80,21 @@ class PlaidIndex:
         codes = self.codes[token_ids]
         packed = self.residuals[token_ids]
         return rc.decompress(self.codec, codes, packed, self.centroids)
+
+
+def quantize_centroids(centroids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization of the centroid matrix.
+
+    ``scale[k] = max(|centroids[k]|) / 127`` (floored so all-zero rows stay
+    finite); ``q = round(centroids / scale)`` clipped to [-127, 127].  Pure
+    function of ``centroids`` — index producers and load-time back-compat
+    synthesis (old on-disk indexes predate these fields) give identical
+    tables.  Dequantize as ``q.astype(f32) * scale[:, None]``.
+    """
+    c = jnp.asarray(centroids, jnp.float32)
+    scale = jnp.maximum(jnp.abs(c).max(axis=1), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(c / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
 
 
 def _unique_code_pid_pairs(codes_np: np.ndarray, tok_pid: np.ndarray) -> np.ndarray:
@@ -134,8 +157,12 @@ def assemble_index(
     np.cumsum(eivf_lens, out=eivf_offsets[1:])
     eivf_list_cap = int(max(eivf_lens.max(initial=1), 1))
 
+    centroids = jnp.asarray(centroids, jnp.float32)
+    centroids_q, centroids_scale = quantize_centroids(centroids)
     return PlaidIndex(
         centroids=centroids,
+        centroids_q=centroids_q,
+        centroids_scale=centroids_scale,
         codes=jnp.asarray(codes_np),
         residuals=jnp.asarray(packed_residuals),
         tok_pid=jnp.asarray(tok_pid),

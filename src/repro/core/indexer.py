@@ -27,6 +27,9 @@ from repro.live import manifest as manifest_mod
 
 _ARRAY_FIELDS = list(manifest_mod.ARRAY_FIELDS)
 
+#: Centroid-space arrays stored once per shard layout (not doc-partitioned).
+_REPLICATED = ("centroids", "centroids_q", "centroids_scale", "cutoffs", "weights")
+
 
 def save_index(path: str, index: PlaidIndex) -> None:
     """Write ``index`` as a v2 (segment manifest) directory, one base segment."""
@@ -107,7 +110,7 @@ def save_sharded_arrays(
         arrays = {}
         for k, v in idx_dict.items():
             v = np.asarray(v)
-            if k in ("centroids", "cutoffs", "weights"):
+            if k in _REPLICATED:
                 arrays[k] = v  # replicated
             else:
                 n = v.shape[0] // n_shards
@@ -128,10 +131,18 @@ def load_sharded(path: str):
             parts.append({k: d[k] for k in d.files})
     out = {}
     for k in parts[0]:
-        if k in ("centroids", "cutoffs", "weights"):
+        if k in _REPLICATED:
             out[k] = jnp.asarray(parts[0][k])
         else:
             out[k] = jnp.asarray(np.concatenate([p[k] for p in parts]))
+    if "centroids_q" not in out:
+        # pre-quantized-centroid shard layouts: synthesize the int8 tables
+        # (pure function of centroids — identical to a fresh build's)
+        from repro.core.index import quantize_centroids
+
+        out["centroids_q"], out["centroids_scale"] = quantize_centroids(
+            out["centroids"]
+        )
     meta = {
         k: manifest[k]
         for k in ("dim", "nbits", "doc_maxlen", "ivf_list_cap", "eivf_list_cap")

@@ -61,19 +61,46 @@ def trace_count() -> int:
 # Stage 1 — batched query-centroid scores + candidate generation
 # --------------------------------------------------------------------------
 def stage1_scores_batched(
-    index: PlaidIndex, qs: jax.Array, score_dtype: str = "float32"
+    index: PlaidIndex,
+    qs: jax.Array,
+    score_dtype: str = "float32",
+    stage1_dtype: str = "float32",
 ) -> jax.Array:
     """(B, nq, d) queries -> (B, K, nq) score tensor via ONE ``C·Qᵀ`` dot.
 
     The batch is flattened into the matmul's N dimension — (K, d) x
     (d, B*nq) — so XLA emits a single dot and the centroid matrix is read
     once per batch, not once per lane (§Perf S1).
+
+    ``stage1_dtype`` picks the matmul's OPERAND precision (the PLAID
+    reproducibility study shows centroid-stage scores tolerate reduced
+    precision): ``"float32"`` is the oracle; ``"bfloat16"`` casts both
+    operands (halves centroid-table read traffic); ``"int8"`` streams the
+    index's weight-only-quantized table ``centroids_q`` and rescales by the
+    per-row dequant scale after the dot.  Accumulation is f32 in every
+    mode, and stage 4 rescores exactly, so under lossless caps the final
+    ranking is identical (``tests/test_fused.py``).
     """
     B, nq, d = qs.shape
-    C = index.centroids.astype(jnp.float32)
     flat = qs.astype(jnp.float32).reshape(B * nq, d)
-    s = C @ flat.T  # (K, B*nq) — the one stage-1 dot
-    s = s.reshape(C.shape[0], B, nq).transpose(1, 0, 2)  # (B, K, nq)
+    if stage1_dtype == "float32":
+        C = index.centroids.astype(jnp.float32)
+        s = C @ flat.T  # (K, B*nq) — the one stage-1 dot
+    elif stage1_dtype == "bfloat16":
+        C = index.centroids.astype(jnp.bfloat16)
+        s = jax.lax.dot(
+            C, flat.astype(jnp.bfloat16).T,
+            preferred_element_type=jnp.float32,
+        )
+    elif stage1_dtype == "int8":
+        # Weight-only: C ~= centroids_q * scale[:, None], so C @ Qᵀ ~=
+        # scale[:, None] * (centroids_q @ Qᵀ).  The int values (|q| <= 127)
+        # are exact in f32, so the dot itself is deterministic.
+        Cq = index.centroids_q.astype(jnp.float32)
+        s = (Cq @ flat.T) * index.centroids_scale[:, None]
+    else:
+        raise ValueError(f"unknown stage1_dtype: {stage1_dtype!r}")
+    s = s.reshape(s.shape[0], B, nq).transpose(1, 0, 2)  # (B, K, nq)
     return s.astype(jnp.dtype(score_dtype))
 
 
@@ -243,7 +270,9 @@ def run_pipeline_impl(
         decompress_score = None
 
     # ---- Stage 1: one batched C.Q^T + per-lane candidate generation
-    s_cq = stage1_scores_batched(index, qs, p.score_dtype)  # (B, K, nq)
+    s_cq = stage1_scores_batched(
+        index, qs, p.score_dtype, p.stage1_dtype
+    )  # (B, K, nq)
     candidates = candidate_generation_batched(
         index, s_cq, p.nprobe, p.candidate_cap, alive
     )  # (B, cap); tombstoned passages never reach stage 2
@@ -271,33 +300,71 @@ def run_pipeline_impl(
     final_pids = jnp.take_along_axis(cand2, idx3, axis=1)  # (B, n3)
 
     # ---- Stage 4: residual decompression + exact MaxSim
-    codes4 = jnp.take_along_axis(codes3, idx3[..., None], axis=1)
-    tok_valid3 = jnp.take_along_axis(tok_valid, idx2[..., None], axis=1)
-    tok_valid4 = jnp.take_along_axis(tok_valid3, idx3[..., None], axis=1)
-    res_blk, _ = scoring.gather_doc_tokens(
-        index.residuals,
-        index.doc_offsets,
-        index.doc_lens,
-        final_pids.reshape(-1),
-        index.doc_maxlen,
-        fill=jnp.uint8(0),
-    )  # one gather for all B*n3 finalists
-    res_blk = res_blk.reshape(B, n3, index.doc_maxlen, -1)
-    if decompress_score is None:
-        exact = decompress_score_batched(
-            index, qs, q_masks, codes4, res_blk, tok_valid4
-        )
+    if p.fused:
+        # Fused stage 3-5 tail: gather + decompress + MaxSim in one kernel
+        # straight off the CSR token arrays — the gathered residual block
+        # and the decompressed f32 token tensor never materialize.
+        if p.impl == "pallas":
+            from repro.kernels import ops as K
+
+            exact = K.gather_decompress_maxsim(
+                qs,
+                q_masks,
+                final_pids,
+                index.codes,
+                index.residuals,
+                index.doc_offsets,
+                index.doc_lens,
+                index.centroids,
+                index.weights,
+                nbits=index.nbits,
+                doc_maxlen=index.doc_maxlen,
+                interpret=interpret,
+            )
+        else:
+            from repro.kernels import ref as kref
+
+            exact = kref.gather_decompress_maxsim_ref(
+                qs,
+                q_masks,
+                final_pids,
+                index.codes,
+                index.residuals,
+                index.doc_offsets,
+                index.doc_lens,
+                index.centroids,
+                index.weights,
+                nbits=index.nbits,
+                doc_maxlen=index.doc_maxlen,
+            )
     else:
-        exact = decompress_score(
-            qs,
-            q_masks,
-            codes4,
-            res_blk,
-            tok_valid4,
-            index.centroids,
-            index.weights,
-            nbits=index.nbits,
-        )
+        codes4 = jnp.take_along_axis(codes3, idx3[..., None], axis=1)
+        tok_valid3 = jnp.take_along_axis(tok_valid, idx2[..., None], axis=1)
+        tok_valid4 = jnp.take_along_axis(tok_valid3, idx3[..., None], axis=1)
+        res_blk, _ = scoring.gather_doc_tokens(
+            index.residuals,
+            index.doc_offsets,
+            index.doc_lens,
+            final_pids.reshape(-1),
+            index.doc_maxlen,
+            fill=jnp.uint8(0),
+        )  # one gather for all B*n3 finalists
+        res_blk = res_blk.reshape(B, n3, index.doc_maxlen, -1)
+        if decompress_score is None:
+            exact = decompress_score_batched(
+                index, qs, q_masks, codes4, res_blk, tok_valid4
+            )
+        else:
+            exact = decompress_score(
+                qs,
+                q_masks,
+                codes4,
+                res_blk,
+                tok_valid4,
+                index.centroids,
+                index.weights,
+                nbits=index.nbits,
+            )
     exact = jnp.where(final_pids >= 0, exact, NEG)
     kk = min(p.k, n3)
     top_scores, idxk = jax.lax.top_k(exact, kk)  # (B, kk)

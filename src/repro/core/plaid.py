@@ -56,6 +56,16 @@ class SearchParams:
     # measured recall change; default stays f32 (everywhere, including
     # ``_search``) because the CPU dry-run metric can't see the win (bf16
     # emulation inserts f32 copies).
+    stage1_dtype: str = "float32"  # stage-1 C·Qᵀ OPERAND dtype: "float32" |
+    # "bfloat16" (casted operands) | "int8" (quantized centroid table,
+    # ``index.centroids_q``).  Accumulation is always f32; under lossless
+    # caps (nprobe=K, cap >= corpus) final ranks are identical because
+    # stage 4 rescores exactly.  Distinct from ``score_dtype``, which sets
+    # the stage 1-3 approximate-SCORE storage dtype.
+    fused: bool = False  # stage 3-5 tail via the fused gather->decompress->
+    # maxsim megakernel (repro.kernels.fused_score) instead of the
+    # materialized gather + decompress path; rank-identical, the unfused
+    # path survives as the equivalence oracle.
 
     def stage3_docs(self) -> int:
         return max(self.ndocs // 4, self.k)

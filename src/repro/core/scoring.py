@@ -28,7 +28,13 @@ def maxsim(q: jax.Array, d: jax.Array, q_mask=None, d_mask=None) -> jax.Array:
 
 
 def centroid_scores(
-    q: jax.Array, centroids: jax.Array, dtype=jnp.float32
+    q: jax.Array,
+    centroids: jax.Array,
+    dtype=jnp.float32,
+    *,
+    operand_dtype: str = "float32",
+    centroids_q: jax.Array | None = None,
+    centroids_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Stage-1 score matrix  S_cq = C . Q^T, returned as (K, nq).
 
@@ -36,8 +42,33 @@ def centroid_scores(
     and of every stage-2/3 gather from it; stages 1-3 only SELECT candidates
     (exact ranking happens in stage 4), so bf16 noise (~1e-2 relative on
     cosine scores) does not measurably change recall (tested).
+
+    ``operand_dtype`` is the single-query mirror of the batched pipeline's
+    ``SearchParams.stage1_dtype`` — it lowers the *matmul operand*
+    precision (centroid-table read traffic), keeping f32 accumulation:
+    ``"bfloat16"`` casts both operands; ``"int8"`` streams the index's
+    weight-only-quantized table (pass ``centroids_q``/``centroids_scale``,
+    see ``index.quantize_centroids``) and rescales after the dot.
     """
-    out = centroids.astype(jnp.float32) @ q.astype(jnp.float32).T
+    if operand_dtype == "float32":
+        out = centroids.astype(jnp.float32) @ q.astype(jnp.float32).T
+    elif operand_dtype == "bfloat16":
+        out = jax.lax.dot(
+            centroids.astype(jnp.bfloat16),
+            q.astype(jnp.bfloat16).T,
+            preferred_element_type=jnp.float32,
+        )
+    elif operand_dtype == "int8":
+        if centroids_q is None or centroids_scale is None:
+            raise ValueError(
+                "operand_dtype='int8' needs centroids_q/centroids_scale "
+                "(index.quantize_centroids tables)"
+            )
+        out = (
+            centroids_q.astype(jnp.float32) @ q.astype(jnp.float32).T
+        ) * centroids_scale[:, None]
+    else:
+        raise ValueError(f"unknown operand_dtype: {operand_dtype!r}")
     return out.astype(dtype)
 
 

@@ -35,7 +35,9 @@ from repro.distributed import topk as dtopk
 
 #: Centroid-space arrays shared by every segment (one frozen centroid space
 #: + codec per index lineage) — passed unstacked, vmap in_axes=None.
-SHARED_FIELDS = ("centroids", "cutoffs", "weights")
+SHARED_FIELDS = (
+    "centroids", "centroids_q", "centroids_scale", "cutoffs", "weights"
+)
 
 #: Per-segment array fields padded/stacked along the new leading axis,
 #: keyed by which bucket cap bounds their leading dimension.

@@ -30,7 +30,9 @@ from repro.distributed import topk as dtopk
 
 DOC_AXES = ("pod", "data", "model")  # flattened into one logical docs axis
 
-_REPLICATED_FIELDS = {"centroids", "cutoffs", "weights"}
+_REPLICATED_FIELDS = {
+    "centroids", "centroids_q", "centroids_scale", "cutoffs", "weights"
+}
 
 #: Fallback static metadata for dry-run callers that pass bare array dicts.
 _DEFAULT_META = dict(

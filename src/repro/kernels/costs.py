@@ -1,0 +1,151 @@
+"""Analytic per-kernel HBM-traffic / flops cost model.
+
+Interpret-mode Pallas (the CI backend) inlines kernels into XLA, so the
+HLO-text roofline (``launch.hlo_analysis.analyze``) cannot attribute bytes
+to a kernel.  These functions rebuild each kernel's traffic from the SAME
+(grid, block shape, index map) triples its ``pallas_call`` uses, via
+``hlo_analysis.pallas_block_traffic`` — pure shape arithmetic, identical on
+every machine and jax version, which is what makes the per-kernel
+``hbm_bytes`` records in BENCH JSON safe to hard-gate in CI
+(``benchmarks.bench_diff``).
+
+The two composite stage-3-5 entries are the fused-vs-unfused headline: the
+unfused tail materializes the gathered residual/code/validity blocks in HBM
+between the XLA gather and the decompress kernel (write + re-read), the
+fused megakernel streams them through VMEM once.  ``tests/test_fused.py``
+pins ``fused < unfused`` as an invariant.
+
+Flops count the MXU matmuls only (the unpack/select chains are cheap VPU
+integer ops, identical between paths, and would only pad both sides).
+"""
+from __future__ import annotations
+
+from repro.launch.hlo_analysis import pallas_block_traffic
+
+_F32 = 4
+_I32 = 4
+_U8 = 1
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a) // b
+
+
+def centroid_interaction_batched_cost(
+    *, B: int, nd: int, L: int, K: int, nq: int, doc_block: int = 32
+) -> dict:
+    """``kernels.maxsim.centroid_interaction_batched_pallas``: grid
+    (B, nd/doc_block); s_cq / keep / qmask resident per lane, codes blocks
+    stream."""
+    blocks = _ceil_div(nd, doc_block)
+    nd_p = blocks * doc_block
+    hbm = pallas_block_traffic(
+        (B, blocks),
+        in_specs=[
+            (K * nq * _F32, lambda b, i: (b, 0, 0)),  # s_cq lane tile
+            (doc_block * L * _I32, lambda b, i: (b, i, 0)),  # codes block
+            (K * 1, lambda b, i: (b, 0, 0)),  # keep_centroid (bool)
+            (nq * _F32, lambda b, i: (b, 0, 0)),  # q_mask
+        ],
+        out_specs=[(doc_block * _F32, lambda b, i: (b, i, 0))],
+    )
+    # gather-of-score-rows + masked max: no dot; count the mask-weighted sum
+    flops = 2.0 * B * nd_p * L * nq
+    return dict(hbm_bytes=hbm, flops=flops)
+
+
+def decompress_and_score_batched_cost(
+    *,
+    B: int,
+    nd: int,
+    L: int,
+    pd: int,
+    K: int,
+    d: int,
+    nq: int,
+    nbits: int,
+    doc_block: int = 8,
+) -> dict:
+    """``kernels.decompress.decompress_and_score_batched_pallas``: grid
+    (B, nd/doc_block); q tile resident per lane, centroids/weights resident
+    across the whole grid, codes/residual/validity blocks stream."""
+    blocks = _ceil_div(nd, doc_block)
+    nd_p = blocks * doc_block
+    hbm = pallas_block_traffic(
+        (B, blocks),
+        in_specs=[
+            (nq * d * _F32, lambda b, i: (b, 0, 0)),  # q lane tile
+            (nq * _F32, lambda b, i: (b, 0, 0)),  # q_mask
+            (doc_block * L * _I32, lambda b, i: (b, i, 0)),  # codes
+            (doc_block * L * pd * _U8, lambda b, i: (b, i, 0)),  # residuals
+            (doc_block * L * _I32, lambda b, i: (b, i, 0)),  # tok_valid i32
+            (K * d * _F32, lambda b, i: (0, 0)),  # centroids
+            ((2**nbits) * _F32, lambda b, i: (0, 0)),  # weights
+        ],
+        out_specs=[(doc_block * _F32, lambda b, i: (b, i, 0))],
+    )
+    flops = 2.0 * B * nd_p * L * d * nq  # emb @ q.T per candidate token
+    return dict(hbm_bytes=hbm, flops=flops)
+
+
+def gather_decompress_maxsim_cost(
+    *, B: int, n3: int, L: int, pd: int, K: int, d: int, nq: int, nbits: int
+) -> dict:
+    """``kernels.fused_score.gather_decompress_maxsim_pallas``: grid
+    (B, n3), one finalist passage per step; CSR windows stream straight from
+    the token arrays (scalar-prefetched element offsets), query tile
+    resident per lane, centroids/weights resident across the grid."""
+    hbm = pallas_block_traffic(
+        (B, n3),
+        in_specs=[
+            (nq * d * _F32, lambda b, i: (b, 0, 0)),  # q lane tile
+            (nq * _F32, lambda b, i: (b, 0, 0)),  # q_mask
+            (L * _I32, lambda b, i: (b, i)),  # codes CSR window
+            (L * pd * _U8, lambda b, i: (b, i)),  # residual CSR window
+            (K * d * _F32, lambda b, i: (0, 0)),  # centroids
+            ((2**nbits) * _F32, lambda b, i: (0, 0)),  # weights
+        ],
+        out_specs=[(_F32, lambda b, i: (b, i))],
+        scalar_bytes=3 * B * n3 * _I32,  # starts / row0 / lens tables
+    )
+    flops = 2.0 * B * n3 * L * d * nq
+    return dict(hbm_bytes=hbm, flops=flops)
+
+
+def unfused_stage345_cost(
+    *,
+    B: int,
+    n3: int,
+    L: int,
+    pd: int,
+    K: int,
+    d: int,
+    nq: int,
+    nbits: int,
+    doc_block: int = 8,
+) -> dict:
+    """The materialized stage-3-5 tail the megakernel replaces: the XLA
+    residual gather (read the selected CSR bytes, WRITE the routed block),
+    the codes/validity take-alongs (read + write each), then the stage-4
+    decompress kernel re-reading everything it just wrote."""
+    gather_bytes = (
+        2 * B * n3 * L * pd * _U8  # res_blk: CSR read + routed-block write
+        + 2 * B * n3 * L * _I32  # codes4 take_along: read + write
+        + 2 * B * n3 * L * _I32  # tok_valid4 take_along (i32 in the kernel)
+    )
+    kern = decompress_and_score_batched_cost(
+        B=B, nd=n3, L=L, pd=pd, K=K, d=d, nq=nq, nbits=nbits,
+        doc_block=doc_block,
+    )
+    return dict(
+        hbm_bytes=gather_bytes + kern["hbm_bytes"], flops=kern["flops"]
+    )
+
+
+def fused_stage345_cost(
+    *, B: int, n3: int, L: int, pd: int, K: int, d: int, nq: int, nbits: int
+) -> dict:
+    """Fused stage-3-5 tail: exactly the megakernel — no intermediate."""
+    return gather_decompress_maxsim_cost(
+        B=B, n3=n3, L=L, pd=pd, K=K, d=d, nq=nq, nbits=nbits
+    )

@@ -7,17 +7,66 @@ numerically identical but executes as plain XLA ops.  Callers pass
 current platform, or an explicit bool to override per call — e.g. forcing
 ``interpret=True`` on TPU to debug a kernel, or ``False`` in a lowering
 test.
+
+Resolution is cached: ``jax.default_backend()`` is consulted ONCE per
+process (the backend cannot change underneath a running engine) instead of
+per kernel launch.  For debugging, the ``REPRO_FORCE_INTERPRET`` env var
+overrides the platform default — ``1``/``true`` forces the interpreter,
+``0``/``false`` forces the Mosaic lowering — without touching call sites
+that rely on ``interpret=None``.  An explicit bool argument still wins over
+both (tests that pin a mode stay pinned).
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+_FORCE_ENV = "REPRO_FORCE_INTERPRET"
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+#: Process-wide cache of the resolved default (None = not yet resolved).
+_cached_default: bool | None = None
+
+
+def _env_override() -> bool | None:
+    raw = os.environ.get(_FORCE_ENV)
+    if raw is None:
+        return None
+    val = raw.strip().lower()
+    if val in _TRUTHY:
+        return True
+    if val in _FALSY:
+        return False
+    raise ValueError(
+        f"{_FORCE_ENV}={raw!r} is not a boolean; use one of "
+        f"{_TRUTHY + _FALSY}"
+    )
+
+
+def _reset_cache() -> None:
+    """Drop the cached resolution (tests flip the env var / backend)."""
+    global _cached_default
+    _cached_default = None
 
 
 def default_interpret() -> bool:
-    """True unless running on TPU (the only Mosaic target we lower for)."""
-    return jax.default_backend() != "tpu"
+    """True unless running on TPU (the only Mosaic target we lower for).
+
+    The ``REPRO_FORCE_INTERPRET`` env override, when set, replaces the
+    platform default.  The answer is computed once and cached.
+    """
+    global _cached_default
+    if _cached_default is None:
+        forced = _env_override()
+        _cached_default = (
+            forced if forced is not None else jax.default_backend() != "tpu"
+        )
+    return _cached_default
 
 
 def resolve_interpret(interpret: bool | None) -> bool:
-    """``None`` -> platform default; an explicit bool wins."""
+    """``None`` -> cached platform default (or env override); an explicit
+    bool wins."""
     return default_interpret() if interpret is None else bool(interpret)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import decompress as _dec
+from repro.kernels import fused_score as _fs
 from repro.kernels import maxsim as _ms
 from repro.kernels.dispatch import default_interpret, resolve_interpret
 
@@ -28,6 +29,7 @@ __all__ = [
     "decompress_residuals",
     "decompress_and_score",
     "decompress_and_score_batched",
+    "gather_decompress_maxsim",
     "default_interpret",
 ]
 
@@ -156,5 +158,44 @@ def decompress_and_score_batched(
         weights,
         nbits=nbits,
         doc_block=doc_block,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nbits", "doc_maxlen", "interpret")
+)
+def gather_decompress_maxsim(
+    qs: jax.Array,  # (B, nq, d)
+    q_masks: jax.Array,  # (B, nq)
+    final_pids: jax.Array,  # (B, n3) i32, -1 pad
+    codes_tok: jax.Array,  # (Nt,) i32 — CSR token codes, NOT pre-gathered
+    residuals_tok: jax.Array,  # (Nt, pd) u8 — CSR packed residuals
+    doc_offsets: jax.Array,  # (Nd+1,)
+    doc_lens: jax.Array,  # (Nd,)
+    centroids: jax.Array,  # (K, d)
+    weights: jax.Array,  # (2^b,)
+    *,
+    nbits: int,
+    doc_maxlen: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """The fused stage-3-5 megakernel: gather + decompress + exact MaxSim in
+    one launch (grid (B, n3), scalar-prefetched CSR offsets) — the gathered
+    residual block and the decompressed f32 token tensor never reach HBM.
+    Returns (B, n3) exact scores (pid == -1 lanes are the caller's to pin).
+    """
+    return _fs.gather_decompress_maxsim_pallas(
+        qs,
+        q_masks,
+        final_pids,
+        codes_tok,
+        residuals_tok,
+        doc_offsets,
+        doc_lens,
+        centroids,
+        weights,
+        nbits=nbits,
+        doc_maxlen=doc_maxlen,
         interpret=resolve_interpret(interpret),
     )

@@ -621,6 +621,8 @@ def _retrieval_cell(arch, cfg: colbert_lib.ColBERTConfig, cell, p, dry, mesh):
             rep = lambda shape, dt: _leaf_sds(shape, dt)
             index = {
                 "centroids": rep((K, dim), jnp.float32),
+                "centroids_q": rep((K, dim), jnp.int8),
+                "centroids_scale": rep((K,), jnp.float32),
                 "codes": doc((Nt,), jnp.int32),
                 "residuals": doc((Nt, pd), jnp.uint8),
                 "tok_pid": doc((Nt,), jnp.int32),

@@ -436,6 +436,46 @@ def top_ops(hlo: str, n: int = 20, kind: str = "hbm"):
 
 
 # --------------------------------------------------------------------------
+# Analytic Pallas kernel traffic
+# --------------------------------------------------------------------------
+def pallas_block_traffic(
+    grid: tuple,
+    in_specs: list,
+    out_specs: list,
+    scalar_bytes: float = 0.0,
+) -> float:
+    """HBM bytes moved by one Pallas launch, from its grid + BlockSpecs.
+
+    Interpret-mode Pallas inlines into plain XLA ops, so the HLO-text cost
+    model above can't see kernels as units — this is the analytic
+    complement: pure shape arithmetic over the SAME (grid, block, index_map)
+    triple the ``pallas_call`` was built from, hence deterministic across
+    machines and jax versions (safe to regression-gate hard in CI).
+
+    Model: grid steps execute in row-major order (last axis fastest); an
+    operand block is fetched from HBM when its index-map result differs
+    from the previous step's (Pallas keeps the block resident otherwise —
+    the revisit-aware pipelining model); output blocks are written under
+    the same rule.  ``in_specs`` / ``out_specs`` are ``(block_bytes,
+    index_map)`` pairs where ``index_map`` takes the grid indices exactly
+    like the BlockSpec's.  ``scalar_bytes`` adds one-shot traffic
+    (scalar-prefetch tables).
+    """
+    import itertools
+
+    total = float(scalar_bytes)
+    specs = list(in_specs) + list(out_specs)
+    prev = [None] * len(specs)
+    for point in itertools.product(*(range(g) for g in grid)):
+        for j, (block_bytes, index_map) in enumerate(specs):
+            idx = index_map(*point)
+            if idx != prev[j]:
+                total += block_bytes
+                prev[j] = idx
+    return total
+
+
+# --------------------------------------------------------------------------
 # Roofline
 # --------------------------------------------------------------------------
 #: TPU v5e-class hardware constants (per chip).

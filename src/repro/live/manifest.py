@@ -90,7 +90,19 @@ def read_segment(seg_dir: str, static_meta: dict) -> PlaidIndex:
     import jax.numpy as jnp
 
     with np.load(os.path.join(seg_dir, "arrays.npz")) as data:
-        arrays = {f: jnp.asarray(data[f]) for f in ARRAY_FIELDS}
+        arrays = {
+            f: jnp.asarray(data[f]) for f in ARRAY_FIELDS if f in data.files
+        }
+    if "centroids_q" not in arrays:
+        # Segments written before the quantized-centroid fields existed:
+        # synthesize the int8 tables at load time.  quantize_centroids is a
+        # pure function of centroids, so the result is bitwise identical to
+        # what a fresh build of the same segment would have stored.
+        from repro.core.index import quantize_centroids
+
+        arrays["centroids_q"], arrays["centroids_scale"] = (
+            quantize_centroids(arrays["centroids"])
+        )
     return PlaidIndex(**arrays, **{k: static_meta[k] for k in STATIC_FIELDS})
 
 

@@ -71,6 +71,8 @@ def to_engine_params(p: SearchParams, impl: str = "ref") -> plaid_mod.SearchPara
         candidate_cap=p.candidate_cap,
         impl=impl,
         score_dtype=p.score_dtype,
+        stage1_dtype=p.stage1_dtype,
+        fused=p.fused,
     )
 
 

@@ -24,7 +24,15 @@ from repro.constants import DEFAULT_CANDIDATE_CAP
 DEFAULT_SCORE_DTYPE = "float32"
 
 #: SearchParams fields that key the compile cache (recompile on change).
-STATIC_FIELDS = ("k", "nprobe", "ndocs", "candidate_cap", "score_dtype")
+STATIC_FIELDS = (
+    "k",
+    "nprobe",
+    "ndocs",
+    "candidate_cap",
+    "score_dtype",
+    "stage1_dtype",
+    "fused",
+)
 #: SearchParams fields that are traced (no recompile on change).
 DYNAMIC_FIELDS = ("t_cs",)
 
@@ -42,6 +50,14 @@ class SearchParams:
     #: engine's ``SearchParams`` and every ``params_for_k`` helper).
     candidate_cap: int = DEFAULT_CANDIDATE_CAP
     score_dtype: str = DEFAULT_SCORE_DTYPE
+    #: Stage-1 ``C·Qᵀ`` operand dtype: "float32" | "bfloat16" | "int8"
+    #: (the index's weight-only-quantized centroid table).  f32
+    #: accumulation in every mode; stage 4 rescores exactly.
+    stage1_dtype: str = "float32"
+    #: Run the stage 3-5 tail through the fused gather->decompress->maxsim
+    #: megakernel (rank-identical to the materialized path, which survives
+    #: as the oracle).
+    fused: bool = False
     # --- dynamic scalars: traced, swept freely at serve time ------------
     t_cs: float = 0.5
 

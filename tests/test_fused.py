@@ -1,0 +1,240 @@
+"""Fused stage-3-5 megakernel, end to end.
+
+Acceptance grid: the ``fused=True`` pipeline is rank-identical to the
+unfused one across ``{B in 1,4} x {nbits in 2,4} x {plain, live, sharded}``
+on BOTH kernel paths (ref + pallas-interpret).  Plus: int8/bf16 stage-1
+scoring (rank-identical under lossless caps, recall-bounded under tight
+ones), facade threading of the new params, and the analytic HBM-bytes win
+the fusion exists for — the same numbers ``benchmarks.bench_diff`` hard-
+gates in CI, pinned here as an invariant so a cost-model edit that loses
+the win fails tier-1 before it ever reaches a BENCH artifact.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import live, retrieval
+from repro.core import index as index_mod, pipeline, plaid
+from repro.data import synthetic as syn
+from repro.kernels import costs
+
+#: Non-truncating caps for the 140-passage corpora below: no stage prunes a
+#: passage one path would keep and the other wouldn't, so fused == unfused
+#: is exact rank identity, not an approximation bound.
+def _params(k=10, impl="ref", **kw):
+    return plaid.SearchParams(
+        k=k, nprobe=4, t_cs=0.3, ndocs=256, candidate_cap=256, impl=impl,
+        **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    docs, _ = syn.embedding_corpus(140, dim=32, min_len=6, max_len=18, seed=0)
+    qs, _ = syn.queries_from_docs(docs, 4, q_len=6)
+    return docs, jnp.asarray(qs)
+
+
+# one full-corpus index and one base+deltas live setup per nbits, built
+# lazily and shared across the whole grid (the builds dominate runtime)
+_INDEXES: dict = {}
+_LIVES: dict = {}
+
+
+def _index(docs, nbits):
+    if nbits not in _INDEXES:
+        _INDEXES[nbits] = index_mod.build_index(
+            docs, num_centroids=64, nbits=nbits, kmeans_iters=3
+        )
+    return _INDEXES[nbits]
+
+
+def _live(docs, nbits):
+    if nbits not in _LIVES:
+        base = index_mod.build_index(
+            docs[:90], num_centroids=64, nbits=nbits, kmeans_iters=3
+        )
+        lv = live.LiveIndex(base)
+        lv.add_passages(docs[90:115])
+        lv.add_passages(docs[115:])
+        lv.delete([7, 95, 120])
+        _LIVES[nbits] = lv
+    return _LIVES[nbits]
+
+
+def _assert_identical(unfused_eng, fused_eng, qs):
+    s0, p0 = unfused_eng.search_batch(qs)
+    s1, p1 = fused_eng.search_batch(qs)
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+    np.testing.assert_allclose(
+        np.asarray(s0), np.asarray(s1), rtol=1e-5, atol=1e-5
+    )
+
+
+# --------------------------------------------------------------------------
+# Acceptance grid: {B} x {nbits} x {plain, live, sharded} x {ref, pallas}
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("nbits", [2, 4])
+@pytest.mark.parametrize("B", [1, 4])
+def test_fused_rank_identity_plain(corpus, impl, nbits, B):
+    docs, qs = corpus
+    idx = _index(docs, nbits)
+    _assert_identical(
+        plaid.PlaidEngine(idx, _params(impl=impl, fused=False)),
+        plaid.PlaidEngine(idx, _params(impl=impl, fused=True)),
+        qs[:B],
+    )
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("nbits", [2, 4])
+@pytest.mark.parametrize("B", [1, 4])
+def test_fused_rank_identity_live(corpus, impl, nbits, B):
+    """Fused tail under the stacked-segment vmap (base + 2 deltas +
+    tombstones): the megakernel's scalar-prefetch tables batch correctly."""
+    docs, qs = corpus
+    lv = _live(docs, nbits)
+    _assert_identical(
+        live.LiveEngine(lv, _params(impl=impl, fused=False)),
+        live.LiveEngine(lv, _params(impl=impl, fused=True)),
+        qs[:B],
+    )
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("nbits", [2, 4])
+@pytest.mark.parametrize("B", [1, 4])
+def test_fused_rank_identity_sharded(corpus, impl, nbits, B):
+    """Fused tail inside shard_map (degenerate 1-shard mesh: runs on any
+    box; the multi-shard grid is covered by `make test-multidevice` via
+    the params flowing through the same exec layer)."""
+    docs, qs = corpus
+    lv = _live(docs, nbits)
+    _assert_identical(
+        live.LiveEngine(lv, _params(impl=impl, fused=False), n_shards=1),
+        live.LiveEngine(lv, _params(impl=impl, fused=True), n_shards=1),
+        qs[:B],
+    )
+
+
+# --------------------------------------------------------------------------
+# int8 / bf16 stage-1 scoring
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("stage1_dtype", ["bfloat16", "int8"])
+def test_stage1_dtype_lossless_caps_rank_identity(corpus, impl, stage1_dtype):
+    """Under lossless caps (nprobe == num_centroids, caps >= corpus) stage 4
+    rescores every passage exactly, so quantized stage-1 scoring cannot move
+    the final ranking: pids AND scores match float32 bit-for-bit."""
+    docs, qs = corpus
+    idx = _index(docs, 2)
+    loss = plaid.SearchParams(
+        k=10, nprobe=64, t_cs=-1e9, ndocs=256, candidate_cap=256, impl=impl
+    )
+    s0, p0 = plaid.PlaidEngine(idx, loss).search_batch(qs)
+    s1, p1 = plaid.PlaidEngine(
+        idx, dataclasses.replace(loss, stage1_dtype=stage1_dtype)
+    ).search_batch(qs)
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+@pytest.mark.parametrize("stage1_dtype", ["bfloat16", "int8"])
+def test_stage1_dtype_tight_caps_recall(corpus, stage1_dtype):
+    """Under aggressively tight caps the quantized candidate set may drift,
+    but top-k overlap with the float32 path stays high (>= 0.9 here)."""
+    docs, qs = corpus
+    idx = _index(docs, 2)
+    tight = plaid.SearchParams(
+        k=10, nprobe=2, t_cs=0.3, ndocs=32, candidate_cap=48, impl="ref"
+    )
+    p0 = np.asarray(plaid.PlaidEngine(idx, tight).search_batch(qs)[1])
+    p1 = np.asarray(
+        plaid.PlaidEngine(
+            idx, dataclasses.replace(tight, stage1_dtype=stage1_dtype)
+        ).search_batch(qs)[1]
+    )
+    overlaps = [
+        len(set(a[a >= 0]) & set(b[b >= 0])) / max(1, int((a >= 0).sum()))
+        for a, b in zip(p0, p1)
+    ]
+    assert np.mean(overlaps) >= 0.9, overlaps
+
+
+def test_stage1_scores_batched_dtype_error_and_accuracy(corpus):
+    docs, qs = corpus
+    idx = _index(docs, 2)
+    f32 = pipeline.stage1_scores_batched(idx, qs)
+    for sd, tol in (("bfloat16", 5e-2), ("int8", 5e-2)):
+        approx = pipeline.stage1_scores_batched(idx, qs, stage1_dtype=sd)
+        assert approx.dtype == f32.dtype  # f32 accumulation either way
+        err = float(jnp.abs(approx - f32).max())
+        assert err <= tol, (sd, err)
+    with pytest.raises(ValueError, match="stage1_dtype"):
+        pipeline.stage1_scores_batched(idx, qs, stage1_dtype="float16")
+
+
+def test_quantized_centroids_deterministic_and_bounded(corpus):
+    """quantize_centroids is a pure function of the centroids (every build
+    and load path must agree) and its per-row error is bounded by scale/2."""
+    docs, _ = corpus
+    idx = _index(docs, 2)
+    q, scale = index_mod.quantize_centroids(idx.centroids)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(idx.centroids_q))
+    np.testing.assert_array_equal(
+        np.asarray(scale), np.asarray(idx.centroids_scale)
+    )
+    assert q.dtype == jnp.int8 and scale.dtype == jnp.float32
+    recon = np.asarray(q, np.float32) * np.asarray(scale)[:, None]
+    err = np.abs(recon - np.asarray(idx.centroids))
+    assert np.all(err <= np.asarray(scale)[:, None] * 0.5 + 1e-7)
+
+
+# --------------------------------------------------------------------------
+# facade threading
+# --------------------------------------------------------------------------
+def test_facade_threads_fused_and_stage1_dtype(corpus):
+    """`retrieval.SearchParams(fused=True, stage1_dtype=...)` reaches the
+    core engine through the backend mapping and changes nothing about the
+    results under non-truncating caps."""
+    docs, qs = corpus
+    idx = _index(docs, 2)
+    base = retrieval.SearchParams(
+        k=10, nprobe=4, t_cs=0.3, ndocs=256, candidate_cap=256
+    )
+    r0 = retrieval.from_index(idx, backend="plaid-pallas", params=base)
+    r1 = retrieval.from_index(
+        idx,
+        backend="plaid-pallas",
+        params=dataclasses.replace(base, fused=True, stage1_dtype="int8"),
+    )
+    res0, res1 = r0.search_batch(qs), r1.search_batch(qs)
+    np.testing.assert_array_equal(np.asarray(res0.pids), np.asarray(res1.pids))
+    np.testing.assert_allclose(
+        np.asarray(res0.scores), np.asarray(res1.scores), rtol=1e-5, atol=1e-5
+    )
+
+
+# --------------------------------------------------------------------------
+# the analytic bytes win (mirrors the CI gate in benchmarks.bench_diff)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "geom",
+    [
+        # dry-scale roofline geometry (BENCH_seed.json, B=1 and B=8)
+        dict(B=1, n3=64, L=20, pd=8, K=256, d=32, nq=8, nbits=2),
+        dict(B=8, n3=64, L=20, pd=8, K=256, d=32, nq=8, nbits=2),
+        # paper-ish scale: 128-dim embeddings, 4-bit residuals, long docs
+        dict(B=16, n3=1024, L=180, pd=64, K=2**16, d=128, nq=32, nbits=4),
+    ],
+    ids=["dry_B1", "dry_B8", "paper_scale"],
+)
+def test_fused_bytes_strictly_below_unfused(geom):
+    fused = costs.fused_stage345_cost(**geom)
+    unfused = costs.unfused_stage345_cost(**geom)
+    assert fused["hbm_bytes"] < unfused["hbm_bytes"], geom
+    # the fusion removes traffic, not work: the MXU flops are identical
+    assert fused["flops"] == unfused["flops"]

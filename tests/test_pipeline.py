@@ -157,12 +157,21 @@ def test_facade_search_batch_diagnostics(small_index):
 # Satellites: shared sentinel + candidate_cap single source of truth
 # --------------------------------------------------------------------------
 def test_neg_sentinel_single_source():
-    """Kernel and reference sentinels agree — and are the same constant."""
+    """Kernel and reference sentinels agree — and are the same constant.
+
+    ``kernels.ref`` and ``kernels.fused_score`` are pinned too: a locally
+    redefined sentinel would silently reorder equal-score ties between the
+    fused / unfused / ref paths without failing any rank test."""
+    from repro.kernels import fused_score as kfs
+    from repro.kernels import ref as kref
+
     assert scoring.NEG == constants.NEG
     assert kms.NEG == constants.NEG
     assert kdec.NEG == constants.NEG
     assert plaid.NEG == constants.NEG
     assert pipeline.NEG == constants.NEG
+    assert kref.NEG is constants.NEG
+    assert kfs.NEG is constants.NEG
 
 
 def test_candidate_cap_single_source_of_truth():
