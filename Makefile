@@ -20,7 +20,8 @@ smoke:  ## quickest benchmark pipeline smoke (table3 only)
 
 bench-dry:  ## EVERY registered benchmark at dry scale (incl. live_ingest):
 	## catches benchmark registration breakage before merge.  CI passes
-	## BENCH_FLAGS="--json BENCH_dry.json" to upload results as an artifact.
+	## BENCH_FLAGS="--json BENCH_dry.json --trace trace_dry.json" to upload
+	## the results + the Chrome-trace span export as artifacts.
 	$(PY) -m benchmarks.run --dry $(BENCH_FLAGS)
 
 bench-diff:  ## gate per-kernel hbm_bytes against the committed baseline

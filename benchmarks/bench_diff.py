@@ -10,7 +10,9 @@ Compares two ``benchmarks.run --json`` payloads and FAILS (exit 1) when:
   silently-dropped kernel is a regression, not an improvement);
 * a ``fused_vs_unfused_*`` record stops showing fused strictly below
   unfused (the megakernel's reason to exist);
-* the payloads' ``schema_version`` differ.
+* the payloads' ``schema_version`` are incompatible (v1 and v2 compare
+  fine — v2 only ADDED observability sections; anything else mismatched
+  fails).
 
 Only ``hbm_bytes`` records are gated: they are analytic shape arithmetic
 (``repro.kernels.costs``), deterministic across machines and jax versions.
@@ -24,6 +26,11 @@ import json
 import sys
 
 DEFAULT_THRESHOLD = 0.15
+
+#: schema_version pairs that compare cleanly despite differing: v2 only
+#: added top-level observability sections (``metrics``/``span_summary``);
+#: the gated ``results`` rows kept their v1 layout.
+COMPATIBLE_SCHEMAS = {(1, 2), (2, 1)}
 
 
 def _load(path: str) -> dict:
@@ -47,10 +54,16 @@ def diff(baseline: dict, current: dict, threshold: float = DEFAULT_THRESHOLD):
     bv = baseline.get("schema_version", 0)
     cv = current.get("schema_version", 0)
     if bv != cv:
-        failures.append(
-            f"schema_version mismatch: baseline={bv} current={cv}"
-        )
-        return failures, infos
+        if (bv, cv) in COMPATIBLE_SCHEMAS:
+            infos.append(
+                f"schema_version baseline={bv} current={cv}: compatible "
+                "(v2 added observability sections only)"
+            )
+        else:
+            failures.append(
+                f"schema_version mismatch: baseline={bv} current={cv}"
+            )
+            return failures, infos
 
     base = _keyed(baseline, "hbm_bytes")
     cur = _keyed(current, "hbm_bytes")

@@ -2,12 +2,13 @@
 
 The paper's headline diagnosis: vanilla ColBERTv2 spends its time in index
 lookup + residual decompression; PLAID's centroid stages eliminate most of
-it.  We time jitted sub-pipelines per stage (stage-boundary tensors forced
-with block_until_ready).
+it.  Stage timings come from recorded ``repro.obs`` tracer spans (the same
+spans ``--trace`` exports as Chrome trace JSON), not ad-hoc timer pairs,
+and the funnel telemetry (``run_pipeline(..., funnel=True)``) reports the
+candidate counts each stage actually saw — the paper's funnel figure next
+to its latency figure.
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
@@ -15,22 +16,26 @@ import jax.numpy as jnp
 from repro import retrieval
 from repro.core import plaid, scoring
 from repro.core import residual_codec as rc
+from repro.obs.trace import get_tracer
 
 from benchmarks import common
 
 N_DOCS = 8000
 
 
-def _timeit(fn, *args, reps=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+def _timed(tracer, name, fn, *args, reps=20, **attrs):
+    """Mean ms over ``reps`` recorded spans (compile excluded: one warmup
+    call runs before the first span opens)."""
+    jax.block_until_ready(fn(*args))
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e3
+        with tracer.span(name, **attrs):
+            jax.block_until_ready(fn(*args))
+    durs = tracer.durations_ms(name)[-reps:]
+    return sum(durs) / len(durs)
 
 
 def run(emit, dry: bool = False):
+    tracer = get_tracer()
     docs, index = common.corpus_and_index(common.scaled(N_DOCS, dry, 500))
     qs, _ = common.queries(docs, 8)
     q, q_mask = qs[0], jnp.ones(qs.shape[1])
@@ -38,6 +43,7 @@ def run(emit, dry: bool = False):
     # times the pipeline's internals, so it unpacks them below
     p = retrieval.params_for_k(100)
     cap = min(p.candidate_cap, index.num_passages)
+    reps = 5 if dry else 20
 
     # ---- PLAID stages
     s1 = jax.jit(
@@ -45,7 +51,7 @@ def run(emit, dry: bool = False):
             index, scoring.centroid_scores(q, index.centroids), p.nprobe, cap
         )
     )
-    t1 = _timeit(s1, q)
+    t1 = _timed(tracer, "fig2.stage1_candidates", s1, q, reps=reps)
     cands = s1(q)
 
     def stage23(q, cands):
@@ -62,7 +68,7 @@ def run(emit, dry: bool = False):
         return cands[idx2][idx3]
 
     s23 = jax.jit(stage23)
-    t23 = _timeit(s23, q, cands) - t1 * 0  # includes s_cq recompute (small)
+    t23 = _timed(tracer, "fig2.stage23_interaction", s23, q, cands, reps=reps)
     final = s23(q, cands)
 
     def stage4(q, final):
@@ -78,7 +84,10 @@ def run(emit, dry: bool = False):
             index, q, q_mask, codes_blk, res_blk, tok_valid
         )
 
-    t4 = _timeit(jax.jit(stage4), q, final)
+    t4 = _timed(
+        tracer, "fig2.stage4_decompress_score", jax.jit(stage4), q, final,
+        reps=reps,
+    )
     emit("fig2", "plaid_stage1_candidates", ms=round(t1, 3))
     emit("fig2", "plaid_stage23_interaction", ms=round(t23, 3))
     emit("fig2", "plaid_stage4_decompress_score", ms=round(t4, 3))
@@ -102,14 +111,15 @@ def run(emit, dry: bool = False):
             index.codec, index.codes[safe], index.residuals[safe], index.centroids
         )
 
-    tv = _timeit(jax.jit(vanilla_lookup_decompress), q)
+    tv = _timed(
+        tracer, "fig2.vanilla_lookup_decompress",
+        jax.jit(vanilla_lookup_decompress), q, reps=reps,
+    )
     emit("fig2", "vanilla_lookup_decompress", ms=round(tv, 3),
          note="the paper's Fig2a bottleneck PLAID removes")
 
-    # ---- fused vs unfused stage-3-5 tail: the per-stage layout above no
-    # longer describes the fused pipeline (one megakernel replaces gather +
-    # decompress + maxsim), so the comparison is end-to-end batched
-    # run_pipeline timings plus the analytic bytes the fusion removes.
+    # ---- the funnel the latency bars explain: per-stage candidate counts
+    # from the in-graph FunnelStats aux (mean over the query batch)
     import dataclasses
 
     import numpy as np
@@ -124,9 +134,22 @@ def run(emit, dry: bool = False):
     core_p = plaid.clamp_params(
         backends.to_engine_params(p, impl="pallas"), index.num_passages
     )
+    _, _, fstats = pipeline.run_pipeline(
+        index, qs_b, masks_b, p.t_cs, core_p, funnel=True
+    )
+    emit("fig2", "funnel", **{
+        name: round(float(np.asarray(v).mean()), 1)
+        for name, v in zip(type(fstats)._fields, fstats)
+    })
+
+    # ---- fused vs unfused stage-3-5 tail: the per-stage layout above no
+    # longer describes the fused pipeline (one megakernel replaces gather +
+    # decompress + maxsim), so the comparison is end-to-end batched
+    # run_pipeline timings plus the analytic bytes the fusion removes.
     for fused in (False, True):
         pp = dataclasses.replace(core_p, fused=fused)
-        t = _timeit(
+        t = _timed(
+            tracer, f"fig2.pipeline_B{B}_{'fused' if fused else 'unfused'}",
             lambda qs_, m: pipeline.run_pipeline(index, qs_, m, p.t_cs, pp),
             qs_b, masks_b, reps=5 if dry else 20,
         )

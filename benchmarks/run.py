@@ -6,6 +6,9 @@
 (numbers are NOT meaningful at dry scale).  ``--json PATH`` additionally
 writes every result row as structured JSON (bench/case/values + run
 metadata) — the artifact CI uploads per run so perf enters the trajectory.
+``--trace PATH`` exports every span the benchmarks recorded (the process
+tracer: fig2 stage spans, serving queue/dispatch spans, live-index
+mutations) as Chrome trace-event JSON — load it in Perfetto.
 """
 from __future__ import annotations
 
@@ -17,7 +20,10 @@ import time
 #: changes (renamed/removed keys); adding record fields is backward
 #: compatible.  ``benchmarks.bench_diff`` refuses to compare payloads with
 #: mismatched major versions.
-SCHEMA_VERSION = 1
+#: v2: added observability sections (``metrics`` registry snapshot +
+#: ``span_summary`` per-span-name rollup); ``results`` rows are unchanged,
+#: and bench_diff treats v1<->v2 as comparable.
+SCHEMA_VERSION = 2
 
 BENCHES = [
     "table3_endtoend",
@@ -57,6 +63,9 @@ def main() -> None:
                     help="tiny corpora / single trial: CI smoke run")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as machine-readable JSON")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export recorded spans as Chrome trace-event JSON "
+                         "(Perfetto-loadable)")
     args = ap.parse_args()
 
     rows = []
@@ -86,6 +95,13 @@ def main() -> None:
 
     print(f"# total {len(rows)} results")
 
+    from repro.obs.metrics import get_registry
+    from repro.obs.trace import get_tracer
+
+    if args.trace:
+        n_events = get_tracer().export(args.trace)
+        print(f"# wrote {n_events} trace events to {args.trace}")
+
     if args.json:
         import platform
 
@@ -108,6 +124,8 @@ def main() -> None:
             python=platform.python_version(),
             **jax_meta,
             results=records,
+            metrics=get_registry().snapshot(),
+            span_summary=get_tracer().summary(),
         )
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

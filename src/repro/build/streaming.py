@@ -172,20 +172,24 @@ class StreamingIndexBuilder:
         if not (need_centroids or need_codec):
             return self.centroids, self.codec
 
+        from repro.obs.trace import get_tracer
+
+        tracer = get_tracer()
         reservoir = ReservoirSampler(self.sample_size, seed=self.seed)
         n_tokens = n_docs = n_chunks = 0
         for payload, doc_lens in stream.chunks():
-            emb_np = self._embed_host(stream, payload)
-            self.stats.note_f32(emb_np.size)
-            reservoir.offer(emb_np, n_tokens)
-            self.stats.note_f32((reservoir.n_kept + emb_np.shape[0]) *
-                                emb_np.shape[1])
-            n_tokens += emb_np.shape[0]
-            n_docs += len(doc_lens)
-            n_chunks += 1
-            self.stats.peak_chunk_tokens = max(
-                self.stats.peak_chunk_tokens, emb_np.shape[0]
-            )
+            with tracer.span("build.sample_chunk", chunk=n_chunks):
+                emb_np = self._embed_host(stream, payload)
+                self.stats.note_f32(emb_np.size)
+                reservoir.offer(emb_np, n_tokens)
+                self.stats.note_f32((reservoir.n_kept + emb_np.shape[0]) *
+                                    emb_np.shape[1])
+                n_tokens += emb_np.shape[0]
+                n_docs += len(doc_lens)
+                n_chunks += 1
+                self.stats.peak_chunk_tokens = max(
+                    self.stats.peak_chunk_tokens, emb_np.shape[0]
+                )
         if n_tokens == 0:
             raise ValueError("corpus stream yielded no tokens")
         self.stats.n_docs, self.stats.n_tokens = n_docs, n_tokens
@@ -201,14 +205,17 @@ class StreamingIndexBuilder:
             # sample-draw key (unused here — the reservoir is priority-
             # based) and fit key kept independent
             _, key_fit = jax.random.split(jax.random.PRNGKey(self.seed))
-            self.centroids = kmeans_mesh.kmeans_fit_mesh(
-                sample,
-                k,
-                key=key_fit,
-                iters=self.kmeans_iters,
-                mesh=self.mesh,
-                stat_blocks=self.stat_blocks,
-            )
+            with tracer.span(
+                "build.kmeans", k=int(k), sample_tokens=reservoir.n_kept
+            ):
+                self.centroids = kmeans_mesh.kmeans_fit_mesh(
+                    sample,
+                    k,
+                    key=key_fit,
+                    iters=self.kmeans_iters,
+                    mesh=self.mesh,
+                    stat_blocks=self.stat_blocks,
+                )
         self.stats.num_centroids = int(self.centroids.shape[0])
         if need_codec:
             codes, _ = _kmeans._assign_chunked(sample, self.centroids)
@@ -237,11 +244,15 @@ class StreamingIndexBuilder:
             nbits=self.codec.nbits,
             ivf_list_cap=self.ivf_list_cap,
         )
+        from repro.obs.trace import get_tracer
+
+        tracer = get_tracer()
         n_chunks = 0
         for payload, doc_lens in stream.chunks():
-            codes, packed = self._quantize_chunk(stream, payload)
-            assembler.add_chunk(codes, packed, doc_lens)
-            n_chunks += 1
+            with tracer.span("build.quantize_chunk", chunk=n_chunks):
+                codes, packed = self._quantize_chunk(stream, payload)
+                assembler.add_chunk(codes, packed, doc_lens)
+                n_chunks += 1
         self.index = assembler.finish()
         self.stats.n_chunks = max(self.stats.n_chunks, n_chunks)
         if not self.stats.n_tokens:  # frozen-tables single-pass build

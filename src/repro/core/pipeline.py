@@ -43,6 +43,7 @@ from repro.constants import NEG
 from repro.core import residual_codec as rc
 from repro.core import scoring
 from repro.core.index import PlaidIndex
+from repro.obs.funnel import FunnelStats
 
 #: int32 key standing in for the -1 "padded slot" sentinel wherever a SORTED
 #: order is needed (pool construction): real pids < num_passages, so the max
@@ -110,7 +111,9 @@ def candidate_generation_batched(
     nprobe: int,
     candidate_cap: int,
     alive: jax.Array | None = None,
-) -> jax.Array:
+    *,
+    with_stats: bool = False,
+):
     """(B, K, nq) scores -> (B, candidate_cap) sorted unique pids, -1 pad.
 
     Identical per-lane semantics to ``plaid.candidate_generation`` (same
@@ -118,6 +121,11 @@ def candidate_generation_batched(
     live-index tombstone mask: dead pids are nulled BEFORE the
     ``candidate_cap`` truncation, so tombstoned passages never consume cap
     slots a rebuild's IVF would have given to live ones.
+
+    ``with_stats=True`` (the funnel-telemetry path) additionally returns a
+    per-lane ``(B,)`` count of the DISTINCT tombstoned passages the alive
+    mask removed (clamped at ``candidate_cap`` distinct dead pids — the
+    same static bound the live candidates get).
     """
     B = s_cq.shape[0]
     _, cids = jax.lax.top_k(jnp.swapaxes(s_cq, 1, 2), nprobe)  # (B, nq, np)
@@ -129,12 +137,24 @@ def candidate_generation_batched(
     valid = pos[None, None, :] < lens[..., None]
     idx = jnp.where(valid, idx, 0)
     pids = jnp.where(valid, index.ivf_pids[idx], -1)  # (B, nq*np, cap)
+    dead_pids = None
     if alive is not None:
         safe = jnp.where(pids >= 0, pids, 0)
+        dead = (pids >= 0) & ~alive[safe]
+        dead_pids = jnp.where(dead, safe, -1)  # raw pid where tombstoned
         pids = jnp.where((pids >= 0) & alive[safe], pids, -1)
-    return jax.vmap(
+    uniq = jax.vmap(
         functools.partial(jnp.unique, size=candidate_cap, fill_value=-1)
-    )(pids.reshape(B, -1))
+    )
+    candidates = uniq(pids.reshape(B, -1))
+    if not with_stats:
+        return candidates
+    if dead_pids is None:
+        alive_dropped = jnp.zeros(B, jnp.int32)
+    else:
+        uniq_dead = uniq(dead_pids.reshape(B, -1))
+        alive_dropped = (uniq_dead >= 0).sum(axis=1).astype(jnp.int32)
+    return candidates, alive_dropped
 
 
 # --------------------------------------------------------------------------
@@ -238,12 +258,20 @@ def run_pipeline_impl(
     *,
     params,  # plaid.SearchParams (static; t_cs field ignored)
     diag: bool = False,
+    funnel: bool = False,  # append an obs.FunnelStats aux output (static
+    # flag: one extra compile the first time it is flipped, zero after)
     interpret: bool | None = None,  # Pallas mode; None = platform default
     alive: jax.Array | None = None,  # (Nd,) bool; False = tombstoned passage
 ):
     """Unjitted pipeline body — composable under ``shard_map`` / outer jits
     (``engine_sharded`` runs this per shard).  Callers outside a tracing
     context use ``run_pipeline``.
+
+    ``funnel=True`` appends a :class:`repro.obs.funnel.FunnelStats` pytree
+    of per-lane ``(B,)`` candidate counts at every funnel stage — cheap
+    in-graph reductions over tensors the pipeline already materializes, so
+    the instrumented program keeps the single stage-1 dot and the
+    zero-retrace discipline (guarded in ``tests/test_obs.py``).
 
     ``alive`` is the live-index tombstone mask (``repro.live``): dead
     passages are nulled inside stage-1 candidate generation, BEFORE the
@@ -273,9 +301,20 @@ def run_pipeline_impl(
     s_cq = stage1_scores_batched(
         index, qs, p.score_dtype, p.stage1_dtype
     )  # (B, K, nq)
-    candidates = candidate_generation_batched(
-        index, s_cq, p.nprobe, p.candidate_cap, alive
+    cand_out = candidate_generation_batched(
+        index, s_cq, p.nprobe, p.candidate_cap, alive, with_stats=funnel
     )  # (B, cap); tombstoned passages never reach stage 2
+    if funnel:
+        candidates, alive_dropped = cand_out
+        # distinct centroids the top-nprobe probe touched: recomputes the
+        # (tiny) stage-1 top_k, which XLA CSEs with candidate generation's
+        _, cids_f = jax.lax.top_k(jnp.swapaxes(s_cq, 1, 2), p.nprobe)
+        cids_sorted = jnp.sort(cids_f.reshape(B, -1), axis=1)
+        probed_centroids = (
+            1 + (cids_sorted[:, 1:] != cids_sorted[:, :-1]).sum(axis=1)
+        ).astype(jnp.int32)
+    else:
+        candidates = cand_out
 
     # ---- Stage 2: pruned centroid interaction over the shared gather
     # t_cs may be a scalar (one threshold for the batch) or a per-lane (B,)
@@ -369,18 +408,39 @@ def run_pipeline_impl(
     kk = min(p.k, n3)
     top_scores, idxk = jax.lax.top_k(exact, kk)  # (B, kk)
     top_pids = jnp.take_along_axis(final_pids, idxk, axis=1)
+    extras = []
     if diag:
-        diagnostics = dict(
-            stage1_candidates=(candidates >= 0).sum(axis=1),
-            stage2_kept_centroids=keep.sum(axis=1),
-            stage3_survivors=(final_pids >= 0).sum(axis=1),
+        extras.append(
+            dict(
+                stage1_candidates=(candidates >= 0).sum(axis=1),
+                stage2_kept_centroids=keep.sum(axis=1),
+                stage3_survivors=(final_pids >= 0).sum(axis=1),
+            )
         )
-        return top_scores, top_pids, diagnostics
+    if funnel:
+        extras.append(
+            FunnelStats(
+                probed_centroids=probed_centroids,
+                stage1_candidates=(candidates >= 0)
+                .sum(axis=1)
+                .astype(jnp.int32),
+                alive_dropped=alive_dropped,
+                stage2_kept_centroids=keep.sum(axis=1).astype(jnp.int32),
+                stage2_survivors=(cand2 >= 0).sum(axis=1).astype(jnp.int32),
+                stage3_survivors=(final_pids >= 0)
+                .sum(axis=1)
+                .astype(jnp.int32),
+                gathered_tokens=tok_valid.sum(axis=(1, 2)).astype(jnp.int32),
+            )
+        )
+    if extras:
+        return (top_scores, top_pids, *extras)
     return top_scores, top_pids
 
 
 run_pipeline_jit = jax.jit(
-    run_pipeline_impl, static_argnames=("params", "diag", "interpret")
+    run_pipeline_impl,
+    static_argnames=("params", "diag", "funnel", "interpret"),
 )
 
 
@@ -392,6 +452,7 @@ def run_pipeline(
     params,
     *,
     diag: bool = False,
+    funnel: bool = False,
     interpret: bool | None = None,
     alive: jax.Array | None = None,
 ):
@@ -406,6 +467,8 @@ def run_pipeline(
     thresholds in one coalesced serving batch).
     ``alive`` is an optional traced (num_passages,) tombstone mask (see
     ``run_pipeline_impl``); updating tombstones never recompiles.
+    ``funnel=True`` appends an ``obs.FunnelStats`` aux output (static flag:
+    one extra compile when first flipped, zero retraces after).
     """
     params = dataclasses.replace(params, t_cs=0.0)  # not a cache key
     return run_pipeline_jit(
@@ -415,6 +478,7 @@ def run_pipeline(
         jnp.asarray(t_cs, jnp.float32),
         params=params,
         diag=diag,
+        funnel=funnel,
         interpret=interpret,
         alive=alive,
     )

@@ -302,6 +302,7 @@ class PlaidEngine:
         *,
         t_cs: float | None = None,
         diag: bool = False,
+        funnel: bool = False,
         interpret: bool | None = None,
     ):
         """q: (nq, dim) one query matrix -> (scores (k,), pids (k,))."""
@@ -315,12 +316,19 @@ class PlaidEngine:
             t,
             self._pipeline_params(),
             diag=diag,
+            funnel=funnel,
             interpret=interpret,
         )
+        scores, pids, *extras = out
+        out_extras = []
         if diag:
-            scores, pids, diagnostics = out
-            return scores[0], pids[0], {k: v[0] for k, v in diagnostics.items()}
-        scores, pids = out
+            diagnostics = extras.pop(0)
+            out_extras.append({k: v[0] for k, v in diagnostics.items()})
+        if funnel:
+            fs = extras.pop(0)
+            out_extras.append(type(fs)(*(v[0] for v in fs)))
+        if out_extras:
+            return (scores[0], pids[0], *out_extras)
         return scores[0], pids[0]
 
     def search_batch(
@@ -330,6 +338,7 @@ class PlaidEngine:
         *,
         t_cs: float | None = None,
         diag: bool = False,
+        funnel: bool = False,
         interpret: bool | None = None,
     ):
         """qs: (B, nq, dim) -> (scores (B, k), pids (B, k))."""
@@ -343,6 +352,7 @@ class PlaidEngine:
             t,
             self._pipeline_params(),
             diag=diag,
+            funnel=funnel,
             interpret=interpret,
         )
 

@@ -80,23 +80,25 @@ class LiveExecutor:
         # and direct callers.  Execution runs OUTSIDE the lock — plans are
         # immutable closures over immutable arrays.
         self._lock = threading.Lock()
-        self._stacked_fns: dict = {}  # (bucket, interpret) -> compiled run
+        self._stacked_fns: dict = {}  # (bucket, interpret, funnel) -> run
         self._packed: dict = {}  # (seg_ids, bucket) -> (stacked, shared)
         self._base_shards = None  # dict(sid, idx, meta, per, fns)
         self._plan_key = None
         self._plan = None
 
     # ---- partition groups -------------------------------------------------
-    def _stacked_group(self, segments, seg_ids, offsets, alive, interpret):
+    def _stacked_group(
+        self, segments, seg_ids, offsets, alive, interpret, funnel
+    ):
         bucket = seg_exec.bucket_for(segments)
         pkey = (tuple(seg_ids), bucket)
         if pkey not in self._packed:
             self._packed[pkey] = seg_exec.pack_segments(segments, bucket)
         stacked, shared = self._packed[pkey]
-        fkey = (bucket, interpret)
+        fkey = (bucket, interpret, funnel)
         if fkey not in self._stacked_fns:
             self._stacked_fns[fkey] = seg_exec.make_stacked_search(
-                self.params, bucket, interpret=interpret
+                self.params, bucket, interpret=interpret, funnel=funnel
             )
         fn = self._stacked_fns[fkey]
         offs = seg_exec.pack_offsets(offsets, bucket)
@@ -107,7 +109,7 @@ class LiveExecutor:
 
         return group, pkey
 
-    def _sharded_base_group(self, base, base_sid, alive, interpret):
+    def _sharded_base_group(self, base, base_sid, alive, interpret, funnel):
         from repro.core.engine_sharded import shard_index
 
         st = self._base_shards
@@ -115,7 +117,8 @@ class LiveExecutor:
             idx_dict, meta, per = shard_index(base, self.n_shards)
             st = dict(sid=base_sid, idx=idx_dict, meta=meta, per=per, fns={})
             self._base_shards = st
-        if interpret not in st["fns"]:
+        fn_key = (interpret, funnel)
+        if fn_key not in st["fns"]:
             p = dataclasses.replace(
                 self.params,
                 # stage-1 bound is per shard: clamp to the shard's corpus
@@ -123,14 +126,15 @@ class LiveExecutor:
                     self.params.candidate_cap, max(st["per"], 2)
                 ),
             )
-            st["fns"][interpret] = shard_exec.make_sharded_search(
+            st["fns"][fn_key] = shard_exec.make_sharded_search(
                 self.mesh,
                 p,
                 docs_per_shard=st["per"],
                 static_meta=st["meta"],
                 interpret=interpret,
+                funnel=funnel,
             )
-        fn = st["fns"][interpret]
+        fn = st["fns"][fn_key]
         # base tombstones in the padded sharded pid space (pads are dead)
         padded = np.zeros(self.n_shards * st["per"], bool)
         mask = np.asarray(alive, bool)
@@ -144,34 +148,36 @@ class LiveExecutor:
         return group
 
     # ---- plan assembly ----------------------------------------------------
-    def plan_for(self, snapshot, interpret: bool | None = None):
+    def plan_for(
+        self, snapshot, interpret: bool | None = None, funnel: bool = False
+    ):
         """The (cached) ExecutionPlan for one LiveIndex snapshot."""
-        key = (snapshot.generation, interpret)
+        key = (snapshot.generation, interpret, funnel)
         with self._lock:
             if self._plan_key == key:
                 return self._plan
-            return self._build_plan(snapshot, interpret, key)
+            return self._build_plan(snapshot, interpret, funnel, key)
 
-    def _build_plan(self, snapshot, interpret, key):
+    def _build_plan(self, snapshot, interpret, funnel, key):
         groups, live_pkeys = [], set()
         segs, sids = snapshot.segments, snapshot.seg_ids
         if self.mesh is not None:
             groups.append(
                 self._sharded_base_group(
-                    segs[0], sids[0], snapshot.alive[0], interpret
+                    segs[0], sids[0], snapshot.alive[0], interpret, funnel
                 )
             )
         else:
             g, pkey = self._stacked_group(
                 segs[:1], sids[:1], snapshot.offsets[:1],
-                snapshot.alive[:1], interpret,
+                snapshot.alive[:1], interpret, funnel,
             )
             groups.append(g)
             live_pkeys.add(pkey)
         if len(segs) > 1:
             g, pkey = self._stacked_group(
                 segs[1:], sids[1:], snapshot.offsets[1:],
-                snapshot.alive[1:], interpret,
+                snapshot.alive[1:], interpret, funnel,
             )
             groups.append(g)
             live_pkeys.add(pkey)
@@ -180,26 +186,33 @@ class LiveExecutor:
         self._packed = {
             k: v for k, v in self._packed.items() if k in live_pkeys
         }
-        plan = ExecutionPlan(tuple(groups), self.params.k)
+        plan = ExecutionPlan(tuple(groups), self.params.k, funnel=funnel)
         self._plan_key, self._plan = key, plan
         return plan
 
     # ---- search -----------------------------------------------------------
     def search_batch(
-        self, qs, q_masks=None, *, t_cs=None, interpret: bool | None = None
+        self, qs, q_masks=None, *, t_cs=None,
+        interpret: bool | None = None, funnel: bool = False,
     ):
-        """qs: (B, nq, dim) -> ((B, k) scores, (B, k) global pids)."""
+        """qs: (B, nq, dim) -> ((B, k) scores, (B, k) global pids[,
+        merged obs.FunnelStats when ``funnel=True``])."""
         if q_masks is None:
             q_masks = jnp.ones(qs.shape[:2], jnp.float32)
         t = self.params.t_cs if t_cs is None else t_cs
         snapshot = self.live.snapshot()
-        plan = self.plan_for(snapshot, interpret)
+        plan = self.plan_for(snapshot, interpret, funnel)
         return plan.search_batch(qs, q_masks, t)
 
-    def search(self, q, q_mask=None, *, t_cs=None, interpret=None):
+    def search(self, q, q_mask=None, *, t_cs=None, interpret=None,
+               funnel: bool = False):
         """q: (nq, dim) -> ((k,), (k,)).  B=1 squeeze of the batch path."""
         mask = None if q_mask is None else q_mask[None]
-        scores, pids = self.search_batch(
-            q[None], mask, t_cs=t_cs, interpret=interpret
+        out = self.search_batch(
+            q[None], mask, t_cs=t_cs, interpret=interpret, funnel=funnel
         )
+        scores, pids, *aux = out
+        if funnel:
+            fs = aux[0]
+            return scores[0], pids[0], type(fs)(*(v[0] for v in fs))
         return scores[0], pids[0]

@@ -27,8 +27,11 @@ from typing import Callable, Sequence
 import jax.numpy as jnp
 
 from repro.distributed import topk as dtopk
+from repro.obs import funnel as funnel_mod
 
-#: A partition group: (qs, q_masks, t_cs) -> ((B, k) scores, (B, k) global pids)
+#: A partition group: (qs, q_masks, t_cs) -> ((B, k) scores, (B, k) global
+#: pids[, obs.FunnelStats]) — the aux funnel output is present iff the
+#: plan was built with ``funnel=True`` (the groups bake the flag in).
 PartitionGroup = Callable
 
 
@@ -38,13 +41,24 @@ class ExecutionPlan:
 
     groups: Sequence[PartitionGroup]
     k: int
+    #: When True every group returns a third ``obs.FunnelStats`` output and
+    #: ``search_batch`` merges them (doc-space counts add across groups —
+    #: partitions hold disjoint documents — centroid-space counts max).
+    funnel: bool = False
 
     def search_batch(self, qs, q_masks, t_cs):
         """qs (B, nq, dim), q_masks (B, nq), t_cs traced scalar -> (B, k)."""
         t = jnp.asarray(t_cs, jnp.float32)
         parts = [g(qs, q_masks, t) for g in self.groups]
+        fstats = (
+            funnel_mod.merge([p[2] for p in parts]) if self.funnel else None
+        )
         if len(parts) == 1:
-            return parts[0]
-        scores = jnp.concatenate([s for s, _ in parts], axis=-1)
-        pids = jnp.concatenate([p for _, p in parts], axis=-1)
-        return dtopk.merge_topk(scores, pids, self.k)
+            scores, pids = parts[0][0], parts[0][1]
+        else:
+            scores = jnp.concatenate([p[0] for p in parts], axis=-1)
+            pids = jnp.concatenate([p[1] for p in parts], axis=-1)
+            scores, pids = dtopk.merge_topk(scores, pids, self.k)
+        if self.funnel:
+            return scores, pids, fstats
+        return scores, pids

@@ -32,6 +32,7 @@ from repro.constants import NEG
 from repro.core import pipeline, plaid
 from repro.core.index import PlaidIndex
 from repro.distributed import topk as dtopk
+from repro.obs import funnel as funnel_mod
 
 #: Centroid-space arrays shared by every segment (one frozen centroid space
 #: + codec per index lineage) — passed unstacked, vmap in_axes=None.
@@ -198,6 +199,7 @@ def make_stacked_search(
     bucket: SegmentBucket,
     *,
     interpret: bool | None = None,
+    funnel: bool = False,
 ):
     """ONE jit entry searching a whole segment bucket.
 
@@ -207,6 +209,11 @@ def make_stacked_search(
     shared merge (``merge_topk``, local case).  ``t_cs``, ``offsets`` and
     ``alive`` are traced — sweeps, adds-within-bucket and deletes reuse the
     compiled program (trace-count tested in ``tests/test_exec.py``).
+
+    ``funnel=True`` appends a merged ``obs.FunnelStats`` output: per-segment
+    stats reduce over the stacked axis inside the same jit (doc-space counts
+    sum — filler segments contribute zero by construction — and the
+    replicated centroid-space counts take the max).
     """
     # per-bucket clamp against the LARGEST segment's true passage count:
     # the same rule PlaidEngine applies per corpus, so a single-segment
@@ -220,23 +227,29 @@ def make_stacked_search(
 
     def body(seg_arrays, shared, qs, q_masks, t_cs, off, al):
         index = PlaidIndex(**seg_arrays, **shared, **meta)
-        s, pid = pipeline.run_pipeline_impl(
-            index, qs, q_masks, t_cs, params=p, interpret=interpret, alive=al
+        out = pipeline.run_pipeline_impl(
+            index, qs, q_masks, t_cs, params=p, interpret=interpret,
+            alive=al, funnel=funnel,
         )  # (B, kk) with kk = min(k, stage-3 keep)
+        s, pid, *aux = out
         if s.shape[1] < k:  # tiny bucket: pad its top-k to the plan-wide k
             pad = ((0, 0), (0, k - s.shape[1]))
             s = jnp.pad(s, pad, constant_values=NEG)
             pid = jnp.pad(pid, pad, constant_values=-1)
         pid = jnp.where(pid >= 0, pid + off, -1)
-        return s, pid
+        return (s, pid, *aux)
 
     def run(stacked, shared, qs, q_masks, t_cs, offsets, alive):
-        s, pid = jax.vmap(
+        out = jax.vmap(
             body, in_axes=(0, None, None, None, None, 0, 0)
         )(stacked, shared, qs, q_masks, t_cs, offsets, alive)  # (S, B, k)
+        s, pid, *aux = out
         S, B, _ = s.shape
         s = jnp.moveaxis(s, 0, 1).reshape(B, S * k)
         pid = jnp.moveaxis(pid, 0, 1).reshape(B, S * k)
-        return dtopk.merge_topk(s, pid, k)
+        merged = dtopk.merge_topk(s, pid, k)
+        if funnel:
+            return (*merged, funnel_mod.reduce_stacked(aux[0]))
+        return merged
 
     return jax.jit(run)

@@ -27,6 +27,7 @@ from repro.compat import shard_map
 from repro.core import pipeline
 from repro.core.index import PlaidIndex
 from repro.distributed import topk as dtopk
+from repro.obs import funnel as funnel_mod
 
 DOC_AXES = ("pod", "data", "model")  # flattened into one logical docs axis
 
@@ -99,8 +100,13 @@ def make_sharded_search(
     docs_per_shard: int,
     static_meta: dict | None = None,
     interpret: bool | None = None,
+    funnel: bool = False,
 ):
     """Returns jit-able ``search(index, qs, q_masks, t_cs, alive) -> (scores, pids)``.
+
+    ``funnel=True`` appends a mesh-merged ``obs.FunnelStats`` output:
+    doc-space counts ``psum`` over the mesh axis, centroid-space counts
+    (identical on every shard — centroids replicate) pass through.
 
     ``index`` holds the shard-stacked arrays (``shard_index`` layout): every
     doc-partitioned array has a leading global axis = n_shards * per-shard
@@ -130,19 +136,24 @@ def make_sharded_search(
         # The batch-first pipeline per shard: one C.Q^T matmul and one
         # shared candidate-token gather for the whole query batch (§Perf
         # S1) — the shard's centroid matrix streams from HBM once.
-        scores, pids = pipeline.run_pipeline_impl(
+        out = pipeline.run_pipeline_impl(
             index_local, qs, q_masks, t_cs, params=params, alive=alive,
-            interpret=interpret,
+            interpret=interpret, funnel=funnel,
         )  # (B, k) per shard
+        scores, pids, *aux = out
         pids = dtopk.local_to_global_pids(pids, axis, docs_per_shard)
         # the one shared merge, batched over B (gathers (B, k) tuples only)
-        return dtopk.merge_topk(scores, pids, params.k, axis_name=axis)
+        merged = dtopk.merge_topk(scores, pids, params.k, axis_name=axis)
+        if funnel:
+            return (*merged, funnel_mod.psum_partitions(aux[0], axis))
+        return merged
 
+    out_specs = (rep, rep, rep) if funnel else (rep, rep)
     search = shard_map(
         local_search,
         mesh=mesh,
         in_specs=(index_specs, rep, rep, rep, doc),
-        out_specs=(rep, rep),
+        out_specs=out_specs,
         check_rep=False,
     )
     n_total = n_doc_shards(mesh) * docs_per_shard

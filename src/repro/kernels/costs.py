@@ -28,7 +28,28 @@ _U8 = 1
 
 
 def _ceil_div(a: int, b: int) -> int:
-    return -(-a) // b
+    return -(-a // b)
+
+
+def decompress_residuals_cost(
+    *, n: int, pd: int, nbits: int, row_block: int = 256
+) -> dict:
+    """``kernels.decompress.decompress_residuals_pallas``: grid
+    (n/row_block,); packed rows stream, the (2^b, 1) weight table stays
+    resident across the grid.  No MXU work — the unpack/select chain is
+    pure VPU, so flops=0 (consistent with the module policy of counting
+    matmuls only)."""
+    blocks = _ceil_div(n, row_block)
+    vpb = 8 // nbits
+    hbm = pallas_block_traffic(
+        (blocks,),
+        in_specs=[
+            (row_block * pd * _U8, lambda i: (i, 0)),  # packed block
+            ((2**nbits) * _F32, lambda i: (0, 0)),  # weights (resident)
+        ],
+        out_specs=[(row_block * pd * vpb * _F32, lambda i: (i, 0))],
+    )
+    return dict(hbm_bytes=hbm, flops=0.0)
 
 
 def centroid_interaction_batched_cost(
@@ -149,3 +170,33 @@ def fused_stage345_cost(
     return gather_decompress_maxsim_cost(
         B=B, n3=n3, L=L, pd=pd, K=K, d=d, nq=nq, nbits=nbits
     )
+
+
+# --------------------------------------------------------------------------
+# Kernel <-> cost-record registry (completeness-linted in CI)
+# --------------------------------------------------------------------------
+#: Every ``pallas_call``-launching function in ``repro.kernels`` maps to the
+#: cost function modelling its traffic.  The single-query kernels share the
+#: batched model (they are its B=1 degenerate case — same grid per lane,
+#: same block specs).  ``tests/test_obs.py`` AST-scans the kernels package
+#: and fails when a new pallas_call site appears in neither table below:
+#: a kernel outside the traffic model is a kernel CI cannot gate.
+KERNEL_COSTS = {
+    "centroid_interaction_pallas": centroid_interaction_batched_cost,
+    "centroid_interaction_batched_pallas": centroid_interaction_batched_cost,
+    "decompress_residuals_pallas": decompress_residuals_cost,
+    "decompress_and_score_pallas": decompress_and_score_batched_cost,
+    "decompress_and_score_batched_pallas": decompress_and_score_batched_cost,
+    "gather_decompress_maxsim_pallas": gather_decompress_maxsim_cost,
+}
+
+#: Deliberately unmodelled pallas_call sites, each with its reason.  Adding
+#: a kernel here is an explicit, reviewed decision — the lint test prints
+#: the reason next to the exemption.
+UNMODELED_KERNELS = {
+    "flash_attention": (
+        "pedagogical online-softmax reference (repro.kernels."
+        "flash_attention); not launched by the retrieval pipeline, so no "
+        "BENCH record exists to gate"
+    ),
+}

@@ -120,24 +120,32 @@ class LiveRetriever:
         return self.index.compact()
 
     # ---- search ----------------------------------------------------------
-    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False):
-        req = _as_request(q, q_mask, t_cs, with_diagnostics)
+    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False,
+               with_funnel=False):
+        req = _as_request(q, q_mask, t_cs, with_diagnostics, with_funnel)
         _reject_diagnostics(req, self.backend_name)
         t = self.params.t_cs if req.t_cs is None else req.t_cs
         t0 = time.perf_counter()
-        out = self._engine.search(req.q, req.q_mask, t_cs=t)
+        out = self._engine.search(
+            req.q, req.q_mask, t_cs=t, funnel=req.with_funnel
+        )
         return _finish(
-            out, backend=self.backend_name, k=self.params.k, t_cs=t, t0=t0
+            out, backend=self.backend_name, k=self.params.k, t_cs=t, t0=t0,
+            funnel=req.with_funnel,
         )
 
-    def search_batch(self, qs, q_masks=None, *, t_cs=None, with_diagnostics=False):
-        req = _as_request(qs, q_masks, t_cs, with_diagnostics)
+    def search_batch(self, qs, q_masks=None, *, t_cs=None,
+                     with_diagnostics=False, with_funnel=False):
+        req = _as_request(qs, q_masks, t_cs, with_diagnostics, with_funnel)
         _reject_diagnostics(req, self.backend_name)
         t = self.params.t_cs if req.t_cs is None else req.t_cs
         t0 = time.perf_counter()
-        out = self._engine.search_batch(req.q, req.q_mask, t_cs=t)
+        out = self._engine.search_batch(
+            req.q, req.q_mask, t_cs=t, funnel=req.with_funnel
+        )
         return _finish(
-            out, backend=self.backend_name, k=self.params.k, t_cs=t, t0=t0
+            out, backend=self.backend_name, k=self.params.k, t_cs=t, t0=t0,
+            funnel=req.with_funnel,
         )
 
     # ---- introspection ---------------------------------------------------

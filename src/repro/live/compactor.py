@@ -66,7 +66,10 @@ class Compactor:
         return pid_map
 
     def _spill(self) -> None:
-        self.live.save(self.spill_path)
+        from repro.obs.trace import get_tracer
+
+        with get_tracer().span("live.compact.spill", path=self.spill_path):
+            self.live.save(self.spill_path)
         self._spill_pending = False
 
     # ---- background thread -----------------------------------------------

@@ -65,10 +65,12 @@ class LiveEngine:
         *,
         t_cs: float | None = None,
         interpret: bool | None = None,
+        funnel: bool = False,
     ):
-        """qs: (B, nq, dim) -> (scores (B, k), global pids (B, k))."""
+        """qs: (B, nq, dim) -> (scores (B, k), global pids (B, k)[,
+        merged obs.FunnelStats when ``funnel=True``])."""
         return self._exec.search_batch(
-            qs, q_masks, t_cs=t_cs, interpret=interpret
+            qs, q_masks, t_cs=t_cs, interpret=interpret, funnel=funnel
         )
 
     def search(
@@ -78,6 +80,9 @@ class LiveEngine:
         *,
         t_cs: float | None = None,
         interpret: bool | None = None,
+        funnel: bool = False,
     ):
         """q: (nq, dim) -> (scores (k,), pids (k,)).  B=1 squeeze of batch."""
-        return self._exec.search(q, q_mask, t_cs=t_cs, interpret=interpret)
+        return self._exec.search(
+            q, q_mask, t_cs=t_cs, interpret=interpret, funnel=funnel
+        )

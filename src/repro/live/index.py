@@ -206,21 +206,31 @@ class LiveIndex:
         — it only reads the frozen centroid/codec tables, which every
         segment shares — so queries and deletes proceed during encode.
         """
-        seg = build_delta_segment(doc_embeddings, self.base, doc_lens=doc_lens)
-        with self._lock:
-            start = self.num_passages
-            self._segments.append(seg)
-            self._seg_ids.append(self._next_seg_id)
-            self._next_seg_id += 1
-            self._tombstones = np.concatenate(
-                [self._tombstones, np.zeros(seg.num_passages, bool)]
+        from repro.obs.trace import get_tracer
+
+        with get_tracer().span(
+            "live.add_passages", n_docs=len(doc_embeddings)
+        ):
+            seg = build_delta_segment(
+                doc_embeddings, self.base, doc_lens=doc_lens
             )
-            self._bump()
+            with self._lock:
+                start = self.num_passages
+                self._segments.append(seg)
+                self._seg_ids.append(self._next_seg_id)
+                self._next_seg_id += 1
+                self._tombstones = np.concatenate(
+                    [self._tombstones, np.zeros(seg.num_passages, bool)]
+                )
+                self._bump()
         return np.arange(start, start + seg.num_passages, dtype=np.int64)
 
     def delete(self, pids) -> int:
         """Tombstone global pids; returns how many were newly deleted."""
+        from repro.obs.trace import get_tracer
+
         pids = np.unique(np.atleast_1d(np.asarray(pids, np.int64)))
+        get_tracer().instant("live.delete", n_pids=int(pids.size))
         with self._lock:
             n = self.num_passages
             if pids.size and (pids.min() < 0 or pids.max() >= n):
@@ -244,6 +254,8 @@ class LiveIndex:
         as deltas, deletes issued during the merge are re-applied to the
         new base).  Concurrent ``compact`` calls serialize.
         """
+        from repro.obs.trace import get_tracer
+
         with self._compact_lock:  # one merge at a time; index stays usable
             with self._lock:
                 snap_segments = list(self._segments)
@@ -251,7 +263,12 @@ class LiveIndex:
             n_old = int(sum(s.num_passages for s in snap_segments))
 
             # the expensive part: no index lock held
-            new_base, pid_map = compact_segments(snap_segments, snap_tomb)
+            with get_tracer().span(
+                "live.compact.merge",
+                n_segments=len(snap_segments),
+                n_passages=n_old,
+            ):
+                new_base, pid_map = compact_segments(snap_segments, snap_tomb)
 
             with self._lock:
                 # only appends/deletes can have happened (compactions are
@@ -281,6 +298,9 @@ class LiveIndex:
                     [base_tomb, self._tombstones[n_old:]]
                 )
                 self._bump()
+            get_tracer().instant(
+                "live.compact.swap", generation=self._generation
+            )
         return full_map
 
     # ---- search-side view ------------------------------------------------

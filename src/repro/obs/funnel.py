@@ -1,0 +1,116 @@
+"""FunnelStats: in-graph per-query candidate counts through the PLAID funnel.
+
+The paper's whole argument is a funnel narrative — millions of passages in,
+``nprobe``-selected centroids, a pruned centroid-interaction survivor set
+at ``t_cs``, ``ndocs`` finalists, final top-k — and until now the repo
+could only see it through the engine-local ``diag`` dict.  ``FunnelStats``
+is the production version: a pytree of cheap in-graph reductions (a few
+``sum``/``max`` ops over tensors the pipeline already materializes) that
+rides through every execution layer — stacked segments, shard_map meshes,
+multi-group plans — with well-defined merge semantics, and surfaces on
+``retrieval.SearchResult.funnel``.
+
+All fields are per-lane ``(B,)`` int32 counts:
+
+==========================  ===============================================
+``probed_centroids``        distinct centroids the lane's top-``nprobe``
+                            probe selected (<= nq*nprobe)
+``stage1_candidates``       unique candidate passages out of the IVF walk
+``alive_dropped``           distinct tombstoned passages the alive mask
+                            removed BEFORE the candidate cap
+``stage2_kept_centroids``   centroids surviving the ``t_cs`` prune
+``stage2_survivors``        passages surviving stage-2 top-``ndocs``
+``stage3_survivors``        finalists entering exact rescoring
+``gathered_tokens``         doc tokens fetched by the shared gather
+==========================  ===============================================
+
+Merge semantics (the part that must be right for partitioned execution):
+documents are partitioned, centroids are replicated — so the doc-space
+counts ADD across partitions while the centroid-space counts are identical
+per partition and merge by MAX (summing them would count the one shared
+centroid space once per shard).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FunnelStats(NamedTuple):
+    """Per-lane (B,) counts at each funnel stage.  A NamedTuple, so it is
+    a jax pytree for free: it jits, vmaps, shard_maps and psums as-is."""
+
+    probed_centroids: Any
+    stage1_candidates: Any
+    alive_dropped: Any
+    stage2_kept_centroids: Any
+    stage2_survivors: Any
+    stage3_survivors: Any
+    gathered_tokens: Any
+
+
+#: Doc-space counts: partitions hold disjoint documents -> counts ADD.
+ADDITIVE_FIELDS = (
+    "stage1_candidates",
+    "alive_dropped",
+    "stage2_survivors",
+    "stage3_survivors",
+    "gathered_tokens",
+)
+#: Centroid-space counts: every partition shares ONE replicated centroid
+#: space, so per-partition values are identical -> merge by MAX.
+REPLICATED_FIELDS = ("probed_centroids", "stage2_kept_centroids")
+
+
+def _apply(stats: FunnelStats, additive, replicated) -> FunnelStats:
+    return FunnelStats(
+        **{f: additive(getattr(stats, f)) for f in ADDITIVE_FIELDS},
+        **{f: replicated(getattr(stats, f)) for f in REPLICATED_FIELDS},
+    )
+
+
+def reduce_stacked(stats: FunnelStats) -> FunnelStats:
+    """(S, B) stacked-segment fields -> merged (B,) (inside one jit)."""
+    return _apply(
+        stats,
+        additive=lambda a: a.sum(axis=0),
+        replicated=lambda a: a.max(axis=0),
+    )
+
+
+def psum_partitions(stats: FunnelStats, axis_name) -> FunnelStats:
+    """Mesh-axis merge inside ``shard_map``: psum the doc-space counts;
+    the replicated centroid-space counts pass through unchanged (they are
+    already identical on every device)."""
+    return _apply(
+        stats,
+        additive=lambda a: jax.lax.psum(a, axis_name),
+        replicated=lambda a: a,
+    )
+
+
+def merge(stats_list) -> FunnelStats:
+    """Cross-group merge (ExecutionPlan): elementwise add / max."""
+    stats_list = list(stats_list)
+    out = stats_list[0]
+    for s in stats_list[1:]:
+        out = FunnelStats(
+            **{
+                f: getattr(out, f) + getattr(s, f)
+                for f in ADDITIVE_FIELDS
+            },
+            **{
+                f: jnp.maximum(getattr(out, f), getattr(s, f))
+                for f in REPLICATED_FIELDS
+            },
+        )
+    return out
+
+
+def to_host(stats: FunnelStats) -> dict:
+    """Device pytree -> plain dict of host numpy arrays (SearchResult)."""
+    import numpy as np
+
+    return {f: np.asarray(getattr(stats, f)) for f in FunnelStats._fields}

@@ -76,11 +76,12 @@ def to_engine_params(p: SearchParams, impl: str = "ref") -> plaid_mod.SearchPara
     )
 
 
-def _as_request(q, q_mask, t_cs, with_diagnostics) -> SearchRequest:
+def _as_request(q, q_mask, t_cs, with_diagnostics, with_funnel=False):
     if isinstance(q, SearchRequest):
         return q
     return SearchRequest(
-        q=q, q_mask=q_mask, t_cs=t_cs, with_diagnostics=with_diagnostics
+        q=q, q_mask=q_mask, t_cs=t_cs, with_diagnostics=with_diagnostics,
+        with_funnel=with_funnel,
     )
 
 
@@ -92,25 +93,41 @@ def _reject_diagnostics(req: SearchRequest, backend: str) -> None:
         )
 
 
-def _finish(out, *, backend, k, t_cs, t0, diag_names=None) -> SearchResult:
+def _reject_funnel(req: SearchRequest, backend: str) -> None:
+    if getattr(req, "with_funnel", False):
+        raise ValueError(
+            f"with_funnel is not supported by backend {backend!r} "
+            "(funnel telemetry exists on the PLAID-pipeline backends)"
+        )
+
+
+def _finish(
+    out, *, backend, k, t_cs, t0, diag_names=None, funnel=False
+) -> SearchResult:
     """Block on device results and wrap them with serving metadata.
 
     Blocking is part of the facade contract: ``SearchResult.latency_ms``
     measures a completed search.  Callers that want async dispatch and
     device/host overlap (request pipelining) use the core engines, which
     return unblocked device arrays."""
+    scores, pids, *extras = out
+    diagnostics = funnel_stats = None
     if diag_names is not None:
-        scores, pids, diagnostics = out
+        diagnostics = extras.pop(0)
         diagnostics = {name: diagnostics[name] for name in diag_names}
-    else:
-        scores, pids = out
-        diagnostics = None
+    if funnel:
+        funnel_stats = extras.pop(0)
     jax.block_until_ready(pids)
     latency_ms = (time.perf_counter() - t0) * 1e3
     if diagnostics is not None:
         diagnostics = {
             name: np.asarray(v) if np.ndim(v) else int(v)
             for name, v in diagnostics.items()
+        }
+    if funnel_stats is not None:
+        funnel_stats = {
+            name: np.asarray(v) if np.ndim(v) else int(v)
+            for name, v in zip(type(funnel_stats)._fields, funnel_stats)
         }
     return SearchResult(
         scores=scores,
@@ -120,6 +137,7 @@ def _finish(out, *, backend, k, t_cs, t0, diag_names=None) -> SearchResult:
         latency_ms=latency_ms,
         t_cs=t_cs,
         diagnostics=diagnostics,
+        funnel=funnel_stats,
     )
 
 
@@ -160,12 +178,14 @@ class PlaidRetriever:
         registry.write_meta(path, self)
 
     # ---- search ----------------------------------------------------------
-    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False):
-        req = _as_request(q, q_mask, t_cs, with_diagnostics)
+    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False,
+               with_funnel=False):
+        req = _as_request(q, q_mask, t_cs, with_diagnostics, with_funnel)
         t = self.params.t_cs if req.t_cs is None else req.t_cs
         t0 = time.perf_counter()
         out = self._engine.search(
-            req.q, req.q_mask, t_cs=t, diag=req.with_diagnostics
+            req.q, req.q_mask, t_cs=t, diag=req.with_diagnostics,
+            funnel=req.with_funnel,
         )
         return _finish(
             out,
@@ -174,14 +194,17 @@ class PlaidRetriever:
             t_cs=t,
             t0=t0,
             diag_names=_DIAG_NAMES if req.with_diagnostics else None,
+            funnel=req.with_funnel,
         )
 
-    def search_batch(self, qs, q_masks=None, *, t_cs=None, with_diagnostics=False):
-        req = _as_request(qs, q_masks, t_cs, with_diagnostics)
+    def search_batch(self, qs, q_masks=None, *, t_cs=None,
+                     with_diagnostics=False, with_funnel=False):
+        req = _as_request(qs, q_masks, t_cs, with_diagnostics, with_funnel)
         t = self.params.t_cs if req.t_cs is None else req.t_cs
         t0 = time.perf_counter()
         out = self._engine.search_batch(
-            req.q, req.q_mask, t_cs=t, diag=req.with_diagnostics
+            req.q, req.q_mask, t_cs=t, diag=req.with_diagnostics,
+            funnel=req.with_funnel,
         )
         return _finish(
             out,
@@ -190,6 +213,7 @@ class PlaidRetriever:
             t_cs=t,
             t0=t0,
             diag_names=_DIAG_NAMES if req.with_diagnostics else None,
+            funnel=req.with_funnel,
         )
 
     # ---- introspection ---------------------------------------------------
@@ -267,18 +291,22 @@ class VanillaRetriever:
         indexer.save_index(path, self.index)
         registry.write_meta(path, self)
 
-    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False):
-        req = _as_request(q, q_mask, t_cs, with_diagnostics)
+    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False,
+               with_funnel=False):
+        req = _as_request(q, q_mask, t_cs, with_diagnostics, with_funnel)
         _reject_diagnostics(req, self.backend_name)
+        _reject_funnel(req, self.backend_name)
         t0 = time.perf_counter()
         out = self._engine.search(req.q, req.q_mask)
         return _finish(
             out, backend=self.backend_name, k=self.params.k, t_cs=None, t0=t0
         )
 
-    def search_batch(self, qs, q_masks=None, *, t_cs=None, with_diagnostics=False):
-        req = _as_request(qs, q_masks, t_cs, with_diagnostics)
+    def search_batch(self, qs, q_masks=None, *, t_cs=None,
+                     with_diagnostics=False, with_funnel=False):
+        req = _as_request(qs, q_masks, t_cs, with_diagnostics, with_funnel)
         _reject_diagnostics(req, self.backend_name)
+        _reject_funnel(req, self.backend_name)
         t0 = time.perf_counter()
         out = self._engine.search_batch(req.q, req.q_mask)
         return _finish(
@@ -343,15 +371,23 @@ class ShardedRetriever:
         self.docs_per_shard = docs_per_shard
         self.n_shards = n_shards
         p = self.params
-        self._search_fn = engine_sharded.make_sharded_search(
+        self._engine_params = dataclasses.replace(
+            to_engine_params(p),
+            # stage-1 bound is per shard: clamp to the shard's corpus
+            candidate_cap=min(p.candidate_cap, max(docs_per_shard, 2)),
+        )
+        # funnel flag -> compiled shard_map program; the funnel=True
+        # variant is built lazily on the first with_funnel request (one
+        # extra compile, never a retrace — funnel joins the cache key)
+        self._search_fns = {False: self._make_search_fn(funnel=False)}
+
+    def _make_search_fn(self, *, funnel: bool):
+        return engine_sharded.make_sharded_search(
             self.mesh,
-            dataclasses.replace(
-                to_engine_params(p),
-                # stage-1 bound is per shard: clamp to the shard's corpus
-                candidate_cap=min(p.candidate_cap, max(docs_per_shard, 2)),
-            ),
-            docs_per_shard=docs_per_shard,
-            static_meta=meta,
+            self._engine_params,
+            docs_per_shard=self.docs_per_shard,
+            static_meta=self._meta,
+            funnel=funnel,
         )
 
     @classmethod
@@ -393,34 +429,46 @@ class ShardedRetriever:
         registry.write_meta(path, self)
 
     # ---- search ----------------------------------------------------------
-    def _run(self, qs, q_masks, t_cs):
+    def _run(self, qs, q_masks, t_cs, funnel=False):
         if q_masks is None:
             q_masks = jnp.ones(qs.shape[:2], jnp.float32)
-        return self._search_fn(self._idx_dict, qs, q_masks, t_cs)
+        if funnel not in self._search_fns:
+            self._search_fns[funnel] = self._make_search_fn(funnel=funnel)
+        return self._search_fns[funnel](self._idx_dict, qs, q_masks, t_cs)
 
-    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False):
-        req = _as_request(q, q_mask, t_cs, with_diagnostics)
+    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False,
+               with_funnel=False):
+        req = _as_request(q, q_mask, t_cs, with_diagnostics, with_funnel)
         _reject_diagnostics(req, self.backend_name)
         t = self.params.t_cs if req.t_cs is None else req.t_cs
         mask = None if req.q_mask is None else req.q_mask[None]
         t0 = time.perf_counter()
-        scores, pids = self._run(req.q[None], mask, t)
+        scores, pids, *aux = self._run(
+            req.q[None], mask, t, funnel=req.with_funnel
+        )
+        out = (scores[0], pids[0])
+        if req.with_funnel:
+            fs = aux[0]
+            out = (*out, type(fs)(*(v[0] for v in fs)))
         return _finish(
-            (scores[0], pids[0]),
+            out,
             backend=self.backend_name,
             k=self.params.k,
             t_cs=t,
             t0=t0,
+            funnel=req.with_funnel,
         )
 
-    def search_batch(self, qs, q_masks=None, *, t_cs=None, with_diagnostics=False):
-        req = _as_request(qs, q_masks, t_cs, with_diagnostics)
+    def search_batch(self, qs, q_masks=None, *, t_cs=None,
+                     with_diagnostics=False, with_funnel=False):
+        req = _as_request(qs, q_masks, t_cs, with_diagnostics, with_funnel)
         _reject_diagnostics(req, self.backend_name)
         t = self.params.t_cs if req.t_cs is None else req.t_cs
         t0 = time.perf_counter()
-        out = self._run(req.q, req.q_mask, t)
+        out = self._run(req.q, req.q_mask, t, funnel=req.with_funnel)
         return _finish(
-            out, backend=self.backend_name, k=self.params.k, t_cs=t, t0=t0
+            out, backend=self.backend_name, k=self.params.k, t_cs=t, t0=t0,
+            funnel=req.with_funnel,
         )
 
     def describe(self) -> dict:

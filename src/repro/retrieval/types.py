@@ -140,6 +140,9 @@ class SearchRequest:
     t_cs: float | None = None  # dynamic override — never recompiles
     with_diagnostics: bool = False  # per-stage survivor counts (one extra
     # compile the first time it is flipped; static flag)
+    with_funnel: bool = False  # attach obs.FunnelStats funnel telemetry
+    # (static flag like with_diagnostics: one extra compile when first
+    # flipped, zero retraces after; merged across partitions/segments)
     # --- serving-tier per-request knobs (repro.serving) -----------------
     k: int | None = None  # truncate the result to k <= retriever params.k
     priority: str = "interactive"  # admission class: "interactive" | "batch"
@@ -166,6 +169,9 @@ class SearchResult:
     latency_ms: float | None = None
     t_cs: float | None = None  # the dynamic threshold this search ran with
     diagnostics: dict | None = None  # per-stage survivor counts (if requested)
+    funnel: dict | None = None  # obs.FunnelStats as host arrays (if
+    # requested via with_funnel): per-query candidate counts at every
+    # funnel stage, merged across partitions for sharded/live backends
 
     def __iter__(self):
         return iter((self.scores, self.pids))

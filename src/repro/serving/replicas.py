@@ -87,11 +87,18 @@ class ReplicaPool:
     def stats(self) -> dict:
         """Pool aggregate + per-replica breakdown."""
         per = [s.stats() for s in self.servers]
+        hits = sum(p.get("cache", {}).get("hits", 0) for p in per)
+        misses = sum(p.get("cache", {}).get("misses", 0) for p in per)
         agg = dict(
             n_replicas=len(self.servers),
             submitted=sum(p.get("submitted", 0) for p in per),
             completed=sum(p.get("completed", 0) for p in per),
+            expired=sum(p.get("expired", 0) for p in per),
+            shed=sum(p.get("shed", 0) for p in per),
+            cache_hits=hits,
+            cache_hit_rate=hits / (hits + misses) if hits + misses else 0.0,
             outstanding=[s.outstanding for s in self.servers],
+            queue_depth=sum(p.get("queue_depth", 0) for p in per),
             replicas=per,
         )
         return agg

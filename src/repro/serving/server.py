@@ -51,6 +51,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as metrics_mod
+from repro.obs import trace as trace_mod
 from repro.serving import buckets as buckets_mod
 from repro.serving.admission import (
     AdmissionQueue,
@@ -137,6 +139,8 @@ class BatchingServer:
         max_pending: int = 1024,
         cache_size: int | None = 1024,  # None/0 disables the result cache
         latency_window: int = 2048,
+        tracer: trace_mod.Tracer | None = None,
+        registry: metrics_mod.MetricsRegistry | None = None,
     ):
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
@@ -157,6 +161,15 @@ class BatchingServer:
         self._bucket_dispatches: dict[int, int] = {}
         self._warm: set = set()  # (bucket, generation) pairs already traced
         self._inflight = 0
+        # observability: span tracer + gauge registry.  Defaults are the
+        # process-wide singletons (zero plumbing); tests inject their own
+        # for isolation/determinism.
+        self.tracer = tracer if tracer is not None else trace_mod.get_tracer()
+        self.registry = (
+            registry if registry is not None else metrics_mod.get_registry()
+        )
+        self._g_queue_depth = self.registry.gauge("serving_queue_depth")
+        self._g_outstanding = self.registry.gauge("serving_outstanding")
         self.cache = (
             ResultCache(cache_size) if cache_size else None
         )
@@ -276,8 +289,9 @@ class BatchingServer:
 
         key = None
         if self.cache is not None:
-            key = query_key(q, t)
-            hit = self.cache.get(key, self._generation())
+            with self.tracer.span("serve.cache_lookup"):
+                key = query_key(q, t)
+                hit = self.cache.get(key, self._generation())
             if hit is not None:
                 scores, pids = hit
                 fut = ResultFuture()
@@ -305,6 +319,8 @@ class BatchingServer:
             future=ResultFuture(), cache_key=key,
         )
         self._q.put(pending, priority)  # QueueFull / ServerClosed
+        self._g_queue_depth.set(len(self._q))
+        self._g_outstanding.set(self.outstanding)
         return pending.future
 
     def search(self, q_emb, timeout: float = 30.0, **kw) -> RetrievalResult:
@@ -360,10 +376,17 @@ class BatchingServer:
         base["shed"] = self._q.shed
         base["rejected"] = self._q.rejected
         base["pending"] = len(self._q)
+        base["queue_depth"] = len(self._q)
+        base["outstanding"] = self.outstanding
+        self._g_queue_depth.set(base["queue_depth"])
+        self._g_outstanding.set(base["outstanding"])
         with self._lock:
             base["buckets"] = dict(sorted(self._bucket_dispatches.items()))
         if self.cache is not None:
-            base["cache"] = self.cache.stats()
+            c = self.cache.stats()
+            looked = c["hits"] + c["misses"]
+            c["hit_rate"] = c["hits"] / looked if looked else 0.0
+            base["cache"] = c
         return base
 
     def assert_zero_retrace(self) -> None:
@@ -462,14 +485,21 @@ class BatchingServer:
         from repro.core import pipeline as pipeline_mod
 
         n = len(batch)
+        dispatch_t0 = time.perf_counter()
+        for p in batch:
+            # the wait is only measurable once it ends: record retroactively
+            self.tracer.record(
+                "serve.queue_wait", p.t0, dispatch_t0 - p.t0
+            )
         bucket = (
             buckets_mod.bucket_batch_size(n, self.batch_size)
             if self.bucketed
             else self.batch_size
         )
-        qs, ts = buckets_mod.pad_batch(
-            [p.q for p in batch], [p.t_cs for p in batch], bucket
-        )
+        with self.tracer.span("serve.pad", bucket=bucket, n=n):
+            qs, ts = buckets_mod.pad_batch(
+                [p.q for p in batch], [p.t_cs for p in batch], bucket
+            )
         gen0 = self._generation()
         warm_key = (bucket, gen0)
         traces_before = pipeline_mod.trace_count()
@@ -479,9 +509,12 @@ class BatchingServer:
             # per-lane traced thresholds: one compiled program per bucket
             # serves every per-request t_cs combination
             kwargs["t_cs"] = jnp.asarray(ts)
-        out = self.retriever.search_batch(jnp.asarray(qs), **kwargs)
-        scores, pids = out  # SearchResult iterates as (scores, pids)
-        jax.block_until_ready(pids)
+        with self.tracer.span(
+            "serve.dispatch", bucket=bucket, n=n, generation=gen0
+        ):
+            out = self.retriever.search_batch(jnp.asarray(qs), **kwargs)
+            scores, pids = out  # SearchResult iterates as (scores, pids)
+            jax.block_until_ready(pids)
 
         with self._lock:
             if warm_key in self._warm:
@@ -500,19 +533,22 @@ class BatchingServer:
         # cache only if no mutation raced the batch: the snapshot the
         # search actually ran against is then unambiguously gen0
         gen_ok = self.cache is not None and self._generation() == gen0
-        for i, p in enumerate(batch):
-            if gen_ok and p.cache_key is not None:
-                self.cache.put(p.cache_key, gen0, scores[i], pids[i])
-            lat = now - p.t0
-            self._latencies.add(lat)
-            self._counters.inc("completed")
-            p.future.set(
-                RetrievalResult(
-                    pids=pids[i][: p.k],
-                    scores=scores[i][: p.k],
-                    latency_ms=lat * 1e3,
-                    t_cs=p.t_cs,
-                    k=p.k,
-                    cached=False,
+        with self.tracer.span("serve.truncate", n=n):
+            for i, p in enumerate(batch):
+                if gen_ok and p.cache_key is not None:
+                    self.cache.put(p.cache_key, gen0, scores[i], pids[i])
+                lat = now - p.t0
+                self._latencies.add(lat)
+                self._counters.inc("completed")
+                p.future.set(
+                    RetrievalResult(
+                        pids=pids[i][: p.k],
+                        scores=scores[i][: p.k],
+                        latency_ms=lat * 1e3,
+                        t_cs=p.t_cs,
+                        k=p.k,
+                        cached=False,
+                    )
                 )
-            )
+        self._g_queue_depth.set(len(self._q))
+        self._g_outstanding.set(len(self._q))  # this batch is done

@@ -1,87 +1,15 @@
-"""Serving statistics: bounded latency window + monotonic counters.
+"""Compatibility shim: the serving stats primitives moved to ``repro.obs``.
 
-The original server appended every request latency to an unbounded Python
-list — a slow memory leak on any long-running process, and ``stats()``
-recomputed percentiles over the full history, so p99 stopped reflecting
-*current* behaviour hours in.  :class:`LatencyWindow` replaces it with a
-fixed-capacity ring buffer: exact p50/p99 over the most recent ``capacity``
-requests (an O(window) percentile over a few thousand floats is
-microseconds), constant memory forever, plus an all-time count/sum so
-throughput accounting stays exact.
+``LatencyWindow`` (the exact-percentile ring buffer) and ``Counters`` (the
+named-counter bag, now STRICT by default — incrementing a name the bag was
+not constructed with raises instead of silently creating an unread
+counter) live in :mod:`repro.obs.metrics` alongside the rest of the
+metrics substrate (gauges, histograms, the process-wide registry and its
+Prometheus/JSON exporters).  Import from ``repro.obs`` in new code; this
+module keeps the historical ``repro.serving.stats`` names working.
 """
 from __future__ import annotations
 
-import threading
+from repro.obs.metrics import Counters, LatencyWindow
 
-import numpy as np
-
-
-class LatencyWindow:
-    """Fixed-capacity ring of recent latencies (seconds in, ms out).
-
-    ``summary()`` reports exact percentiles over the window and the
-    all-time ``n``/mean; thread-safe.
-    """
-
-    def __init__(self, capacity: int = 2048):
-        if capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {capacity}")
-        self.capacity = capacity
-        self._lock = threading.Lock()
-        self._buf = np.zeros(capacity, np.float64)
-        self._pos = 0  # next write slot
-        self._count = 0  # all-time observations
-        self._sum = 0.0  # all-time sum (exact mean over everything)
-
-    def add(self, seconds: float) -> None:
-        with self._lock:
-            self._buf[self._pos] = seconds
-            self._pos = (self._pos + 1) % self.capacity
-            self._count += 1
-            self._sum += seconds
-
-    def extend(self, seconds_iter) -> None:
-        for s in seconds_iter:
-            self.add(s)
-
-    @property
-    def count(self) -> int:
-        with self._lock:
-            return self._count
-
-    def summary(self) -> dict:
-        """``{}`` before the first observation, else n / mean / p50 / p99
-        (mean is all-time; percentiles are exact over the window)."""
-        with self._lock:
-            n = self._count
-            if not n:
-                return {}
-            window = self._buf[: min(n, self.capacity)] * 1e3
-            mean_ms = self._sum / n * 1e3
-        return {
-            "n": n,
-            "window": int(window.shape[0]),
-            "mean_ms": float(mean_ms),
-            "p50_ms": float(np.percentile(window, 50)),
-            "p99_ms": float(np.percentile(window, 99)),
-        }
-
-
-class Counters:
-    """A tiny thread-safe named-counter bag (``inc`` / ``snapshot``)."""
-
-    def __init__(self, *names: str):
-        self._lock = threading.Lock()
-        self._c = {n: 0 for n in names}
-
-    def inc(self, name: str, by: int = 1) -> None:
-        with self._lock:
-            self._c[name] = self._c.get(name, 0) + by
-
-    def __getitem__(self, name: str) -> int:
-        with self._lock:
-            return self._c.get(name, 0)
-
-    def snapshot(self) -> dict:
-        with self._lock:
-            return dict(self._c)
+__all__ = ["Counters", "LatencyWindow"]

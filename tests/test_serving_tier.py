@@ -635,3 +635,80 @@ def test_result_future_timeout_raises_queue_empty():
         f.get(timeout=0.01)
     f.set("done")
     assert f.done() and f.get(timeout=0.01) == "done"
+
+
+# ---------------------------------------------------------------------------
+# observability: stats schema, gauges, spans
+# ---------------------------------------------------------------------------
+def test_stats_snapshot_schema_and_gauges(live_setup):
+    """The stats() contract the dashboards scrape: every legacy key plus
+    the queue-depth/outstanding gauges and the cache hit rate."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import Tracer
+
+    r, qs = live_setup
+    tracer, registry = Tracer(), MetricsRegistry()
+    srv = BatchingServer(
+        r, batch_size=4, max_wait_ms=1.0, tracer=tracer, registry=registry
+    )
+    try:
+        assert srv.stats() == {}  # legacy contract: empty until completion
+        srv.search(qs[0], timeout=60)
+        srv.search(qs[0], timeout=60)  # cache hit
+        st = srv.stats()
+        expected = {
+            # latency window
+            "n", "window", "mean_ms", "p50_ms", "p99_ms",
+            # counters
+            "submitted", "completed", "cache_hits", "expired", "errors",
+            "dispatches", "retraces",
+            # admission + dispatch shape
+            "shed", "rejected", "pending", "buckets",
+            # observability additions
+            "queue_depth", "outstanding", "cache",
+        }
+        assert expected <= set(st), expected - set(st)
+        # a result future resolves inside _dispatch, a beat before the
+        # dispatcher loop clears _inflight — poll the tiny race out
+        deadline = time.perf_counter() + 5.0
+        while srv.outstanding and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        st = srv.stats()
+        assert st["queue_depth"] == 0 and st["outstanding"] == 0
+        cache = st["cache"]
+        assert {"hits", "misses", "hit_rate", "size", "capacity"} <= set(cache)
+        assert cache["hits"] == 1
+        assert cache["hit_rate"] == pytest.approx(1 / 2)
+        # the injected registry carries the same numbers as gauges
+        snap = registry.snapshot()
+        assert snap["serving_queue_depth"]["value"] == 0.0
+        assert snap["serving_outstanding"]["value"] == 0.0
+        # every dispatch-path span fired at least once
+        names = {s.name for s in tracer.spans()}
+        assert {
+            "serve.queue_wait", "serve.pad", "serve.dispatch",
+            "serve.truncate", "serve.cache_lookup",
+        } <= names, names
+        # queue_wait is recorded retroactively from submit time: its start
+        # precedes the dispatch span's
+        qw = tracer.spans("serve.queue_wait")[0]
+        disp = tracer.spans("serve.dispatch")[0]
+        assert qw.ts <= disp.ts
+    finally:
+        srv.shutdown()
+
+
+def test_replica_pool_stats_aggregates_observability(live_setup):
+    r, qs = live_setup
+    pool = ReplicaPool([r], batch_size=4, max_wait_ms=1.0)
+    try:
+        pool.search(qs[0], timeout=60)
+        pool.search(qs[0], timeout=60)
+        st = pool.stats()
+        for key in ("cache_hits", "cache_hit_rate", "queue_depth",
+                    "expired", "shed"):
+            assert key in st, key
+        assert st["cache_hits"] == 1
+        assert 0.0 < st["cache_hit_rate"] <= 1.0
+    finally:
+        pool.shutdown()
