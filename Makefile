@@ -20,14 +20,16 @@ smoke:  ## quickest benchmark pipeline smoke (table3 only)
 
 bench-dry:  ## EVERY registered benchmark at dry scale (incl. live_ingest):
 	## catches benchmark registration breakage before merge.  CI passes
-	## BENCH_FLAGS="--json BENCH_dry.json --trace trace_dry.json" to upload
-	## the results + the Chrome-trace span export as artifacts.
+	## BENCH_FLAGS="--json BENCH_dry.json --trace trace_dry.json"; bare
+	## filenames land under the gitignored out/ directory, and CI uploads
+	## the results + the Chrome-trace span export from there.
 	$(PY) -m benchmarks.run --dry $(BENCH_FLAGS)
 
 bench-diff:  ## gate per-kernel hbm_bytes against the committed baseline
-	## (>15% growth, vanished kernels, or fused >= unfused all fail);
-	## CURRENT defaults to the bench-dry artifact.
-	$(PY) -m benchmarks.bench_diff BENCH_seed.json $(or $(CURRENT),BENCH_dry.json)
+	## (>15% growth, vanished kernels, fused >= unfused, or tiered
+	## transfer >= resident payload all fail); CURRENT defaults to the
+	## bench-dry artifact under out/.
+	$(PY) -m benchmarks.bench_diff BENCH_seed.json $(or $(CURRENT),out/BENCH_dry.json)
 
 # The GitHub workflow runs these three targets as PARALLEL jobs (tests /
 # multidevice / bench-dry); `make ci` remains the serial local equivalent.

@@ -10,6 +10,10 @@ Compares two ``benchmarks.run --json`` payloads and FAILS (exit 1) when:
   silently-dropped kernel is a regression, not an improvement);
 * a ``fused_vs_unfused_*`` record stops showing fused strictly below
   unfused (the megakernel's reason to exist);
+* a record carrying both ``tiered_transfer_bytes`` and
+  ``resident_payload_bytes`` stops showing the tiered per-batch
+  candidate-slice traffic strictly below the resident payload footprint
+  (the tiered storage tier's reason to exist);
 * the payloads' ``schema_version`` are incompatible (v1 and v2 compare
   fine — v2 only ADDED observability sections; anything else mismatched
   fails).
@@ -103,6 +107,26 @@ def diff(baseline: dict, current: dict, threshold: float = DEFAULT_THRESHOLD):
                 infos.append(
                     f"{name}: fused saves "
                     f"{(1 - f_b / u_b) * 100:.1f}% of unfused bytes"
+                )
+
+    # the tiered storage tier must move strictly fewer bytes per batch
+    # than the resident payload footprint it replaces — equality means
+    # the candidate-slice gather degenerated into a full-payload copy
+    for r in current.get("results", []):
+        if "tiered_transfer_bytes" in r and "resident_payload_bytes" in r:
+            t_b = float(r["tiered_transfer_bytes"])
+            res_b = float(r["resident_payload_bytes"])
+            name = f"{r['bench']}/{r['case']}"
+            if not t_b < res_b:
+                failures.append(
+                    f"{name}: tiered transfer bytes {t_b:.0f} are not "
+                    f"strictly below the resident payload footprint "
+                    f"{res_b:.0f}"
+                )
+            else:
+                infos.append(
+                    f"{name}: tiered moves {t_b / res_b * 100:.2f}% of "
+                    "the resident payload per batch"
                 )
 
     # informational: HLO-derived pipeline traffic drift (never fails)

@@ -14,7 +14,22 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
+
+#: Default directory for ``--json`` / ``--trace`` artifacts given as bare
+#: filenames — keeps generated output out of the repo root (``out/`` is
+#: gitignored).  Paths that already carry a directory are used as-is.
+OUT_DIR = "out"
+
+
+def _artifact_path(path: str | None) -> str | None:
+    if path is None:
+        return None
+    if not os.path.dirname(path):
+        path = os.path.join(OUT_DIR, path)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    return path
 
 #: Version of the ``--json`` payload layout.  Bump ONLY on breaking schema
 #: changes (renamed/removed keys); adding record fields is backward
@@ -39,6 +54,8 @@ BENCHES = [
     "live_ingest",  # streaming ingest + latency vs delta count + compaction
     "sharded_live",  # latency vs shard-count x delta-segment-count sweep
     "index_build",  # streaming vs monolithic build: throughput + host memory
+    "tiered_scale",  # beyond-HBM tiered storage: footprint ratio, per-batch
+    # candidate-slice transfer bytes (gated vs resident footprint), identity
 ]
 
 
@@ -62,11 +79,15 @@ def main() -> None:
     ap.add_argument("--dry", action="store_true",
                     help="tiny corpora / single trial: CI smoke run")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write results as machine-readable JSON")
+                    help="also write results as machine-readable JSON "
+                         "(bare filenames land under out/)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="export recorded spans as Chrome trace-event JSON "
-                         "(Perfetto-loadable)")
+                         "(Perfetto-loadable; bare filenames land under "
+                         "out/)")
     args = ap.parse_args()
+    args.json = _artifact_path(args.json)
+    args.trace = _artifact_path(args.trace)
 
     rows = []
     records = []

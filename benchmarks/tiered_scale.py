@@ -1,0 +1,208 @@
+"""Tiered beyond-HBM storage: footprint, transfer accounting, identity.
+
+The tentpole claim of the tiered index (``repro.core.tiered``): a corpus
+whose token payload is many times larger than the device-memory budget
+serves from host mmaps with (a) bitwise rank-identical results to the
+resident engine and (b) per-batch host->device traffic equal to the
+finalists' candidate CSR slices ONLY — not the corpus.  This benchmark
+measures all three and emits the records the CI gate holds:
+
+* ``footprint`` — device-tier bytes vs the resident payload footprint;
+  ``beyond_hbm_ratio`` must clear 10x (the corpus genuinely does not fit).
+* ``transfer_*`` — measured ``TransferStats`` per batch, checked EXACTLY
+  against the analytic ``kernels.costs.tiered_transfer_cost`` model and
+  against an independent resident-pipeline recount of the finalist pool.
+  The record carries both ``tiered_transfer_bytes`` and
+  ``resident_payload_bytes``; ``bench_diff`` fails unless the former is
+  strictly below the latter.
+* ``identity`` — resident vs tiered ranks over the query set (bitwise).
+* ``latency`` — ms/query for resident vs tiered (the cost of the tier
+  boundary at equal results).
+
+nbits=4 here (not the repo-default 2): a 128-dim corpus then carries
+64 payload bytes/token against 4 device bytes/token, which is what makes
+the >=10x beyond-HBM ratio reachable even at ``--dry`` scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.common import queries, scaled, time_batched
+from repro import retrieval
+from repro.core import index as index_mod
+from repro.core import pipeline as pipeline_mod
+from repro.core import plaid as plaid_mod
+from repro.data import synthetic as syn
+from repro.exec.segments import pow2_bucket
+from repro.kernels import costs
+from repro.retrieval.backends import to_engine_params
+from repro.retrieval.types import SearchParams
+
+
+def _expected_slice_tokens(index, qs, q_masks, params):
+    """Independent recount of the candidate-slice pull: run stages 1-3 on
+    the RESIDENT index (same clamp rule, same ops as phase A) and size the
+    finalist pool's CSR slices host-side.  Returns (pool_docs, tokens, n3).
+    """
+    p = plaid_mod.clamp_params(to_engine_params(params), index.num_passages)
+    fn = jax.jit(
+        functools.partial(
+            pipeline_mod.select_finalists_impl,
+            params=p, keep_blocks=False,
+        )
+    )
+    final_pids, _, _, _ = fn(index, qs, q_masks, params.t_cs)
+    fp = np.asarray(final_pids)
+    pool = np.unique(fp[fp >= 0])
+    lens = np.asarray(index.doc_lens)[pool]
+    return int(pool.size), int(lens.sum()), int(fp.shape[1])
+
+
+def run(emit, dry: bool = False) -> None:
+    # floor=1024: below ~700 docs the fixed device-tier overhead (centroid
+    # tables) drags the beyond-HBM ratio under the 10x bar this benchmark
+    # exists to demonstrate
+    n_docs = scaled(8192, dry, floor=1024)
+    n_queries = scaled(128, dry, floor=16)
+    batch = 16
+    dim, nbits, n_centroids = 128, 4, 32
+
+    docs, _ = syn.embedding_corpus(n_docs, dim=dim, seed=0)
+    index = index_mod.build_index(
+        docs, num_centroids=n_centroids, nbits=nbits, kmeans_iters=4, seed=0
+    )
+    qs, _ = queries(docs, n_queries)
+    import jax.numpy as jnp
+
+    masks = jnp.ones(qs.shape[:2], jnp.float32)
+    params = SearchParams(
+        k=10, nprobe=4, t_cs=0.4, ndocs=256, candidate_cap=256
+    )
+
+    resident = retrieval.from_index(index, backend="plaid", params=params)
+    # configure the tightest budget that holds the device tier, then build
+    # the tiered backend UNDER that budget (the constructor enforces it)
+    from repro.core.tiered import tiered_from_index
+    from repro.retrieval.backends import TieredRetriever
+
+    budget = tiered_from_index(index).device_nbytes()
+    tiered = TieredRetriever(
+        index, params.replace(tiered=True), device_budget_bytes=budget
+    )
+    assert tiered.backend_name == "plaid-tiered"
+    ex = tiered._executor
+
+    # ---- footprint: the beyond-HBM claim ---------------------------------
+    device_bytes = ex.device_nbytes()
+    payload_bytes = ex.resident_payload_nbytes()
+    resident_bytes = ex.resident_nbytes()
+    model_payload = costs.resident_payload_bytes(
+        num_tokens=tiered.tiered.num_tokens,
+        pd=tiered.tiered.host_residuals.shape[1],
+    )
+    if payload_bytes != model_payload:
+        raise RuntimeError(
+            f"resident payload model mismatch: measured {payload_bytes} "
+            f"!= analytic {model_payload}"
+        )
+    ratio = resident_bytes / budget
+    emit(
+        "tiered_scale", "footprint",
+        n_docs=n_docs, num_tokens=tiered.tiered.num_tokens,
+        device_budget_bytes=budget,
+        device_bytes=device_bytes,
+        resident_index_bytes=resident_bytes,
+        resident_payload_bytes=payload_bytes,
+        beyond_hbm_ratio=round(ratio, 2),
+        beyond_10x=int(ratio >= 10.0),
+    )
+    if ratio < 10.0:
+        raise RuntimeError(
+            f"tiered_scale corpus is not beyond-HBM: the resident index is "
+            f"only {ratio:.1f}x the device budget (need >= 10x)"
+        )
+
+    # ---- rank identity + per-batch transfer accounting -------------------
+    mismatches = 0
+    for i in range(0, qs.shape[0], batch):
+        qb = qs[i : i + batch]
+        want = resident.search_batch(qb)
+        got = tiered.search_batch(qb)
+        if not (
+            np.array_equal(np.asarray(want.pids), np.asarray(got.pids))
+            and np.array_equal(
+                np.asarray(want.scores), np.asarray(got.scores)
+            )
+        ):
+            mismatches += 1
+
+        st = ex.engines[0].last_transfer
+        pool_docs, slice_tokens, n3 = _expected_slice_tokens(
+            index, qb, masks[: qb.shape[0]], params
+        )
+        pd = tiered.tiered.host_residuals.shape[1]
+        model = costs.tiered_transfer_cost(
+            pool_docs=pool_docs, slice_tokens=slice_tokens, pd=pd,
+            n3=n3, B=qb.shape[0],
+            p_cap=pow2_bucket(max(pool_docs, 1), lo=1),
+            t_cap=pow2_bucket(max(slice_tokens, 1), lo=index.doc_maxlen),
+        )
+        if (
+            st.pool_docs != pool_docs
+            or st.slice_tokens != slice_tokens
+            or st.slice_bytes != model["slice_bytes"]
+            or st.staged_bytes != model["staged_bytes"]
+        ):
+            raise RuntimeError(
+                "measured transfer diverged from the candidate-slice "
+                f"model: measured={st.as_dict()} expected pool={pool_docs} "
+                f"tokens={slice_tokens} model={model}"
+            )
+
+    emit(
+        "tiered_scale", "identity",
+        queries=int(qs.shape[0]), batch=batch,
+        mismatched_batches=mismatches,
+        rank_identical=int(mismatches == 0),
+    )
+    if mismatches:
+        raise RuntimeError(
+            f"tiered results diverged from resident on {mismatches} "
+            "batch(es)"
+        )
+
+    # one gated record: candidate slices strictly below residency.  The
+    # totals cover the whole query sweep; the resident side scales by the
+    # number of batches (it would re-pin the full payload footprint each
+    # batch only notionally — residency holds it ONCE, so gate the
+    # per-batch average against the one-time footprint).
+    tot = ex.transfer_totals
+    per_batch_slice = tot["slice_bytes"] / max(tot["batches"], 1)
+    per_batch_staged = tot["staged_bytes"] / max(tot["batches"], 1)
+    emit(
+        "tiered_scale", f"transfer_b{batch}",
+        batches=tot["batches"],
+        pool_docs=tot["pool_docs"],
+        slice_tokens=tot["slice_tokens"],
+        tiered_transfer_bytes=int(per_batch_slice),
+        staged_transfer_bytes=int(per_batch_staged),
+        resident_payload_bytes=payload_bytes,
+        transfer_fraction=round(per_batch_slice / payload_bytes, 5),
+    )
+
+    # ---- latency at equal results ----------------------------------------
+    ms_res = time_batched(
+        lambda q: resident.search_batch(q).pids, qs, batch=batch, trials=2
+    )
+    ms_tier = time_batched(
+        lambda q: tiered.search_batch(q).pids, qs, batch=batch, trials=2
+    )
+    emit(
+        "tiered_scale", "latency",
+        resident_ms_per_query=round(ms_res, 3),
+        tiered_ms_per_query=round(ms_tier, 3),
+        slowdown=round(ms_tier / ms_res, 3) if ms_res else None,
+    )

@@ -247,41 +247,36 @@ def decompress_score_batched(
 
 
 # --------------------------------------------------------------------------
-# The pipeline driver — one jit entry point for B >= 1
+# Stages 1-3 — finalist selection (everything BEFORE residual payloads)
 # --------------------------------------------------------------------------
-def run_pipeline_impl(
+def select_finalists_impl(
     index: PlaidIndex,
     qs: jax.Array,  # (B, nq, dim)
     q_masks: jax.Array,  # (B, nq)
-    t_cs: jax.Array,  # TRACED: scalar or per-lane (B,) vector — changing
-    # values never recompiles (switching scalar<->vector is one retrace)
+    t_cs: jax.Array,  # TRACED: scalar or per-lane (B,) vector
     *,
     params,  # plaid.SearchParams (static; t_cs field ignored)
     diag: bool = False,
-    funnel: bool = False,  # append an obs.FunnelStats aux output (static
-    # flag: one extra compile the first time it is flipped, zero after)
-    interpret: bool | None = None,  # Pallas mode; None = platform default
-    alive: jax.Array | None = None,  # (Nd,) bool; False = tombstoned passage
+    funnel: bool = False,
+    interpret: bool | None = None,
+    alive: jax.Array | None = None,
+    keep_blocks: bool = True,  # also return (codes4, tok_valid4) — the
+    # per-finalist candidate blocks the UNFUSED stage 4 consumes; the fused
+    # megakernel reads CSR windows directly, so fused callers pass False
 ):
-    """Unjitted pipeline body — composable under ``shard_map`` / outer jits
-    (``engine_sharded`` runs this per shard).  Callers outside a tracing
-    context use ``run_pipeline``.
+    """Stages 1-3 of the funnel: pick the (B, n3) finalist passages.
 
-    ``funnel=True`` appends a :class:`repro.obs.funnel.FunnelStats` pytree
-    of per-lane ``(B,)`` candidate counts at every funnel stage — cheap
-    in-graph reductions over tensors the pipeline already materializes, so
-    the instrumented program keeps the single stage-1 dot and the
-    zero-retrace discipline (guarded in ``tests/test_obs.py``).
+    This is the exact front of :func:`run_pipeline_impl`, split out because
+    it is the part that touches ONLY device-tier state — stage-1 centroid
+    scores, the IVF walk, and centroid-interaction over candidate codes.
+    The residual payloads are never read, which is what lets the tiered
+    engine (``core.tiered``) run this phase with host-resident payloads and
+    pull just the finalists' CSR slices afterwards.
 
-    ``alive`` is the live-index tombstone mask (``repro.live``): dead
-    passages are nulled inside stage-1 candidate generation, BEFORE the
-    ``candidate_cap`` truncation — a from-scratch rebuild of the surviving
-    corpus would never have produced them (its IVF simply doesn't contain
-    them), so every downstream stage sees the rebuild's candidates and
-    tombstones don't eat cap slots under delete-heavy load.
+    Returns ``(final_pids, codes4, tok_valid4, extras)`` where ``extras``
+    is a list holding the ``diag`` dict and/or ``FunnelStats`` when those
+    flags are set (both are pure stage-1..3 reductions).
     """
-    global _N_TRACES
-    _N_TRACES += 1
     p = params
     B = qs.shape[0]
     if p.impl == "pallas":
@@ -290,12 +285,8 @@ def run_pipeline_impl(
         interaction = functools.partial(
             K.centroid_interaction_batched, interpret=interpret
         )
-        decompress_score = functools.partial(
-            K.decompress_and_score_batched, interpret=interpret
-        )
     else:
         interaction = centroid_interaction_batched
-        decompress_score = None
 
     # ---- Stage 1: one batched C.Q^T + per-lane candidate generation
     s_cq = stage1_scores_batched(
@@ -338,7 +329,67 @@ def run_pipeline_impl(
     _, idx3 = jax.lax.top_k(approx3, n3)  # (B, n3)
     final_pids = jnp.take_along_axis(cand2, idx3, axis=1)  # (B, n3)
 
-    # ---- Stage 4: residual decompression + exact MaxSim
+    if keep_blocks:
+        codes4 = jnp.take_along_axis(codes3, idx3[..., None], axis=1)
+        tok_valid3 = jnp.take_along_axis(tok_valid, idx2[..., None], axis=1)
+        tok_valid4 = jnp.take_along_axis(tok_valid3, idx3[..., None], axis=1)
+    else:
+        codes4 = tok_valid4 = None
+
+    extras = []
+    if diag:
+        extras.append(
+            dict(
+                stage1_candidates=(candidates >= 0).sum(axis=1),
+                stage2_kept_centroids=keep.sum(axis=1),
+                stage3_survivors=(final_pids >= 0).sum(axis=1),
+            )
+        )
+    if funnel:
+        extras.append(
+            FunnelStats(
+                probed_centroids=probed_centroids,
+                stage1_candidates=(candidates >= 0)
+                .sum(axis=1)
+                .astype(jnp.int32),
+                alive_dropped=alive_dropped,
+                stage2_kept_centroids=keep.sum(axis=1).astype(jnp.int32),
+                stage2_survivors=(cand2 >= 0).sum(axis=1).astype(jnp.int32),
+                stage3_survivors=(final_pids >= 0)
+                .sum(axis=1)
+                .astype(jnp.int32),
+                gathered_tokens=tok_valid.sum(axis=(1, 2)).astype(jnp.int32),
+            )
+        )
+    return final_pids, codes4, tok_valid4, extras
+
+
+# --------------------------------------------------------------------------
+# Stage 4 — exact rescoring of the finalists + final top-k
+# --------------------------------------------------------------------------
+def exact_stage4_impl(
+    index: PlaidIndex,
+    qs: jax.Array,  # (B, nq, dim)
+    q_masks: jax.Array,  # (B, nq)
+    final_pids: jax.Array,  # (B, n3) pids INTO ``index``'s CSR arrays
+    codes4: jax.Array | None,  # (B, n3, L) — required when not params.fused
+    tok_valid4: jax.Array | None,  # (B, n3, L)
+    *,
+    params,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Residual decompression + exact MaxSim over the finalists.
+
+    The exact back of :func:`run_pipeline_impl`: the ONLY stage that reads
+    ``index.residuals``.  ``final_pids`` indexes ``index``'s CSR arrays —
+    the tiered engine passes a compacted candidate-slice index here with
+    pool-local positions, and because both paths feed the same bytes
+    through the same ops the scores are bitwise identical to the resident
+    engine's.  Returns raw (B, n3) scores (padding lanes NOT yet masked;
+    :func:`finalize_topk` applies the mask + top-k).
+    """
+    p = params
+    B, n3 = final_pids.shape
     if p.fused:
         # Fused stage 3-5 tail: gather + decompress + MaxSim in one kernel
         # straight off the CSR token arrays — the gathered residual block
@@ -377,9 +428,14 @@ def run_pipeline_impl(
                 doc_maxlen=index.doc_maxlen,
             )
     else:
-        codes4 = jnp.take_along_axis(codes3, idx3[..., None], axis=1)
-        tok_valid3 = jnp.take_along_axis(tok_valid, idx2[..., None], axis=1)
-        tok_valid4 = jnp.take_along_axis(tok_valid3, idx3[..., None], axis=1)
+        if p.impl == "pallas":
+            from repro.kernels import ops as K
+
+            decompress_score = functools.partial(
+                K.decompress_and_score_batched, interpret=interpret
+            )
+        else:
+            decompress_score = None
         res_blk, _ = scoring.gather_doc_tokens(
             index.residuals,
             index.doc_offsets,
@@ -404,35 +460,87 @@ def run_pipeline_impl(
                 index.weights,
                 nbits=index.nbits,
             )
+    return exact
+
+
+def finalize_topk(
+    exact: jax.Array,  # (B, n3) raw stage-4 scores
+    final_pids: jax.Array,  # (B, n3) GLOBAL pids (-1 pad)
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Mask padding lanes and take the final top-k over the finalists."""
     exact = jnp.where(final_pids >= 0, exact, NEG)
-    kk = min(p.k, n3)
+    kk = min(k, final_pids.shape[1])
     top_scores, idxk = jax.lax.top_k(exact, kk)  # (B, kk)
     top_pids = jnp.take_along_axis(final_pids, idxk, axis=1)
-    extras = []
-    if diag:
-        extras.append(
-            dict(
-                stage1_candidates=(candidates >= 0).sum(axis=1),
-                stage2_kept_centroids=keep.sum(axis=1),
-                stage3_survivors=(final_pids >= 0).sum(axis=1),
-            )
-        )
-    if funnel:
-        extras.append(
-            FunnelStats(
-                probed_centroids=probed_centroids,
-                stage1_candidates=(candidates >= 0)
-                .sum(axis=1)
-                .astype(jnp.int32),
-                alive_dropped=alive_dropped,
-                stage2_kept_centroids=keep.sum(axis=1).astype(jnp.int32),
-                stage2_survivors=(cand2 >= 0).sum(axis=1).astype(jnp.int32),
-                stage3_survivors=(final_pids >= 0)
-                .sum(axis=1)
-                .astype(jnp.int32),
-                gathered_tokens=tok_valid.sum(axis=(1, 2)).astype(jnp.int32),
-            )
-        )
+    return top_scores, top_pids
+
+
+# --------------------------------------------------------------------------
+# The pipeline driver — one jit entry point for B >= 1
+# --------------------------------------------------------------------------
+def run_pipeline_impl(
+    index: PlaidIndex,
+    qs: jax.Array,  # (B, nq, dim)
+    q_masks: jax.Array,  # (B, nq)
+    t_cs: jax.Array,  # TRACED: scalar or per-lane (B,) vector — changing
+    # values never recompiles (switching scalar<->vector is one retrace)
+    *,
+    params,  # plaid.SearchParams (static; t_cs field ignored)
+    diag: bool = False,
+    funnel: bool = False,  # append an obs.FunnelStats aux output (static
+    # flag: one extra compile the first time it is flipped, zero after)
+    interpret: bool | None = None,  # Pallas mode; None = platform default
+    alive: jax.Array | None = None,  # (Nd,) bool; False = tombstoned passage
+):
+    """Unjitted pipeline body — composable under ``shard_map`` / outer jits
+    (``engine_sharded`` runs this per shard).  Callers outside a tracing
+    context use ``run_pipeline``.
+
+    The body is the composition ``select_finalists_impl`` (stages 1-3) →
+    ``exact_stage4_impl`` (residual rescore) → ``finalize_topk`` — the same
+    ops in the same order as the historical monolithic pipeline, so outputs
+    stay bitwise identical.  The split exists so ``core.tiered`` can run
+    the two halves as separate programs with a host hop in between.
+
+    ``funnel=True`` appends a :class:`repro.obs.funnel.FunnelStats` pytree
+    of per-lane ``(B,)`` candidate counts at every funnel stage — cheap
+    in-graph reductions over tensors the pipeline already materializes, so
+    the instrumented program keeps the single stage-1 dot and the
+    zero-retrace discipline (guarded in ``tests/test_obs.py``).
+
+    ``alive`` is the live-index tombstone mask (``repro.live``): dead
+    passages are nulled inside stage-1 candidate generation, BEFORE the
+    ``candidate_cap`` truncation — a from-scratch rebuild of the surviving
+    corpus would never have produced them (its IVF simply doesn't contain
+    them), so every downstream stage sees the rebuild's candidates and
+    tombstones don't eat cap slots under delete-heavy load.
+    """
+    global _N_TRACES
+    _N_TRACES += 1
+    final_pids, codes4, tok_valid4, extras = select_finalists_impl(
+        index,
+        qs,
+        q_masks,
+        t_cs,
+        params=params,
+        diag=diag,
+        funnel=funnel,
+        interpret=interpret,
+        alive=alive,
+        keep_blocks=not params.fused,
+    )
+    exact = exact_stage4_impl(
+        index,
+        qs,
+        q_masks,
+        final_pids,
+        codes4,
+        tok_valid4,
+        params=params,
+        interpret=interpret,
+    )
+    top_scores, top_pids = finalize_topk(exact, final_pids, params.k)
     if extras:
         return (top_scores, top_pids, *extras)
     return top_scores, top_pids

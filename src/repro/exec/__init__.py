@@ -15,6 +15,8 @@ Modules:
   per segment-count bucket)
 * :mod:`repro.exec.live`     — plan builder/cache for mutable indexes,
   composing both axes (sharded base × stacked deltas)
+* :mod:`repro.exec.tiered`   — beyond-HBM partition group (device-resident
+  funnel + host-resident payloads, two-phase gather per partition)
 
 ``repro.core.engine_sharded`` and ``repro.live.engine`` are thin adapters
 over this package.
@@ -32,11 +34,14 @@ from repro.exec.segments import (
     pow2_bucket,
 )
 from repro.exec.sharded import make_sharded_search
+from repro.exec.tiered import TieredExecutor, partition_tiered
 
 __all__ = [
     "ExecutionPlan",
     "LiveExecutor",
     "mesh_for_shards",
+    "TieredExecutor",
+    "partition_tiered",
     "SegmentBucket",
     "bucket_for",
     "ceil_pow2",

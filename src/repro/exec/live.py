@@ -38,13 +38,26 @@ from repro.exec.plan import ExecutionPlan
 
 
 def mesh_for_shards(n_shards: int):
-    """A 1-axis ("data",) mesh over the first ``n_shards`` local devices."""
+    """A 1-axis ("data",) mesh over the first ``n_shards`` visible devices.
+
+    ``jax.devices()`` is the GLOBAL device set: after
+    ``launch.mesh.init_distributed`` it spans every participating host, so
+    the same sharded plans scale from one host's (possibly XLA-faked)
+    devices to a real multi-host deployment with no call-site change.
+    """
     devices = jax.devices()
     if n_shards > len(devices):
+        hint = (
+            "join more hosts (launch.mesh.init_distributed)"
+            if jax.process_count() > 1
+            else "run under XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=N, join more hosts via "
+            "launch.mesh.init_distributed,"
+        )
         raise ValueError(
             f"n_shards={n_shards} exceeds the {len(devices)} visible "
-            "devices; run under XLA_FLAGS=--xla_force_host_platform_"
-            "device_count=N or lower n_shards"
+            f"devices across {jax.process_count()} process(es); {hint} "
+            "or lower n_shards"
         )
     return jax.sharding.Mesh(
         np.asarray(devices[:n_shards]).reshape(n_shards), ("data",)

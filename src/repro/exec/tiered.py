@@ -1,0 +1,213 @@
+"""Tiered partitions under the plan abstraction: N engines, ONE merge.
+
+A tiered corpus larger than one device tier's budget splits into contiguous
+document-range partitions, each a self-contained :class:`core.tiered.
+TieredIndex` (its own device tier + host-payload slice views — the mmaps
+are SLICED, never copied).  Each partition runs the two-phase tiered
+pipeline locally; composition with the rest of the exec layer is exactly
+the :class:`repro.exec.plan.ExecutionPlan` contract:
+
+    partition groups (TieredEngine.search_batch, pids offset to global)
+        │ (B, k) score/pid tuples per partition
+        ▼
+    distributed.topk.merge_topk — the ONE merge, hierarchy-invariant
+
+so a tiered plan merges identically to the sharded/stacked plans and can
+sit next to them as groups of one outer plan.  Host-side phases serialize
+across partitions within a batch (one staging ring each), but each
+partition's H2D copy overlaps the NEXT partition's phase A — the same
+double-buffering the serving tier exploits across batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.constants import NEG
+from repro.core import plaid
+from repro.core.tiered import TieredBudgetError, TieredEngine, TieredIndex
+from repro.exec.plan import ExecutionPlan
+
+
+def partition_tiered(
+    tiered: TieredIndex, n_partitions: int
+) -> tuple[list[TieredIndex], list[int]]:
+    """Split a tiered index into contiguous doc-range partitions.
+
+    Returns ``(partitions, pid_offsets)``.  Host payloads are numpy/mmap
+    SLICES of the parent (zero copy); the per-partition device tier slices
+    the parent's device ``codes`` and rebuilds the centroid->pid IVF
+    restricted to the range (host-side bincount over the parent IVF — the
+    per-row pid order is preserved, so each partition's IVF is exactly
+    what a from-scratch build of that doc range against the shared
+    centroid space would produce).  Centroid-space arrays (centroids,
+    quantized tables, codec) are SHARED device references across
+    partitions — one copy in HBM regardless of partition count.
+    """
+    if n_partitions < 1:
+        raise ValueError(f"n_partitions must be >= 1, got {n_partitions}")
+    nd = tiered.num_passages
+    if n_partitions > nd:
+        raise ValueError(
+            f"cannot split {nd} passages into {n_partitions} partitions"
+        )
+    dev = tiered.device
+    h_offs = np.asarray(tiered.host_doc_offsets, np.int64)
+    bounds = np.linspace(0, nd, n_partitions + 1).astype(np.int64)
+    ivf_pids_h = np.asarray(dev.ivf_pids, np.int64)
+    ivf_lens_h = np.asarray(dev.ivf_lens, np.int64)
+    K = int(dev.num_centroids)
+    pair_cid = np.repeat(np.arange(K), ivf_lens_h)
+
+    parts: list[TieredIndex] = []
+    offsets: list[int] = []
+    for d0, d1 in zip(bounds[:-1], bounds[1:]):
+        d0, d1 = int(d0), int(d1)
+        t0, t1 = int(h_offs[d0]), int(h_offs[d1])
+        sel = (ivf_pids_h >= d0) & (ivf_pids_h < d1)
+        new_lens = np.bincount(pair_cid[sel], minlength=K).astype(np.int32)
+        new_offs = np.zeros(K + 1, np.int32)
+        np.cumsum(new_lens, out=new_offs[1:])
+        new_pids = (ivf_pids_h[sel] - d0).astype(np.int32)
+        if new_pids.size == 0:
+            new_pids = np.zeros(1, np.int32)
+        part_dev = dataclasses.replace(
+            dev,
+            codes=dev.codes[t0:t1],
+            doc_offsets=jnp.asarray(
+                (h_offs[d0 : d1 + 1] - t0).astype(np.int32)
+            ),
+            doc_lens=jnp.asarray(
+                np.asarray(tiered.host_doc_lens[d0:d1], np.int32)
+            ),
+            ivf_pids=jnp.asarray(new_pids),
+            ivf_offsets=jnp.asarray(new_offs),
+            ivf_lens=jnp.asarray(new_lens),
+            ivf_list_cap=int(max(new_lens.max(initial=1), 1)),
+        )
+        parts.append(
+            TieredIndex(
+                device=part_dev,
+                host_codes=tiered.host_codes[t0:t1],
+                host_residuals=tiered.host_residuals[t0:t1],
+                host_doc_offsets=np.asarray(
+                    h_offs[d0 : d1 + 1] - t0, np.int32
+                ),
+                host_doc_lens=np.asarray(
+                    tiered.host_doc_lens[d0:d1], np.int32
+                ),
+            )
+        )
+        offsets.append(d0)
+    return parts, offsets
+
+
+class TieredExecutor:
+    """Partitioned tiered search as an :class:`ExecutionPlan`.
+
+    ``device_budget_bytes`` bounds the SUM of the partitions' device
+    tiers — the quantity an operator actually provisions; the constructor
+    raises :class:`TieredBudgetError` when the corpus' device tier cannot
+    fit, instead of letting the first search OOM.
+    """
+
+    def __init__(
+        self,
+        tiered: TieredIndex,
+        params: plaid.SearchParams | None = None,
+        *,
+        n_partitions: int = 1,
+        device_budget_bytes: int | None = None,
+        interpret: bool | None = None,
+    ):
+        self.params = params or plaid.SearchParams()
+        if n_partitions == 1:
+            parts, offsets = [tiered], [0]
+        else:
+            parts, offsets = partition_tiered(tiered, n_partitions)
+        self.engines = [
+            TieredEngine(p, self.params, interpret=interpret) for p in parts
+        ]
+        self.offsets = offsets
+        if device_budget_bytes is not None:
+            got = self.device_nbytes()
+            if got > device_budget_bytes:
+                raise TieredBudgetError(
+                    f"device tier needs {got} bytes across "
+                    f"{len(parts)} partition(s) but the budget is "
+                    f"{device_budget_bytes}"
+                )
+        self.device_budget_bytes = device_budget_bytes
+        self._plans: dict[bool, ExecutionPlan] = {}
+
+    # -- accounting --------------------------------------------------------
+    def device_nbytes(self) -> int:
+        return sum(e.tiered.device_nbytes() for e in self.engines)
+
+    def resident_payload_nbytes(self) -> int:
+        return sum(e.tiered.resident_payload_nbytes() for e in self.engines)
+
+    def resident_nbytes(self) -> int:
+        return sum(e.tiered.resident_nbytes() for e in self.engines)
+
+    @property
+    def transfer_totals(self) -> dict:
+        totals: dict[str, int] = {}
+        for e in self.engines:
+            for key, v in e.transfer_totals.items():
+                totals[key] = totals.get(key, 0) + v
+        return totals
+
+    def last_transfer_bytes(self) -> tuple[int, int]:
+        """(slice_bytes, staged_bytes) summed over partitions, last batch."""
+        slices = staged = 0
+        for e in self.engines:
+            if e.last_transfer is not None:
+                slices += e.last_transfer.slice_bytes
+                staged += e.last_transfer.staged_bytes
+        return slices, staged
+
+    # -- the plan ----------------------------------------------------------
+    def _group(self, engine: TieredEngine, offset: int, funnel: bool):
+        k = self.params.k
+
+        def group(qs, q_masks, t):
+            out = engine.search_batch(qs, q_masks, t, funnel=funnel)
+            s, pid = out[0], out[1]
+            if s.shape[1] < k:  # tiny partition: pad to the plan-wide k
+                pad = ((0, 0), (0, k - s.shape[1]))
+                s = jnp.pad(s, pad, constant_values=NEG)
+                pid = jnp.pad(pid, pad, constant_values=-1)
+            pid = jnp.where(pid >= 0, pid + offset, -1)
+            return (s, pid, out[2]) if funnel else (s, pid)
+
+        return group
+
+    def plan_for(self, funnel: bool = False) -> ExecutionPlan:
+        plan = self._plans.get(funnel)
+        if plan is None:
+            plan = ExecutionPlan(
+                groups=[
+                    self._group(e, off, funnel)
+                    for e, off in zip(self.engines, self.offsets)
+                ],
+                k=self.params.k,
+                funnel=funnel,
+            )
+            self._plans[funnel] = plan
+        return plan
+
+    # -- search ------------------------------------------------------------
+    def search_batch(self, qs, q_masks=None, t_cs=None, *, funnel=False):
+        qs = jnp.asarray(qs)
+        if q_masks is None:
+            q_masks = jnp.ones(qs.shape[:2], jnp.float32)
+        t = self.params.t_cs if t_cs is None else t_cs
+        return self.plan_for(funnel).search_batch(qs, q_masks, t)
+
+    def search(self, q, q_mask=None, t_cs=None):
+        qm = None if q_mask is None else jnp.asarray(q_mask)[None]
+        scores, pids = self.search_batch(jnp.asarray(q)[None], qm, t_cs)
+        return scores[0], pids[0]

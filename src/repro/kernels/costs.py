@@ -173,6 +173,48 @@ def fused_stage345_cost(
 
 
 # --------------------------------------------------------------------------
+# Host->device transfer model (the tiered storage tier)
+# --------------------------------------------------------------------------
+def tiered_transfer_cost(
+    *, pool_docs: int, slice_tokens: int, pd: int, n3: int, B: int,
+    p_cap: int | None = None, t_cap: int | None = None,
+) -> dict:
+    """PCIe bytes for one tiered batch's candidate-slice pull
+    (``core.tiered.TieredEngine._gather_slices`` -> ``jax.device_put``).
+
+    Not a pallas kernel — the quantity is BUS traffic, not HBM traffic —
+    but the same shape-arithmetic discipline applies, so the measured
+    ``TransferStats`` must equal this model exactly (pinned in
+    ``tests/test_tiered.py`` and asserted per-run by
+    ``benchmarks.tiered_scale``):
+
+    * ``slice_bytes`` — the exact candidate CSR payload: one packed
+      residual row + one i32 code per slice token.  This is the number the
+      bench_diff gate holds strictly below the resident payload footprint.
+    * ``staged_bytes`` — what actually crosses after pow2 staging padding
+      (codes + residuals at ``t_cap``, offsets/lens at ``p_cap``) plus the
+      (B, n3) i32 pool-local position map.
+    """
+    slice_bytes = slice_tokens * (pd + _I32)
+    if p_cap is None or t_cap is None:
+        return dict(slice_bytes=slice_bytes)
+    staged_bytes = (
+        t_cap * (_I32 + pd)  # codes + residuals staging arrays
+        + (p_cap + 1) * _I32  # pool-local CSR offsets
+        + p_cap * _I32  # pool-local lens
+        + B * n3 * _I32  # pos_pids map
+    )
+    return dict(slice_bytes=slice_bytes, staged_bytes=staged_bytes)
+
+
+def resident_payload_bytes(*, num_tokens: int, pd: int) -> int:
+    """HBM the resident engine pins for the token payload — the footprint
+    tiering evicts, and the strict upper bound bench_diff enforces on the
+    per-batch ``slice_bytes``."""
+    return num_tokens * (pd + _I32)
+
+
+# --------------------------------------------------------------------------
 # Kernel <-> cost-record registry (completeness-linted in CI)
 # --------------------------------------------------------------------------
 #: Every ``pallas_call``-launching function in ``repro.kernels`` maps to the

@@ -29,6 +29,20 @@ fresh manifest and retries.
 v1 directories (flat ``arrays.npz`` + manifest, written by historical
 ``indexer.save_index``) remain readable and load as a single-base-segment
 index; unknown versions fail loudly.
+
+Tiered layout (``storage: "tiered"`` stamped in the manifest, mirroring
+the ``sharding`` stamp): the O(num_tokens) payload fields move OUT of
+``arrays.npz`` into raw per-field ``.npy`` files inside the segment dir
+(``codes.npy``, ``residuals.npy``, ...) so ``core.tiered.load_tiered`` can
+``np.load(..., mmap_mode="r")`` them with zero load-time densification.
+Resident loaders refuse tiered directories (and vice versa) — a silent
+cross-load would either densify the payload or mmap garbage.
+
+Read-path failures raise TYPED errors: :class:`PayloadMissingError`
+(subclasses ``FileNotFoundError`` so the save-race retry in
+``load_segmented`` still works), :class:`PayloadCorruptError` for
+truncated/unparseable array files, :class:`StaleGenerationError` when a
+caller demands a minimum generation the on-disk manifest predates.
 """
 from __future__ import annotations
 
@@ -36,6 +50,7 @@ import dataclasses
 import json
 import os
 import shutil
+import zipfile
 
 import numpy as np
 
@@ -51,6 +66,31 @@ ARRAY_FIELDS = tuple(
 STATIC_FIELDS = tuple(
     f.name for f in dataclasses.fields(PlaidIndex) if f.metadata.get("static")
 )
+
+#: O(num_tokens) payload fields a tiered segment stores as raw mmap-able
+#: ``.npy`` files instead of ``arrays.npz`` members.  ``codes`` and
+#: ``residuals`` are the search-time payloads; ``tok_pid`` / ``eivf_eids``
+#: ride along so a tiered directory still round-trips to a full index.
+TIERED_PAYLOAD_FIELDS = ("codes", "residuals", "tok_pid", "eivf_eids")
+
+
+class PayloadMissingError(FileNotFoundError):
+    """A file the manifest references does not exist on disk.
+
+    Subclasses ``FileNotFoundError`` deliberately: ``load_segmented``'s
+    save-race retry catches it and re-reads the fresh manifest; only a
+    file missing under a STABLE manifest surfaces to the caller.
+    """
+
+
+class PayloadCorruptError(ValueError):
+    """A referenced array file exists but cannot be parsed (truncated
+    write, bad magic, wrong dtype header) — never silently mmap garbage."""
+
+
+class StaleGenerationError(RuntimeError):
+    """The on-disk manifest's generation is older than the caller's
+    required minimum (e.g. a reader re-opening after a known flush)."""
 
 
 def segment_name(seg_id: int) -> str:
@@ -75,10 +115,26 @@ def _write_durable(path_tmp: str, path_final: str, write_fn) -> None:
     os.replace(path_tmp, path_final)
 
 
-def write_segment(seg_dir: str, seg: PlaidIndex) -> None:
-    """Write one segment's arrays; atomic w.r.t. concurrent readers."""
+def write_segment(
+    seg_dir: str, seg: PlaidIndex, *, storage: str = "resident"
+) -> None:
+    """Write one segment's arrays; atomic w.r.t. concurrent readers.
+
+    ``storage="tiered"`` splits the token payload fields out of
+    ``arrays.npz`` into raw ``.npy`` files (one per field) so readers can
+    memory-map them; each payload is durable before the npz that the
+    manifest will reference alongside it.
+    """
     os.makedirs(seg_dir, exist_ok=True)
     arrays = {f: np.asarray(getattr(seg, f)) for f in ARRAY_FIELDS}
+    if storage == "tiered":
+        for field in TIERED_PAYLOAD_FIELDS:
+            payload = arrays.pop(field)
+            _write_durable(
+                os.path.join(seg_dir, f"{field}.tmp.npy"),
+                os.path.join(seg_dir, f"{field}.npy"),
+                lambda f, payload=payload: np.save(f, payload),
+            )
     _write_durable(
         os.path.join(seg_dir, "arrays.tmp.npz"),
         os.path.join(seg_dir, "arrays.npz"),
@@ -86,13 +142,63 @@ def write_segment(seg_dir: str, seg: PlaidIndex) -> None:
     )
 
 
+def _load_npz_arrays(seg_dir: str) -> dict:
+    """``arrays.npz`` -> host dict, with TYPED read failures."""
+    npz_path = os.path.join(seg_dir, "arrays.npz")
+    try:
+        with np.load(npz_path) as data:
+            return {
+                f: np.asarray(data[f]) for f in ARRAY_FIELDS if f in data.files
+            }
+    except FileNotFoundError as e:
+        raise PayloadMissingError(
+            f"segment payload missing: {npz_path} (referenced by the "
+            "manifest but absent on disk)"
+        ) from e
+    except (zipfile.BadZipFile, ValueError, OSError, KeyError, EOFError) as e:
+        raise PayloadCorruptError(
+            f"segment payload unreadable: {npz_path}: {e} (truncated or "
+            "torn write — refusing to load garbage)"
+        ) from e
+
+
+def read_tiered_payload(seg_dir: str, field: str, *, mmap: bool = True):
+    """Open one tiered payload ``.npy`` memory-mapped (no densification)."""
+    path = os.path.join(seg_dir, f"{field}.npy")
+    try:
+        return np.load(path, mmap_mode="r" if mmap else None)
+    except FileNotFoundError as e:
+        raise PayloadMissingError(
+            f"tiered payload missing: {path} (manifest stamps storage="
+            "'tiered' but the payload file is absent)"
+        ) from e
+    except (ValueError, OSError, EOFError) as e:
+        raise PayloadCorruptError(
+            f"tiered payload unreadable: {path}: {e}"
+        ) from e
+
+
+def read_tiered_segment(seg_dir: str, static_meta: dict):
+    """One tiered segment -> ``(arrays, static, payloads)``.
+
+    ``arrays`` holds the device-tier (non-payload) fields as host numpy;
+    ``payloads`` maps the search-time payload fields (``codes``,
+    ``residuals``) to read-only mmaps.  The ride-along payloads
+    (``tok_pid``, ``eivf_eids``) are NOT opened — no search tier reads
+    them.
+    """
+    arrays = _load_npz_arrays(seg_dir)
+    payloads = {
+        f: read_tiered_payload(seg_dir, f) for f in ("codes", "residuals")
+    }
+    static = {k: static_meta[k] for k in STATIC_FIELDS}
+    return arrays, static, payloads
+
+
 def read_segment(seg_dir: str, static_meta: dict) -> PlaidIndex:
     import jax.numpy as jnp
 
-    with np.load(os.path.join(seg_dir, "arrays.npz")) as data:
-        arrays = {
-            f: jnp.asarray(data[f]) for f in ARRAY_FIELDS if f in data.files
-        }
+    arrays = {f: jnp.asarray(v) for f, v in _load_npz_arrays(seg_dir).items()}
     if "centroids_q" not in arrays:
         # Segments written before the quantized-centroid fields existed:
         # synthesize the int8 tables at load time.  quantize_centroids is a
@@ -146,6 +252,7 @@ def save_segmented(
     generation: int,
     index_uuid: str | None = None,
     extra_manifest: dict | None = None,
+    storage: str = "resident",
 ) -> None:
     """Write a v2 index directory (payloads first, manifest swap last).
 
@@ -157,20 +264,28 @@ def save_segmented(
 
     ``extra_manifest`` entries merge into the manifest dict (they must not
     collide with the reserved layout keys).
+
+    ``storage="tiered"`` stamps the manifest (mirroring the ``sharding``
+    stamp) and routes segment payloads to mmap-able ``.npy`` files — see
+    :func:`write_segment`.
     """
+    if storage not in ("resident", "tiered"):
+        raise ValueError(f"unknown storage layout: {storage!r}")
     os.makedirs(path, exist_ok=True)
     names = [segment_name(i) for i in seg_ids]
     already_on_disk: set[str] = set()
     if index_uuid is not None:
         try:
             existing = read_manifest(path)
-            if existing.get("index_uuid") == index_uuid:
+            if existing.get("index_uuid") == index_uuid and (
+                existing.get("storage", "resident") == storage
+            ):
                 already_on_disk = {s["name"] for s in existing["segments"]}
         except (FileNotFoundError, ValueError, KeyError):
             pass
     for name, seg in zip(names, segments):
         if name not in already_on_disk:
-            write_segment(os.path.join(path, name), seg)
+            write_segment(os.path.join(path, name), seg, storage=storage)
     ts_name = None
     if tombstones is not None and tombstones.any():
         ts_name = f"tombstones_{generation:06d}.npy"
@@ -184,10 +299,13 @@ def save_segmented(
     reserved = {
         "format_version", "generation", "index_uuid", "segments",
         "tombstones", "num_passages", "num_centroids", "dim", "nbits",
+        "storage",
     }
     clash = reserved & set(extra)
     if clash:
         raise ValueError(f"extra_manifest may not override {sorted(clash)}")
+    if storage != "resident":
+        extra["storage"] = storage
     manifest = dict(
         extra,
         format_version=FORMAT_VERSION,
@@ -224,7 +342,7 @@ def _collect_garbage(path: str, keep: set[str]) -> None:
             os.unlink(full)
 
 
-def load_segmented(path: str, _retries: int = 2):
+def load_segmented(path: str, _retries: int = 2, min_generation: int = 0):
     """Read a v1 or v2 index directory.
 
     Returns ``(segments, seg_ids, tombstones, generation, index_uuid)``;
@@ -232,17 +350,41 @@ def load_segmented(path: str, _retries: int = 2):
     bitmap (and no uuid).  If a concurrent save garbage-collects this
     reader's generation mid-read (clean ``FileNotFoundError``, see module
     docstring), the fresh manifest is re-read and the load retried.
+
+    ``min_generation`` rejects manifests older than a generation the
+    caller KNOWS was durably written (:class:`StaleGenerationError`) —
+    e.g. a restored-from-backup directory masquerading as current state.
     """
     try:
-        return _load_segmented_once(path)
+        return _load_segmented_once(path, min_generation)
     except FileNotFoundError:
+        # PayloadMissingError lands here too — a concurrent save GC'ing
+        # this reader's generation mid-read IS a missing payload; the
+        # typed error only surfaces once the manifest is stable across
+        # retries (then it is real data loss, not a race)
         if _retries <= 0:
             raise
-        return load_segmented(path, _retries=_retries - 1)
+        return load_segmented(
+            path, _retries=_retries - 1, min_generation=min_generation
+        )
 
 
-def _load_segmented_once(path: str):
+def _load_segmented_once(path: str, min_generation: int = 0):
     manifest = read_manifest(path)
+    storage = manifest.get("storage", "resident")
+    if storage != "resident":
+        raise ValueError(
+            f"index at {path!r} stamps storage={storage!r}; the resident "
+            "loader would densify (or garble) the payload — open tiered "
+            "directories via core.tiered.load_tiered / the "
+            "'plaid-tiered' backends"
+        )
+    if int(manifest.get("generation", 0)) < min_generation:
+        raise StaleGenerationError(
+            f"index at {path!r} is at generation "
+            f"{manifest.get('generation', 0)}, caller requires >= "
+            f"{min_generation}"
+        )
     if manifest.get("format_version", 1) == 1:
         seg = read_segment(path, manifest)  # flat arrays.npz next to manifest
         return [seg], [0], np.zeros(seg.num_passages, bool), 0, None

@@ -1,14 +1,21 @@
 """The static built-in backends behind the ``Retriever`` facade.
 
-================  =========================================================
-``vanilla``       ColBERTv2 baseline (embedding-level IVF, full padded
-                  decompression).  No dynamic parameters.
-``plaid``         PLAID 4-stage pipeline, reference (pure-jnp) kernels.
-``plaid-pallas``  Same pipeline through the Pallas kernels (interpret mode
-                  on CPU; Mosaic lowering on TPU).
-``plaid-sharded`` Document-sharded PLAID under ``shard_map`` (one shard per
-                  mesh device, small all-gather top-k merge).
-================  =========================================================
+====================  =====================================================
+``vanilla``           ColBERTv2 baseline (embedding-level IVF, full padded
+                      decompression).  No dynamic parameters.
+``plaid``             PLAID 4-stage pipeline, reference (pure-jnp) kernels.
+``plaid-pallas``      Same pipeline through the Pallas kernels (interpret
+                      mode on CPU; Mosaic lowering on TPU).
+``plaid-sharded``     Document-sharded PLAID under ``shard_map`` (one shard
+                      per mesh device, small all-gather top-k merge).
+``plaid-tiered``      Beyond-HBM PLAID: host-resident (mmap) token
+                      payloads, per-batch candidate-slice gather
+                      (``repro.core.tiered`` / ``repro.exec.tiered``).
+                      ``SearchParams(tiered=True)`` routes the plaid
+                      family here automatically.
+``plaid-tiered-pallas``  Tiered with the Pallas stage kernels (the fused
+                      megakernel runs over the compacted slice arrays).
+====================  =====================================================
 
 The mutable-corpus backends (``"live"`` / ``"live-pallas"`` /
 ``"live-sharded"`` / ``"live-sharded-pallas"``, implementing the
@@ -494,3 +501,157 @@ class ShardedRetriever:
             ),
             compile=dict(trace_count=plaid_mod.trace_count()),
         )
+
+
+# --------------------------------------------------------------------------
+# Tiered beyond-HBM PLAID
+# --------------------------------------------------------------------------
+@registry.register("plaid-tiered")
+class TieredRetriever:
+    """Beyond-HBM PLAID: device-resident funnel, host-resident payloads.
+
+    Wraps :class:`repro.exec.tiered.TieredExecutor` (two-phase gather per
+    partition, one shared top-k merge).  ``RetrieverConfig.n_shards`` sets
+    the partition count (same knob the sharded backends use — here the
+    partitions split the HOST tier, not a device mesh).  Results are
+    bitwise rank-identical to ``"plaid"`` on the same index; what changes
+    is residency: only finalists' CSR slices cross host->device per batch,
+    accounted in ``transfer_totals`` / ``last_transfer``.
+    """
+
+    impl = "ref"
+
+    def __init__(
+        self,
+        tiered,
+        params: SearchParams | None = None,
+        *,
+        n_partitions: int = 1,
+        device_budget_bytes: int | None = None,
+    ):
+        from repro.core import tiered as tiered_mod
+        from repro.exec.tiered import TieredExecutor
+
+        if not isinstance(tiered, tiered_mod.TieredIndex):
+            tiered = tiered_mod.tiered_from_index(tiered)
+        self.tiered = tiered
+        self.params = params or SearchParams()
+        self.n_partitions = max(int(n_partitions), 1)
+        self._executor = TieredExecutor(
+            tiered,
+            to_engine_params(self.params, self.impl),
+            n_partitions=self.n_partitions,
+            device_budget_bytes=device_budget_bytes,
+        )
+
+    # ---- construction ----------------------------------------------------
+    @classmethod
+    def build(cls, corpus_embs, cfg: RetrieverConfig, doc_lens=None):
+        return cls.from_index(_build_index(corpus_embs, cfg, doc_lens), cfg)
+
+    @classmethod
+    def from_index(cls, index, cfg: RetrieverConfig):
+        return cls(index, cfg.params, n_partitions=cfg.n_shards or 1)
+
+    @classmethod
+    def load(cls, path: str, params: SearchParams | None = None):
+        from repro.core import tiered as tiered_mod
+
+        return cls(tiered_mod.load_tiered(path), params)
+
+    def save(self, path: str) -> None:
+        from repro.core import tiered as tiered_mod
+
+        tiered_mod.save_tiered(path, self.tiered)
+        registry.write_meta(path, self)
+
+    # ---- transfer accounting (consumed by serving stats + benchmarks) ----
+    @property
+    def transfer_totals(self) -> dict:
+        return self._executor.transfer_totals
+
+    def last_transfer_bytes(self):
+        return self._executor.last_transfer_bytes()
+
+    # ---- search ----------------------------------------------------------
+    def search(self, q, q_mask=None, *, t_cs=None, with_diagnostics=False,
+               with_funnel=False):
+        req = _as_request(q, q_mask, t_cs, with_diagnostics, with_funnel)
+        _reject_diagnostics(req, self.backend_name)
+        t = self.params.t_cs if req.t_cs is None else req.t_cs
+        mask = None if req.q_mask is None else req.q_mask[None]
+        t0 = time.perf_counter()
+        scores, pids, *aux = self._executor.search_batch(
+            req.q[None], mask, t, funnel=req.with_funnel
+        )
+        out = (scores[0], pids[0])
+        if req.with_funnel:
+            fs = aux[0]
+            out = (*out, type(fs)(*(v[0] for v in fs)))
+        return _finish(
+            out,
+            backend=self.backend_name,
+            k=self.params.k,
+            t_cs=t,
+            t0=t0,
+            funnel=req.with_funnel,
+        )
+
+    def search_batch(self, qs, q_masks=None, *, t_cs=None,
+                     with_diagnostics=False, with_funnel=False):
+        req = _as_request(qs, q_masks, t_cs, with_diagnostics, with_funnel)
+        _reject_diagnostics(req, self.backend_name)
+        t = self.params.t_cs if req.t_cs is None else req.t_cs
+        t0 = time.perf_counter()
+        out = self._executor.search_batch(
+            req.q, req.q_mask, t, funnel=req.with_funnel
+        )
+        return _finish(
+            out, backend=self.backend_name, k=self.params.k, t_cs=t, t0=t0,
+            funnel=req.with_funnel,
+        )
+
+    # ---- introspection ---------------------------------------------------
+    def describe(self) -> dict:
+        from repro.core import tiered as tiered_mod
+
+        t = self.tiered
+        traces_a, traces_b = tiered_mod.trace_counts()
+        return dict(
+            backend=self.backend_name,
+            impl=self.impl,
+            static=self.params.static_dict(),
+            dynamic=self.params.dynamic_dict(),
+            static_fields=STATIC_FIELDS,
+            dynamic_fields=DYNAMIC_FIELDS,
+            storage=dict(
+                mode="tiered",
+                n_partitions=self.n_partitions,
+                device_bytes=self._executor.device_nbytes(),
+                resident_payload_bytes=(
+                    self._executor.resident_payload_nbytes()
+                ),
+                device_budget_bytes=self._executor.device_budget_bytes,
+                payload_itemsize=t.payload_itemsize,
+            ),
+            transfer=self.transfer_totals,
+            index=dict(
+                num_passages=t.num_passages,
+                num_tokens=t.num_tokens,
+                num_centroids=t.device.num_centroids,
+                dim=t.device.dim,
+                nbits=t.device.nbits,
+                doc_maxlen=t.device.doc_maxlen,
+            ),
+            compile=dict(
+                phase_a_traces=traces_a, phase_b_traces=traces_b
+            ),
+        )
+
+
+@registry.register("plaid-tiered-pallas")
+class TieredPallasRetriever(TieredRetriever):
+    """Tiered PLAID through the Pallas kernels — the fused megakernel's
+    scalar-prefetched CSR windows run over the compacted slice arrays."""
+
+    impl = "pallas"

@@ -49,6 +49,30 @@ def list_backends() -> list[str]:
     return sorted(_REGISTRY)
 
 
+#: ``SearchParams(tiered=True)`` re-routes the plaid family to its tiered
+#: (beyond-HBM) twin at construction time — the storage mode is a params
+#: decision, not a separate call-site backend string.
+_TIERED_BACKEND = {
+    "plaid": "plaid-tiered",
+    "plaid-pallas": "plaid-tiered-pallas",
+    "plaid-tiered": "plaid-tiered",
+    "plaid-tiered-pallas": "plaid-tiered-pallas",
+}
+
+
+def _resolve_tiered(cfg: RetrieverConfig) -> RetrieverConfig:
+    if not cfg.params.tiered:
+        return cfg
+    mapped = _TIERED_BACKEND.get(cfg.backend)
+    if mapped is None:
+        raise ValueError(
+            f"SearchParams(tiered=True) is only meaningful for the plaid "
+            f"family ({sorted(set(_TIERED_BACKEND))}); backend "
+            f"{cfg.backend!r} has no tiered storage mode"
+        )
+    return cfg.replace(backend=mapped) if mapped != cfg.backend else cfg
+
+
 def coerce_config(cfg: Any = None, **overrides) -> RetrieverConfig:
     """Accept RetrieverConfig | backend name | SearchParams | None."""
     if cfg is None:
@@ -72,13 +96,13 @@ def build(corpus_embs, cfg=None, *, doc_lens=None, **overrides) -> Retriever:
     ``doc_lens``.  ``cfg``/``overrides``: see :func:`coerce_config`
     (``backend=``, ``params=``, ``n_shards=``, ``index=``).
     """
-    cfg = coerce_config(cfg, **overrides)
+    cfg = _resolve_tiered(coerce_config(cfg, **overrides))
     return get_backend(cfg.backend).build(corpus_embs, cfg, doc_lens=doc_lens)
 
 
 def from_index(index, cfg=None, **overrides) -> Retriever:
     """Wrap an already-built ``PlaidIndex`` in any registered backend."""
-    cfg = coerce_config(cfg, **overrides)
+    cfg = _resolve_tiered(coerce_config(cfg, **overrides))
     return get_backend(cfg.backend).from_index(index, cfg)
 
 
@@ -130,8 +154,9 @@ def _sniff_backend(path: str) -> str:
     * shard layout (``indexer.save_sharded``): top-level ``n_shards``
       -> ``"plaid-sharded"``
     * v2 segment manifest (``repro.live.manifest``): ``segments`` list;
-      a ``"sharding"`` stamp marks a sharded-live save
-      -> ``"live-sharded"`` / ``"live"`` / ``"plaid"``
+      a ``"sharding"`` stamp marks a sharded-live save, a
+      ``"storage": "tiered"`` stamp marks host-resident payloads
+      -> ``"live-sharded"`` / ``"live"`` / ``"plaid-tiered"`` / ``"plaid"``
     * legacy v1 flat layout: ``format_version == 1`` -> ``"plaid"``
 
     A manifest matching several layouts (or none) is corrupt or from a
@@ -145,6 +170,18 @@ def _sniff_backend(path: str) -> str:
         )
     with open(manifest) as f:
         m = json.load(f)
+    # storage stamp first: a tiered directory's arrays.npz deliberately
+    # lacks the payload fields, so every resident loader would misread it
+    storage = m.get("storage", "resident")
+    if storage == "tiered":
+        return "plaid-tiered"
+    if storage != "resident":
+        raise ValueError(
+            f"{path!r} stamps an unknown storage layout {storage!r} (this "
+            "build knows 'resident' and 'tiered'); it may come from a "
+            "newer build — refusing to guess.  Pass backend= explicitly "
+            "to retrieval.load if you know the layout"
+        )
     has_shards = "n_shards" in m
     has_segments = "segments" in m
     if has_shards and has_segments:

@@ -32,6 +32,7 @@ STATIC_FIELDS = (
     "score_dtype",
     "stage1_dtype",
     "fused",
+    "tiered",
 )
 #: SearchParams fields that are traced (no recompile on change).
 DYNAMIC_FIELDS = ("t_cs",)
@@ -58,6 +59,12 @@ class SearchParams:
     #: megakernel (rank-identical to the materialized path, which survives
     #: as the oracle).
     fused: bool = False
+    #: Beyond-HBM storage mode: token payloads (packed residuals) stay
+    #: host-resident (mmap) and only the finalists' CSR slices cross to the
+    #: device per batch (``repro.core.tiered``).  Routes the ``"plaid"``
+    #: family to the ``"plaid-tiered"`` backends at build time; results are
+    #: bitwise rank-identical to the resident engine.
+    tiered: bool = False
     # --- dynamic scalars: traced, swept freely at serve time ------------
     t_cs: float = 0.5
 

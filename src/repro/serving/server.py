@@ -387,6 +387,13 @@ class BatchingServer:
             looked = c["hits"] + c["misses"]
             c["hit_rate"] = c["hits"] / looked if looked else 0.0
             base["cache"] = c
+        # tiered backends account every host->device candidate-slice pull;
+        # surface the running totals so operators see PCIe traffic next to
+        # latency (slice_bytes = exact CSR payload, staged_bytes = padded
+        # staging transfer)
+        transfer = getattr(self.retriever, "transfer_totals", None)
+        if transfer:
+            base["transfer"] = dict(transfer)
         return base
 
     def assert_zero_retrace(self) -> None:

@@ -1,0 +1,133 @@
+"""Payload-corruption edges of the v2 manifest (``repro.live.manifest``).
+
+The contract under test: a manifest that references payloads which are
+missing, truncated, or older than what the caller knows was durably
+written raises a TYPED error (:class:`PayloadMissingError`,
+:class:`PayloadCorruptError`, :class:`StaleGenerationError`) — readers
+never mmap garbage or silently densify a layout they don't speak.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import index as index_mod
+from repro.core import tiered as tiered_mod
+from repro.data import synthetic as syn
+from repro.live import manifest as mf
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    docs, _ = syn.embedding_corpus(24, dim=16, max_len=10, seed=3)
+    return index_mod.build_index(
+        docs, num_centroids=4, nbits=2, kmeans_iters=3, seed=0
+    )
+
+
+@pytest.fixture
+def tiered_dir(small_index, tmp_path):
+    path = os.path.join(tmp_path, "tiered_idx")
+    tiered_mod.save_tiered(path, small_index)
+    m = mf.read_manifest(path)
+    return path, os.path.join(path, m["segments"][0]["name"])
+
+
+def _truncate(path, keep=16):
+    with open(path, "r+b") as f:
+        f.truncate(keep)
+
+
+# --------------------------------------------------------------------------
+# tiered payloads
+# --------------------------------------------------------------------------
+def test_missing_payload_file(tiered_dir):
+    path, seg = tiered_dir
+    os.remove(os.path.join(seg, "residuals.npy"))
+    with pytest.raises(mf.PayloadMissingError, match="residuals"):
+        tiered_mod.load_tiered(path)
+
+
+def test_missing_arrays_npz(tiered_dir):
+    path, seg = tiered_dir
+    os.remove(os.path.join(seg, "arrays.npz"))
+    with pytest.raises(mf.PayloadMissingError):
+        tiered_mod.load_tiered(path)
+
+
+def test_truncated_arrays_npz(tiered_dir):
+    path, seg = tiered_dir
+    _truncate(os.path.join(seg, "arrays.npz"))
+    with pytest.raises(mf.PayloadCorruptError, match="arrays.npz"):
+        tiered_mod.load_tiered(path)
+
+
+def test_truncated_payload_npy(tiered_dir):
+    """A payload cut mid-data must refuse to mmap, not serve short rows."""
+    path, seg = tiered_dir
+    full = os.path.getsize(os.path.join(seg, "residuals.npy"))
+    _truncate(os.path.join(seg, "residuals.npy"), keep=full // 2)
+    with pytest.raises(mf.PayloadCorruptError, match="residuals"):
+        tiered_mod.load_tiered(path)
+
+
+def test_garbled_payload_header(tiered_dir):
+    path, seg = tiered_dir
+    with open(os.path.join(seg, "codes.npy"), "r+b") as f:
+        f.write(b"\x00" * 8)  # clobber the npy magic
+    with pytest.raises(mf.PayloadCorruptError, match="codes"):
+        tiered_mod.load_tiered(path)
+
+
+# --------------------------------------------------------------------------
+# cross-layout guards
+# --------------------------------------------------------------------------
+def test_resident_loader_rejects_tiered_dir(tiered_dir):
+    path, _ = tiered_dir
+    with pytest.raises(ValueError, match="tiered"):
+        mf.load_segmented(path)
+
+
+def test_tiered_loader_rejects_resident_dir(small_index, tmp_path):
+    path = os.path.join(tmp_path, "resident_idx")
+    mf.save_segmented(path, [small_index], [0], None, generation=0)
+    with pytest.raises(ValueError, match="storage"):
+        tiered_mod.load_tiered(path)
+
+
+def test_sniff_rejects_unknown_storage(tiered_dir):
+    from repro.retrieval.registry import _sniff_backend
+
+    path, _ = tiered_dir
+    assert _sniff_backend(path) == "plaid-tiered"
+    man = mf.read_manifest(path)
+    man["storage"] = "holographic"
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="holographic"):
+        _sniff_backend(path)
+
+
+# --------------------------------------------------------------------------
+# generation staleness
+# --------------------------------------------------------------------------
+def test_stale_generation_rejected(small_index, tmp_path):
+    path = os.path.join(tmp_path, "gen_idx")
+    mf.save_segmented(path, [small_index], [0], None, generation=3)
+    segs, _, _, gen, _ = mf.load_segmented(path, min_generation=3)
+    assert gen == 3 and len(segs) == 1
+    with pytest.raises(mf.StaleGenerationError, match="generation"):
+        mf.load_segmented(path, min_generation=4)
+
+
+def test_missing_payload_not_masked_by_retry(small_index, tmp_path):
+    """The GC-race retry path must still surface REAL data loss: after the
+    retries the typed error escapes (it is a FileNotFoundError subclass,
+    so callers catching either spelling see it)."""
+    path = os.path.join(tmp_path, "loss_idx")
+    mf.save_segmented(path, [small_index], [0], None, generation=0)
+    man = mf.read_manifest(path)
+    os.remove(os.path.join(path, man["segments"][0]["name"], "arrays.npz"))
+    with pytest.raises(mf.PayloadMissingError):
+        mf.load_segmented(path)

@@ -1,0 +1,330 @@
+"""Tiered beyond-HBM index (``repro.core.tiered`` / ``repro.exec.tiered``
+/ the ``plaid-tiered`` backends): bitwise rank identity against the
+resident engine, exact transfer accounting, budget enforcement, compile
+discipline, and mmap persistence.
+
+The identity claims are deliberately layered:
+
+* 1 partition — tiered IS the resident pipeline (same bytes, same ops,
+  same order), so scores AND pids must match bitwise for ANY params,
+  ref and pallas, fused and unfused.
+* N partitions — per-partition caps clamp to the partition corpus (the
+  same rule the stacked/live segments use), so identity is against the
+  per-partition resident oracle + ``merge_topk``, the idiom
+  ``test_exec.test_stacked_matches_per_segment_oracle`` established.
+"""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import retrieval
+from repro.constants import NEG
+from repro.core import index as index_mod
+from repro.core import pipeline, plaid
+from repro.core import tiered as tiered_mod
+from repro.data import synthetic as syn
+from repro.distributed import topk as dtopk
+from repro.exec.tiered import TieredExecutor, partition_tiered
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    docs, _ = syn.embedding_corpus(60, dim=16, max_len=12, seed=0)
+    qs, _ = syn.queries_from_docs(docs, 6, q_len=8, seed=1)
+    return docs, jnp.asarray(qs)
+
+
+@pytest.fixture(scope="module")
+def base_index(corpus):
+    docs, _ = corpus
+    return index_mod.build_index(
+        docs, num_centroids=8, nbits=2, kmeans_iters=4, seed=0
+    )
+
+
+def _params(impl="ref", fused=False, k=12):
+    return plaid.SearchParams(
+        k=k, nprobe=4, t_cs=0.3, ndocs=64, candidate_cap=64,
+        impl=impl, fused=fused,
+    )
+
+
+def _densify(part: tiered_mod.TieredIndex):
+    """Resident PlaidIndex view of one partition (the oracle's input)."""
+    return dataclasses.replace(
+        part.device,
+        codes=jnp.asarray(part.host_codes),
+        residuals=jnp.asarray(part.host_residuals),
+        tok_pid=jnp.asarray(
+            np.repeat(
+                np.arange(part.num_passages, dtype=np.int32),
+                part.host_doc_lens,
+            )
+        ),
+        eivf_eids=jnp.zeros((1,), jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+# identity: 1 partition == resident engine, bitwise
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("fused", [False, True])
+def test_engine_matches_resident_bitwise(corpus, base_index, impl, fused):
+    _, qs = corpus
+    p = _params(impl, fused)
+    want_s, want_p = plaid.PlaidEngine(base_index, p).search_batch(qs)
+    eng = tiered_mod.TieredEngine(
+        tiered_mod.tiered_from_index(base_index), p
+    )
+    got_s, got_p = eng.search_batch(qs)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+
+def test_engine_funnel_matches_resident(corpus, base_index):
+    _, qs = corpus
+    p = _params()
+    want = plaid.PlaidEngine(base_index, p).search_batch(qs, funnel=True)
+    eng = tiered_mod.TieredEngine(
+        tiered_mod.tiered_from_index(base_index), p
+    )
+    got = eng.search_batch(qs, funnel=True)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    for g, w in zip(got[2], want[2]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# --------------------------------------------------------------------------
+# identity: N partitions == per-partition resident oracle + merge_topk
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n_parts", [2, 3])
+@pytest.mark.parametrize("fused", [False, True])
+def test_partitioned_matches_oracle(corpus, base_index, n_parts, fused):
+    _, qs = corpus
+    p = _params(fused=fused)
+    ex = TieredExecutor(
+        tiered_mod.tiered_from_index(base_index), p, n_partitions=n_parts
+    )
+    got_s, got_p = ex.search_batch(qs)
+
+    masks = jnp.ones(qs.shape[:2], jnp.float32)
+    parts, offs = partition_tiered(
+        tiered_mod.tiered_from_index(base_index), n_parts
+    )
+    parts_s, parts_p = [], []
+    for part, off in zip(parts, offs):
+        pp = plaid.clamp_params(p, part.num_passages)
+        s, pid = pipeline.run_pipeline(
+            _densify(part), qs, masks, p.t_cs, pp
+        )
+        if s.shape[1] < p.k:
+            padw = ((0, 0), (0, p.k - s.shape[1]))
+            s = jnp.pad(s, padw, constant_values=NEG)
+            pid = jnp.pad(pid, padw, constant_values=-1)
+        parts_s.append(s)
+        parts_p.append(jnp.where(pid >= 0, pid + off, -1))
+    want_s, want_p = dtopk.merge_topk(
+        jnp.concatenate(parts_s, axis=1),
+        jnp.concatenate(parts_p, axis=1),
+        p.k,
+    )
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+
+def test_partition_ivf_matches_range_rebuild(base_index):
+    """Each partition's IVF must equal a from-scratch IVF of its doc range
+    (order within each centroid row preserved)."""
+    t = tiered_mod.tiered_from_index(base_index)
+    parts, offs = partition_tiered(t, 3)
+    ivf_pids = np.asarray(base_index.ivf_pids)
+    ivf_offsets = np.asarray(base_index.ivf_offsets)
+    K = base_index.num_centroids
+    bounds = offs + [t.num_passages]
+    for part, d0, d1 in zip(parts, bounds[:-1], bounds[1:]):
+        for c in range(K):
+            row = ivf_pids[ivf_offsets[c] : ivf_offsets[c + 1]]
+            want = row[(row >= d0) & (row < d1)] - d0
+            po = np.asarray(part.device.ivf_offsets)
+            got = np.asarray(part.device.ivf_pids)[po[c] : po[c + 1]]
+            np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# transfer accounting: slices only, exactly as modelled
+# --------------------------------------------------------------------------
+def test_transfer_is_candidate_slices_only(corpus, base_index):
+    from repro.exec.segments import pow2_bucket
+    from repro.kernels import costs
+
+    _, qs = corpus
+    p = _params()
+    eng = tiered_mod.TieredEngine(
+        tiered_mod.tiered_from_index(base_index), p
+    )
+    eng.search_batch(qs)
+    st = eng.last_transfer
+
+    # independent recount: stages 1-3 on the RESIDENT index
+    pp = plaid.clamp_params(p, base_index.num_passages)
+    masks = jnp.ones(qs.shape[:2], jnp.float32)
+    final_pids, _, _, _ = pipeline.select_finalists_impl(
+        base_index, qs, masks, p.t_cs, params=pp, keep_blocks=False
+    )
+    fp = np.asarray(final_pids)
+    pool = np.unique(fp[fp >= 0])
+    lens = np.asarray(base_index.doc_lens)[pool]
+    pd = np.asarray(base_index.residuals).shape[1]
+
+    assert st.pool_docs == pool.size
+    assert st.slice_tokens == int(lens.sum())
+    assert st.slice_bytes == int(lens.sum()) * (pd + 4)
+    model = costs.tiered_transfer_cost(
+        pool_docs=int(pool.size), slice_tokens=int(lens.sum()), pd=pd,
+        n3=fp.shape[1], B=fp.shape[0],
+        p_cap=pow2_bucket(max(pool.size, 1), lo=1),
+        t_cap=pow2_bucket(
+            max(int(lens.sum()), 1), lo=base_index.doc_maxlen
+        ),
+    )
+    assert st.slice_bytes == model["slice_bytes"]
+    assert st.staged_bytes == model["staged_bytes"]
+    # strictly below the resident payload footprint (the bench_diff gate)
+    assert st.slice_bytes < eng.tiered.resident_payload_nbytes()
+
+    tot = eng.transfer_totals
+    assert tot["batches"] == 1
+    assert tot["slice_bytes"] == st.slice_bytes
+
+
+def test_budget_enforced(base_index):
+    t = tiered_mod.tiered_from_index(base_index)
+    with pytest.raises(tiered_mod.TieredBudgetError):
+        tiered_mod.TieredEngine(t, _params(), device_budget_bytes=16)
+    with pytest.raises(tiered_mod.TieredBudgetError):
+        TieredExecutor(
+            t, _params(), n_partitions=2, device_budget_bytes=16
+        )
+    # the device tier itself always fits its own size
+    TieredExecutor(t, _params(), device_budget_bytes=t.device_nbytes())
+    assert t.resident_nbytes() > t.device_nbytes()
+
+
+def test_zero_retrace_across_t_cs_and_batches(corpus, base_index):
+    """t_cs sweeps and repeat batches must hit the compiled phase A/B
+    programs (same shape buckets -> zero retraces after warmup)."""
+    _, qs = corpus
+    eng = tiered_mod.TieredEngine(
+        tiered_mod.tiered_from_index(base_index), _params()
+    )
+    eng.search_batch(qs, t_cs=0.3)
+    a0, b0 = tiered_mod.trace_counts()
+    for t in (0.1, 0.45, 0.9):
+        eng.search_batch(qs, t_cs=t)
+    assert tiered_mod.trace_counts() == (a0, b0), (
+        "t_cs sweep retraced the tiered pipeline"
+    )
+
+
+# --------------------------------------------------------------------------
+# facade: routing, persistence, serving stats
+# --------------------------------------------------------------------------
+def test_facade_routes_tiered_params(corpus, base_index):
+    _, qs = corpus
+    params = retrieval.SearchParams(
+        k=12, nprobe=4, t_cs=0.3, ndocs=64, candidate_cap=64, tiered=True
+    )
+    r = retrieval.from_index(base_index, backend="plaid", params=params)
+    assert r.backend_name == "plaid-tiered"
+    rp = retrieval.from_index(
+        base_index, backend="plaid-pallas", params=params
+    )
+    assert rp.backend_name == "plaid-tiered-pallas"
+    with pytest.raises(ValueError, match="tiered"):
+        retrieval.from_index(base_index, backend="vanilla", params=params)
+
+    want = retrieval.from_index(
+        base_index, backend="plaid", params=params.replace(tiered=False)
+    ).search_batch(qs)
+    got = r.search_batch(qs)
+    np.testing.assert_array_equal(
+        np.asarray(got.pids), np.asarray(want.pids)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.scores), np.asarray(want.scores)
+    )
+    assert r.transfer_totals["batches"] >= 1
+    desc = r.describe()
+    assert desc["storage"]["mode"] == "tiered"
+    assert (
+        desc["storage"]["resident_payload_bytes"]
+        > desc["transfer"]["slice_bytes"] / desc["transfer"]["batches"]
+    )
+
+
+def test_facade_diagnostics_rejected(base_index):
+    r = retrieval.from_index(
+        base_index, backend="plaid",
+        params=retrieval.SearchParams(k=5, tiered=True),
+    )
+    q = np.asarray(np.random.default_rng(0).standard_normal((8, 16)),
+                   np.float32)
+    with pytest.raises(ValueError, match="diagnostics"):
+        r.search(q, with_diagnostics=True)
+
+
+def test_save_load_mmap_roundtrip(corpus, base_index, tmp_path):
+    _, qs = corpus
+    params = retrieval.SearchParams(
+        k=12, nprobe=4, t_cs=0.3, ndocs=64, candidate_cap=64, tiered=True
+    )
+    r = retrieval.from_index(base_index, backend="plaid", params=params)
+    want = r.search_batch(qs)
+
+    path = os.path.join(tmp_path, "tiered_idx")
+    r.save(path)
+    r2 = retrieval.load(path)
+    assert r2.backend_name == "plaid-tiered"
+    assert r2.params.tiered
+    # payloads are mmaps straight off the manifest, not densified copies
+    assert isinstance(r2.tiered.host_residuals, np.memmap)
+    assert isinstance(r2.tiered.host_codes, np.memmap)
+    got = r2.search_batch(qs)
+    np.testing.assert_array_equal(
+        np.asarray(got.pids), np.asarray(want.pids)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.scores), np.asarray(want.scores)
+    )
+
+    # a bare directory (no retriever.json) sniffs tiered off the manifest
+    os.remove(os.path.join(path, "retriever.json"))
+    r3 = retrieval.load(path, params=params)
+    assert r3.backend_name == "plaid-tiered"
+
+
+def test_server_surfaces_transfer_stats(corpus, base_index):
+    from repro.serving import BatchingServer
+
+    _, qs = corpus
+    r = retrieval.from_index(
+        base_index, backend="plaid",
+        params=retrieval.SearchParams(
+            k=5, nprobe=4, t_cs=0.3, ndocs=64, candidate_cap=64,
+            tiered=True,
+        ),
+    )
+    srv = BatchingServer(r, batch_size=4, max_wait_ms=1.0)
+    try:
+        srv.submit(np.asarray(qs[0])).get(timeout=30)
+        stats = srv.stats()
+    finally:
+        srv.shutdown()
+    assert stats["transfer"]["batches"] >= 1
+    assert stats["transfer"]["slice_bytes"] > 0
