@@ -3,7 +3,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast test-multidevice smoke bench-dry bench-diff ci
+.PHONY: test test-fast test-multidevice smoke bench-dry bench-diff \
+	quality-sweep bench-quality-diff ci
 
 test:  ## tier-1: the full test suite
 	$(PY) -m pytest -x -q
@@ -31,6 +32,21 @@ bench-diff:  ## gate per-kernel hbm_bytes against the committed baseline
 	## bench-dry artifact under out/.
 	$(PY) -m benchmarks.bench_diff BENCH_seed.json $(or $(CURRENT),out/BENCH_dry.json)
 
-# The GitHub workflow runs these three targets as PARALLEL jobs (tests /
-# multidevice / bench-dry); `make ci` remains the serial local equivalent.
-ci: test test-multidevice bench-dry
+quality-sweep:  ## retrieval-quality harness at dry scale: Pareto sweep +
+	## lossless-caps certification of every backend/approximation (exits
+	## nonzero on any recall@10 drop > 1e-6 vs the exact f32 baseline) +
+	## pruned-build footprint/quality trade.  Writes the schema-v3 quality
+	## payload and the frontier CSV under out/.
+	$(PY) -m benchmarks.quality_sweep --dry \
+		--json out/BENCH_quality.json --csv out/pareto_quality.csv
+
+bench-quality-diff:  ## gate the (work, recall@10) Pareto frontier against
+	## the committed quality baseline: any committed frontier point the
+	## current run can no longer match at comparable work fails.
+	$(PY) -m benchmarks.bench_diff BENCH_quality_seed.json \
+		$(or $(QUALITY_CURRENT),out/BENCH_quality.json)
+
+# The GitHub workflow runs these targets as PARALLEL jobs (tests /
+# multidevice / bench-dry / quality); `make ci` remains the serial local
+# equivalent.
+ci: test test-multidevice bench-dry quality-sweep bench-quality-diff

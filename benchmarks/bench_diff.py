@@ -14,9 +14,14 @@ Compares two ``benchmarks.run --json`` payloads and FAILS (exit 1) when:
   ``resident_payload_bytes`` stops showing the tiered per-batch
   candidate-slice traffic strictly below the resident payload footprint
   (the tiered storage tier's reason to exist);
-* the payloads' ``schema_version`` are incompatible (v1 and v2 compare
-  fine — v2 only ADDED observability sections; anything else mismatched
-  fails).
+* the quality harness's (work, recall) Pareto frontier REGRESSED: for any
+  baseline frontier point, the current run no longer reaches that quality
+  at comparable work (see ``_diff_pareto`` — the frontier must never move
+  strictly inside the committed one), or the baseline carried a ``pareto``
+  section and the current payload dropped it;
+* the payloads' ``schema_version`` are incompatible (v1/v2/v3 compare
+  fine — v2 added observability sections, v3 added the ``pareto``
+  section; anything else mismatched fails).
 
 Only ``hbm_bytes`` records are gated: they are analytic shape arithmetic
 (``repro.kernels.costs``), deterministic across machines and jax versions.
@@ -32,9 +37,20 @@ import sys
 DEFAULT_THRESHOLD = 0.15
 
 #: schema_version pairs that compare cleanly despite differing: v2 only
-#: added top-level observability sections (``metrics``/``span_summary``);
-#: the gated ``results`` rows kept their v1 layout.
-COMPATIBLE_SCHEMAS = {(1, 2), (2, 1)}
+#: added top-level observability sections (``metrics``/``span_summary``),
+#: v3 only added the top-level ``pareto`` section; the gated ``results``
+#: rows kept their v1 layout throughout.
+COMPATIBLE_SCHEMAS = {
+    (1, 2), (2, 1), (1, 3), (3, 1), (2, 3), (3, 2),
+}
+
+#: slack on the deterministic ``work`` axis when matching frontier points
+#: across runs (grid values shift when the corpus build changes centroid
+#: counts; work itself is exact on an unchanged build)
+PARETO_WORK_SLACK = 0.05
+#: quality regression tolerance on the frontier (matches the harness's
+#: lossless certification tolerance)
+PARETO_QUALITY_TOL = 1e-6
 
 
 def _load(path: str) -> dict:
@@ -129,6 +145,8 @@ def diff(baseline: dict, current: dict, threshold: float = DEFAULT_THRESHOLD):
                     "the resident payload per batch"
                 )
 
+    _diff_pareto(baseline, current, failures, infos)
+
     # informational: HLO-derived pipeline traffic drift (never fails)
     b_pipe = _keyed(baseline, "hbm_mb")
     c_pipe = _keyed(current, "hbm_mb")
@@ -141,6 +159,75 @@ def diff(baseline: dict, current: dict, threshold: float = DEFAULT_THRESHOLD):
                 f"({(c_mb / b_mb - 1) * 100:+.1f}%, informational)"
             )
     return failures, infos
+
+
+def _diff_pareto(baseline, current, failures, infos) -> None:
+    """Gate the quality harness's (work, quality) Pareto frontier.
+
+    For every BASELINE frontier point, the current frontier must reach at
+    least the same quality (within :data:`PARETO_QUALITY_TOL`) at no more
+    than ``(1 + PARETO_WORK_SLACK)`` times the work — i.e. no committed
+    frontier point may strictly dominate the current frontier.  Extra or
+    better current points are improvements (informational); a baseline
+    point the current grid no longer covers (its work sits below every
+    current point's reach) is reported, not failed, since grid reshapes
+    legitimately drop corners.
+    """
+    bp = baseline.get("pareto")
+    cp = current.get("pareto")
+    if bp is None:
+        if cp is not None:
+            infos.append(
+                f"pareto: new frontier section ({len(cp.get('points', []))} "
+                "points, not gated — no committed baseline)"
+            )
+        return
+    if cp is None:
+        failures.append(
+            "pareto: baseline carries a frontier section but the current "
+            "payload has none (quality sweep vanished)"
+        )
+        return
+    metric = bp.get("metric", "recall@10")
+    b_points = bp.get("points", [])
+    c_points = cp.get("points", [])
+    if not c_points:
+        failures.append("pareto: current frontier is empty")
+        return
+    min_c_work = min(float(p["work"]) for p in c_points)
+    for b in b_points:
+        b_work = float(b["work"])
+        b_q = float(b["quality"])
+        budget = b_work * (1.0 + PARETO_WORK_SLACK)
+        reachable = [
+            float(p["quality"])
+            for p in c_points
+            if float(p["work"]) <= budget
+        ]
+        if not reachable:
+            if min_c_work > budget:
+                infos.append(
+                    f"pareto: baseline point (work={b_work:.3g}, "
+                    f"{metric}={b_q:.4f}) sits below the current grid's "
+                    "cheapest point (grid reshape, not gated)"
+                )
+            continue
+        best = max(reachable)
+        if best < b_q - PARETO_QUALITY_TOL:
+            failures.append(
+                f"pareto: frontier regressed at work<={budget:.3g}: "
+                f"best {metric} {best:.6f} < committed {b_q:.6f} "
+                f"(baseline point is strictly dominant)"
+            )
+        elif best > b_q + PARETO_QUALITY_TOL:
+            infos.append(
+                f"pareto: improved at work<={budget:.3g}: {metric} "
+                f"{b_q:.4f} -> {best:.4f}"
+            )
+    if len(c_points) != len(b_points):
+        infos.append(
+            f"pareto: frontier size {len(b_points)} -> {len(c_points)}"
+        )
 
 
 def main() -> int:

@@ -1,0 +1,246 @@
+"""Retrieval-quality harness: Pareto sweeps + lossless-caps certification.
+
+Standalone (the CI ``quality`` job)::
+
+  PYTHONPATH=src python -m benchmarks.quality_sweep --dry \
+      --json BENCH_quality.json --csv pareto.csv
+
+or as one bench inside ``benchmarks.run`` (it contributes the schema-v3
+top-level ``pareto`` payload section there).
+
+Three parts, all on the shared synthetic labeled corpus
+(``repro.eval.qrels.synthetic_query_set``):
+
+* **sweep** — the t_cs × nprobe × ndocs grid through
+  ``repro.eval.sweep.sweep_quality`` (bucketed-cap engine: t_cs traced,
+  caps pow2-bucketed; the zero-retrace-within-bucket ledger is asserted
+  and the compile bill is emitted).  Each point reports the deterministic
+  ``work`` axis + full metric dict; the (work, recall@10) Pareto frontier
+  is marked and must carry >= 3 points (a collapsed frontier means the
+  grid or the funnel is broken).
+* **certification** — every registry backend plus the param-level
+  approximations (fused tail, int8/bf16 stage 1) plus a real
+  live-delta split, at LOSSLESS caps, must match the exact float32
+  resident baseline's recall@10 within 1e-6.  Any failure exits 1 —
+  this is the CI quality gate.
+* **pruning** — a ``prune_fraction=0.25`` build of the same corpus:
+  its resident payload bytes must shrink in exact proportion to the
+  surviving tokens (checked against ``kernels.costs``), and its measured
+  lossless recall@10 delta vs the unpruned baseline is emitted as a sweep
+  record (quality cost of the footprint knob, visible in every run).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+PARETO_METRIC = "recall@10"
+MIN_FRONTIER_POINTS = 3
+
+#: filled by :func:`run` / :func:`main`; ``benchmarks.run`` merges it into
+#: the schema-v3 payload via the ``payload_sections`` hook
+_LAST_PARETO: dict | None = None
+
+
+#: low topic count -> ~n_docs/8 judged-relevant docs per query, far more
+#: than k=10, so depth-10 recall is a graded funnel-aggressiveness signal
+#: instead of saturating at 1.0 on the tiny dry corpus
+N_TOPICS = 8
+
+
+def _fixture(dry: bool):
+    n_docs = common.scaled(1536, dry, floor=96)
+    n_queries = common.scaled(256, dry, floor=24)
+    docs, topics, index = common.corpus_topics_and_index(
+        n_docs, dim=64, n_topics=N_TOPICS
+    )
+    from repro.eval.qrels import synthetic_query_set
+
+    query_set = synthetic_query_set(docs, topics, n_queries, seed=1)
+    return docs, topics, index, query_set
+
+
+def run(emit, dry: bool = False) -> list[str]:
+    """Emit sweep/certification/pruning records; returns gate failures."""
+    global _LAST_PARETO
+    from repro.eval.sweep import (
+        certify_backends,
+        pareto_frontier,
+        sweep_quality,
+    )
+    from repro.kernels import costs
+
+    docs, topics, index, query_set = _fixture(dry)
+    failures: list[str] = []
+
+    # ---- Pareto sweep over the bucketed-cap engine ----------------------
+    records, engine = sweep_quality(index, query_set)
+    frontier = pareto_frontier(records, metric=PARETO_METRIC)
+    for r in records:
+        emit("quality_sweep", r.case, **r.as_dict())
+    emit(
+        "quality_sweep",
+        "compile_bill",
+        grid_points=len(records),
+        programs=engine.n_programs,
+        retraces_within_bucket=engine.retraces_within_bucket,
+        frontier_points=len(frontier),
+    )
+    if len(frontier) < MIN_FRONTIER_POINTS:
+        failures.append(
+            f"Pareto frontier carries {len(frontier)} point(s) — expected "
+            f">= {MIN_FRONTIER_POINTS}; the grid no longer trades work for "
+            "quality (funnel or grid regression)"
+        )
+    _LAST_PARETO = dict(
+        metric=PARETO_METRIC,
+        points=[
+            dict(
+                t_cs=r.t_cs,
+                nprobe=r.nprobe,
+                ndocs=r.ndocs,
+                work=r.work,
+                latency_ms=r.latency_ms,
+                quality=r.metrics[PARETO_METRIC],
+            )
+            for r in frontier
+        ],
+    )
+
+    # ---- lossless-caps certification of every shipped approximation ----
+    cert_records, cert_failures = certify_backends(index, query_set, docs=docs)
+    for c in cert_records:
+        emit(
+            "quality_cert",
+            c["variant"],
+            backend=c["backend"],
+            delta=c["delta"],
+            passed=c["passed"],
+            **{
+                k.replace("@", "_at_"): v for k, v in c["metrics"].items()
+            },
+        )
+    failures.extend(cert_failures)
+
+    # ---- pruned-build quality/footprint trade --------------------------
+    prune_fraction = 0.25
+    _, _, pruned = common.corpus_topics_and_index(
+        index.num_passages, dim=64, prune_fraction=prune_fraction,
+        n_topics=N_TOPICS,
+    )
+    pd = int(np.asarray(index.residuals).shape[1])
+    bytes_full = costs.resident_payload_bytes(
+        num_tokens=index.num_tokens, pd=pd
+    )
+    bytes_pruned = costs.resident_payload_bytes(
+        num_tokens=pruned.num_tokens, pd=pd
+    )
+    token_ratio = pruned.num_tokens / index.num_tokens
+    byte_ratio = bytes_pruned / bytes_full
+    if abs(byte_ratio - token_ratio) > 1e-9:
+        failures.append(
+            f"pruned payload bytes ratio {byte_ratio:.6f} does not track "
+            f"the surviving-token ratio {token_ratio:.6f} "
+            "(kernels.costs model disagreement)"
+        )
+    p_records, _ = certify_backends(
+        pruned, query_set, docs=None, backends=[]
+    )
+    base_recall = next(
+        c for c in cert_records if c["variant"] == "baseline-exact-f32"
+    )["metrics"][PARETO_METRIC]
+    pruned_recall = p_records[0]["metrics"][PARETO_METRIC]
+    emit(
+        "quality_sweep",
+        f"prune{prune_fraction:g}",
+        prune_fraction=prune_fraction,
+        num_tokens=pruned.num_tokens,
+        baseline_tokens=index.num_tokens,
+        payload_bytes=bytes_pruned,
+        baseline_payload_bytes=bytes_full,
+        payload_ratio=byte_ratio,
+        recall_at_10=pruned_recall,
+        baseline_recall_at_10=base_recall,
+        recall_delta=pruned_recall - base_recall,
+    )
+    emit("quality_sweep", "gates", n_failures=len(failures))
+    for msg in failures:
+        print(f"FAIL  {msg}", flush=True)
+    return failures
+
+
+def payload_sections() -> dict:
+    """Extra schema-v3 payload sections for ``benchmarks.run --json``."""
+    return {} if _LAST_PARETO is None else {"pareto": _LAST_PARETO}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dry", action="store_true",
+                    help="tiny corpus / query count: CI smoke run")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the schema-v3 quality payload")
+    ap.add_argument("--csv", default=None, metavar="PATH",
+                    help="write the Pareto frontier as CSV")
+    args = ap.parse_args()
+
+    rows = []
+
+    def emit(bench, case, **kv):
+        rows.append(dict(bench=bench, case=case, **kv))
+        parts = ",".join(f"{k}={v}" for k, v in kv.items())
+        print(f"{bench},{case},{parts}", flush=True)
+
+    t0 = time.time()
+    failures = run(emit, dry=args.dry)
+
+    if args.json:
+        from benchmarks.run import SCHEMA_VERSION
+
+        payload = dict(
+            schema_version=SCHEMA_VERSION,
+            dry=args.dry,
+            only="quality",
+            finished_unix=time.time(),
+            wall_s=time.time() - t0,
+            results=[
+                {
+                    k: (v.item() if isinstance(v, np.generic) else v)
+                    for k, v in r.items()
+                }
+                for r in rows
+            ],
+            **payload_sections(),
+        )
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(rows)} records to {args.json}")
+
+    if args.csv and _LAST_PARETO is not None:
+        os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
+        points = _LAST_PARETO["points"]
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(points[0]) if points else
+                               ["work", "quality"])
+            w.writeheader()
+            w.writerows(points)
+        print(f"# wrote {len(points)} frontier points to {args.csv}")
+
+    if failures:
+        print(f"# quality_sweep: {len(failures)} gate failure(s)")
+        return 1
+    print("# quality_sweep: all gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,7 +38,10 @@ def _artifact_path(path: str | None) -> str | None:
 #: v2: added observability sections (``metrics`` registry snapshot +
 #: ``span_summary`` per-span-name rollup); ``results`` rows are unchanged,
 #: and bench_diff treats v1<->v2 as comparable.
-SCHEMA_VERSION = 2
+#: v3: added the optional top-level ``pareto`` section (the quality
+#: harness's (work, recall) frontier, see ``benchmarks.quality_sweep``);
+#: ``results`` rows are still unchanged, so v1/v2/v3 all compare.
+SCHEMA_VERSION = 3
 
 BENCHES = [
     "table3_endtoend",
@@ -56,6 +59,9 @@ BENCHES = [
     "index_build",  # streaming vs monolithic build: throughput + host memory
     "tiered_scale",  # beyond-HBM tiered storage: footprint ratio, per-batch
     # candidate-slice transfer bytes (gated vs resident footprint), identity
+    "quality_sweep",  # retrieval-quality harness: t_cs x nprobe x ndocs
+    # Pareto sweep (bucketed-cap engine), lossless-caps backend
+    # certification, pruned-index quality/footprint trade
 ]
 
 
@@ -105,6 +111,7 @@ def main() -> None:
     import importlib
 
     t_start = time.time()
+    ran_modules = []
     for name in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -112,6 +119,7 @@ def main() -> None:
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
         mod.run(emit, dry=args.dry)
+        ran_modules.append(mod)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
 
     print(f"# total {len(rows)} results")
@@ -148,6 +156,11 @@ def main() -> None:
             metrics=get_registry().snapshot(),
             span_summary=get_tracer().summary(),
         )
+        # benches may contribute extra top-level payload sections (e.g.
+        # quality_sweep's ``pareto`` frontier, schema v3)
+        for mod in ran_modules:
+            if hasattr(mod, "payload_sections"):
+                payload.update(mod.payload_sections())
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {len(records)} records to {args.json}")

@@ -20,6 +20,7 @@ from repro.build.kmeans_mesh import (
     build_mesh,
     kmeans_fit_mesh,
 )
+from repro.build.prune import prune_chunk, prune_mask, token_importance
 from repro.build.sampling import ReservoirSampler, token_priorities
 from repro.build.streaming import (
     BuildStats,
@@ -47,9 +48,12 @@ __all__ = [
     "encoder_stream",
     "iterator_stream",
     "kmeans_fit_mesh",
+    "prune_chunk",
+    "prune_mask",
     "save_live",
     "save_sharded",
     "save_v2",
     "to_live_index",
+    "token_importance",
     "token_priorities",
 ]

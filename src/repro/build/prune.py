@@ -1,0 +1,140 @@
+"""Build-time token pruning: drop low-signal document tokens.
+
+Late-interaction indexes spend their footprint on per-token payloads, so
+dropping the least informative ``prune_fraction`` of each document's
+tokens shrinks the resident payload (codes + packed residuals, see
+``kernels.costs.resident_payload_bytes``) almost exactly proportionally —
+at a measured, sweep-visible quality cost (the PLAID paper's MaxSim is
+robust to losing tokens that no query term would have won on).
+
+Scoring is **doc-local and deterministic**: a token's importance depends
+only on its own document's embeddings, never on chunk boundaries or
+corpus order.  That is the property that keeps the streaming builder's
+two passes consistent (both prune a chunk identically) and makes a pruned
+streaming build array-identical to a pruned monolithic build.
+
+Methods:
+
+* ``"attention"`` (default) — cosine of the token against its document's
+  mean direction, a cheap static proxy for "how much would this token's
+  score contribute be duplicated by its neighbors"; tokens far off the
+  document's dominant direction are kept (they carry distinct signal),
+  near-duplicate filler around the mean is dropped last-ranked-first.
+  Concretely the *importance* is ``|t . mean_dir|`` so near-zero (noise)
+  tokens prune first, then redundancy is broken by the norm tie-break.
+* ``"norm"`` — plain L2 norm; small-norm tokens contribute least to any
+  MaxSim because every query-token similarity they can win is small.
+
+Pruning always keeps at least one token per document and preserves the
+surviving tokens' original order (CSR layout invariants: ``tok_pid`` must
+stay sorted, ``doc_offsets`` contiguous).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+METHODS = ("attention", "norm")
+
+
+def _doc_segments(doc_lens: np.ndarray) -> np.ndarray:
+    """Start offset of each document in the packed token axis."""
+    starts = np.zeros(len(doc_lens), np.int64)
+    np.cumsum(doc_lens[:-1], out=starts[1:])
+    return starts
+
+
+def token_importance(
+    emb: np.ndarray, doc_lens: np.ndarray, *, method: str = "attention"
+) -> np.ndarray:
+    """Per-token keep-priority scores (higher = keep longer).
+
+    ``emb`` is the packed ``(Nt, d)`` float array, ``doc_lens`` the
+    per-document token counts summing to ``Nt``.  Pure numpy, doc-local.
+    """
+    emb = np.asarray(emb, np.float32)
+    doc_lens = np.asarray(doc_lens, np.int64)
+    if emb.ndim != 2:
+        raise ValueError(f"emb must be (Nt, d), got {emb.shape}")
+    if int(doc_lens.sum()) != emb.shape[0]:
+        raise ValueError(
+            f"doc_lens sum {int(doc_lens.sum())} != tokens {emb.shape[0]}"
+        )
+    norms = np.linalg.norm(emb.astype(np.float64), axis=1)
+    if method == "norm":
+        return norms
+    if method != "attention":
+        raise ValueError(f"unknown importance method {method!r}; use {METHODS}")
+    starts = _doc_segments(doc_lens)
+    # per-doc mean direction, broadcast back to tokens via repeat
+    sums = np.add.reduceat(emb.astype(np.float64), starts, axis=0)
+    # reduceat on an empty segment returns the NEXT row; zero-length docs
+    # contribute no tokens anyway, so just guard the division
+    mean = sums / np.maximum(doc_lens, 1)[:, None]
+    mean_dir = mean / np.maximum(
+        np.linalg.norm(mean, axis=1, keepdims=True), 1e-30
+    )
+    tok_dir = np.repeat(mean_dir, doc_lens, axis=0)
+    align = np.abs((emb * tok_dir).sum(axis=1))
+    # tie-break by norm at tiny weight so identical alignments (e.g. exact
+    # duplicate tokens) prune deterministically smallest-norm-first
+    return align + 1e-9 * norms
+
+
+def prune_mask(
+    emb: np.ndarray,
+    doc_lens: np.ndarray,
+    *,
+    fraction: float,
+    method: str = "attention",
+) -> np.ndarray:
+    """Boolean keep-mask over the packed token axis.
+
+    Each document drops its ``min(floor(fraction * len), len - 1)`` lowest
+    importance tokens (ties broken by position, stable: earlier tokens
+    survive), so every document keeps >= 1 token and surviving tokens keep
+    their original order.
+    """
+    doc_lens = np.asarray(doc_lens, np.int64)
+    if not 0.0 <= fraction < 1.0:
+        raise ValueError(f"prune fraction must be in [0, 1), got {fraction}")
+    keep = np.ones(int(doc_lens.sum()), bool)
+    if fraction == 0.0:
+        return keep
+    scores = token_importance(emb, doc_lens, method=method)
+    starts = _doc_segments(doc_lens)
+    for di, (s, n) in enumerate(zip(starts, doc_lens)):
+        n = int(n)
+        n_drop = min(int(fraction * n), n - 1)
+        if n_drop <= 0:
+            continue
+        order = np.argsort(scores[s : s + n], kind="stable")
+        keep[s + order[:n_drop]] = False
+    return keep
+
+
+def prune_chunk(
+    emb: np.ndarray,
+    doc_lens: np.ndarray,
+    *,
+    fraction: float,
+    method: str = "attention",
+) -> tuple[np.ndarray, np.ndarray]:
+    """Prune one packed chunk -> ``(emb_kept, doc_lens_kept)``.
+
+    Doc-local and order-preserving, so applying it per streaming chunk
+    (chunks cut on document boundaries) equals applying it to the whole
+    corpus at once.  ``fraction == 0`` returns the inputs untouched
+    (bit-identity guarantee for unpruned builds).
+    """
+    if fraction == 0.0:
+        return emb, doc_lens
+    emb = np.asarray(emb, np.float32)
+    doc_lens_np = np.asarray(doc_lens, np.int64)
+    keep = prune_mask(emb, doc_lens_np, fraction=fraction, method=method)
+    # kept-per-doc via prefix sums (robust to zero-length docs, unlike
+    # np.add.reduceat on duplicate/out-of-range segment starts)
+    offsets = np.zeros(len(doc_lens_np) + 1, np.int64)
+    np.cumsum(doc_lens_np, out=offsets[1:])
+    kept_cum = np.concatenate([[0], np.cumsum(keep.astype(np.int64))])
+    kept_per_doc = kept_cum[offsets[1:]] - kept_cum[offsets[:-1]]
+    return emb[keep], kept_per_doc.astype(np.int32)

@@ -46,6 +46,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.build import chunks as chunks_mod
 from repro.build import kmeans_mesh
+from repro.build import prune as prune_mod
 from repro.build.sampling import ReservoirSampler
 from repro.core import index as index_mod
 from repro.core import kmeans as _kmeans
@@ -135,6 +136,8 @@ class StreamingIndexBuilder:
         stat_blocks: int = kmeans_mesh.DEFAULT_STAT_BLOCKS,
         centroids=None,
         codec: rc.ResidualCodec | None = None,
+        prune_fraction: float = 0.0,
+        prune_method: str = "attention",
     ):
         self.num_centroids = num_centroids
         self.nbits = nbits if codec is None else codec.nbits
@@ -157,6 +160,17 @@ class StreamingIndexBuilder:
             None if centroids is None else jnp.asarray(centroids, jnp.float32)
         )
         self.codec = codec
+        if not 0.0 <= prune_fraction < 1.0:
+            raise ValueError(
+                f"prune_fraction must be in [0, 1), got {prune_fraction}"
+            )
+        self.prune_fraction = float(prune_fraction)
+        if prune_method not in prune_mod.METHODS:
+            raise ValueError(
+                f"unknown prune method {prune_method!r}; use "
+                f"{prune_mod.METHODS}"
+            )
+        self.prune_method = prune_method
         self.stats = BuildStats(n_devices=self.mesh.devices.size)
         self.index: PlaidIndex | None = None
 
@@ -181,6 +195,7 @@ class StreamingIndexBuilder:
             with tracer.span("build.sample_chunk", chunk=n_chunks):
                 emb_np = self._embed_host(stream, payload)
                 self.stats.note_f32(emb_np.size)
+                emb_np, doc_lens = self._prune(emb_np, doc_lens)
                 reservoir.offer(emb_np, n_tokens)
                 self.stats.note_f32((reservoir.n_kept + emb_np.shape[0]) *
                                     emb_np.shape[1])
@@ -243,6 +258,7 @@ class StreamingIndexBuilder:
             weights=self.codec.weights,
             nbits=self.codec.nbits,
             ivf_list_cap=self.ivf_list_cap,
+            prune_fraction=self.prune_fraction,
         )
         from repro.obs.trace import get_tracer
 
@@ -250,7 +266,9 @@ class StreamingIndexBuilder:
         n_chunks = 0
         for payload, doc_lens in stream.chunks():
             with tracer.span("build.quantize_chunk", chunk=n_chunks):
-                codes, packed = self._quantize_chunk(stream, payload)
+                codes, packed, doc_lens = self._quantize_chunk(
+                    stream, payload, doc_lens
+                )
                 assembler.add_chunk(codes, packed, doc_lens)
                 n_chunks += 1
         self.index = assembler.finish()
@@ -294,16 +312,48 @@ class StreamingIndexBuilder:
         emb = stream.encode_fn(jnp.asarray(payload))
         return np.asarray(emb, np.float32).reshape(-1, emb.shape[-1])
 
-    def _quantize_chunk(self, stream, payload):
-        """Fused per-chunk step -> (codes, packed) pulled to host compact."""
+    def _prune(self, emb_np, doc_lens):
+        """Apply the builder's token-pruning step to one host chunk.
+
+        Doc-local and deterministic (``repro.build.prune``), so pass 1
+        (sampling) and pass 2 (quantization) prune identically and chunk
+        boundaries never change the result.  No-op at fraction 0.
+        """
+        if self.prune_fraction == 0.0:
+            return emb_np, doc_lens
+        return prune_mod.prune_chunk(
+            emb_np,
+            doc_lens,
+            fraction=self.prune_fraction,
+            method=self.prune_method,
+        )
+
+    def _quantize_chunk(self, stream, payload, doc_lens):
+        """Fused per-chunk step -> (codes, packed, doc_lens) host compact.
+
+        ``doc_lens`` passes through untouched unless pruning is on, in
+        which case the returned lens reflect the surviving tokens.
+        """
+        if self.prune_fraction > 0.0:
+            # pruning needs host embeddings; encoder chunks are encoded
+            # once here, then pruned + quantized through the host path
+            emb = self._embed_host(stream, payload)
+            emb, doc_lens = self._prune(emb, doc_lens)
+            codes, packed = self._quantize_host(emb)
+            return codes, packed, doc_lens
         if stream.encode_fn is not None:
             # encoder chunks: encode→assign→residual→compress in one jit
             # (single-program; sharding the encoder is the serving mesh's
             # job, not the builder's)
             fn = _encoder_quantize(stream.encode_fn)
             codes, packed = fn(jnp.asarray(payload), self.centroids, self.codec)
-            return np.asarray(codes), np.asarray(packed)
+            return np.asarray(codes), np.asarray(packed), doc_lens
         emb = np.asarray(payload, np.float32)
+        codes, packed = self._quantize_host(emb)
+        return codes, packed, doc_lens
+
+    def _quantize_host(self, emb: np.ndarray):
+        """Host-chunk quantize -> (codes, packed), pow2-padded jit."""
         nt = emb.shape[0]
         self.stats.peak_chunk_tokens = max(self.stats.peak_chunk_tokens, nt)
         n_dev = self.mesh.devices.size
@@ -357,6 +407,8 @@ def build_index_streaming(
     sample_size: int = DEFAULT_SAMPLE_SIZE,
     n_devices: int | None = None,
     stat_blocks: int = kmeans_mesh.DEFAULT_STAT_BLOCKS,
+    prune_fraction: float = 0.0,
+    prune_method: str = "attention",
     return_stats: bool = False,
 ):
     """Build a PLAID index with the streaming two-pass pipeline.
@@ -379,6 +431,8 @@ def build_index_streaming(
         stat_blocks=stat_blocks,
         centroids=centroids,
         codec=codec,
+        prune_fraction=prune_fraction,
+        prune_method=prune_method,
     )
     index = builder.build(corpus, doc_lens)
     return (index, builder.stats) if return_stats else index

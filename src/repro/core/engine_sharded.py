@@ -134,5 +134,6 @@ def shard_index(index: PlaidIndex, n_shards: int):
         doc_maxlen=index.doc_maxlen,
         ivf_list_cap=ivf_cap,
         eivf_list_cap=eivf_cap,
+        prune_fraction=index.prune_fraction,
     )
     return out, meta, per

@@ -58,6 +58,14 @@ class PlaidIndex:
     doc_maxlen: int = dataclasses.field(metadata=dict(static=True), default=128)
     ivf_list_cap: int = dataclasses.field(metadata=dict(static=True), default=256)
     eivf_list_cap: int = dataclasses.field(metadata=dict(static=True), default=512)
+    #: build-time token-pruning knob (``repro.build.prune``): the fraction
+    #: of each document's lowest-importance tokens dropped before
+    #: quantization.  0.0 = unpruned.  Recorded so serving layers and the
+    #: quality harness can attribute payload size / recall deltas to it;
+    #: the arrays are already pruned — search never reads this.
+    prune_fraction: float = dataclasses.field(
+        metadata=dict(static=True), default=0.0
+    )
 
     @property
     def num_passages(self) -> int:
@@ -116,6 +124,7 @@ def assemble_index(
     nbits: int,
     ivf_list_cap: int | None = None,
     pairs: np.ndarray | None = None,
+    prune_fraction: float = 0.0,
 ) -> PlaidIndex:
     """Assemble a PlaidIndex from already-quantized token payloads.
 
@@ -181,6 +190,7 @@ def assemble_index(
         doc_maxlen=int(doc_lens.max(initial=1)),
         ivf_list_cap=ivf_list_cap,
         eivf_list_cap=eivf_list_cap,
+        prune_fraction=float(prune_fraction),
     )
 
 
@@ -207,12 +217,14 @@ class IndexAssembler:
         weights,
         nbits: int,
         ivf_list_cap: int | None = None,
+        prune_fraction: float = 0.0,
     ):
         self._centroids = jnp.asarray(centroids, jnp.float32)
         self._cutoffs = cutoffs
         self._weights = weights
         self._nbits = nbits
         self._ivf_list_cap = ivf_list_cap
+        self._prune_fraction = float(prune_fraction)
         self._codes: list[np.ndarray] = []
         self._packed: list[np.ndarray] = []
         self._doc_lens: list[np.ndarray] = []
@@ -267,6 +279,7 @@ class IndexAssembler:
             nbits=self._nbits,
             ivf_list_cap=self._ivf_list_cap,
             pairs=pairs,
+            prune_fraction=self._prune_fraction,
         )
 
 
@@ -281,6 +294,7 @@ def build_index(
     ivf_list_cap: int | None = None,
     centroids: jax.Array | np.ndarray | None = None,
     codec: rc.ResidualCodec | None = None,
+    prune_fraction: float = 0.0,
 ) -> PlaidIndex:
     """Build a PLAID index from per-document token embeddings.
 
@@ -313,6 +327,16 @@ def build_index(
         doc_lens = np.asarray(doc_lens, np.int32)
         packed_emb = np.asarray(doc_embeddings)
     packed_emb = packed_emb.astype(np.float32)
+    if prune_fraction > 0.0:
+        # doc-local token pruning BEFORE training/quantization — the same
+        # step the streaming builder applies per chunk, so pruned builds
+        # stay array-identical across the two paths
+        from repro.build.prune import prune_chunk
+
+        packed_emb, doc_lens = prune_chunk(
+            packed_emb, doc_lens, fraction=prune_fraction
+        )
+        doc_lens = np.asarray(doc_lens, np.int32)
     n_tokens, _ = packed_emb.shape
     assert int(doc_lens.sum()) == n_tokens
 
@@ -346,4 +370,5 @@ def build_index(
         weights=codec.weights,
         nbits=nbits,
         ivf_list_cap=ivf_list_cap,
+        prune_fraction=prune_fraction,
     )

@@ -147,6 +147,8 @@ def load_sharded(path: str):
         k: manifest[k]
         for k in ("dim", "nbits", "doc_maxlen", "ivf_list_cap", "eivf_list_cap")
     }
+    # legacy layouts predate build-time token pruning
+    meta["prune_fraction"] = manifest.get("prune_fraction", 0.0)
     return out, meta, manifest["docs_per_shard"]
 
 

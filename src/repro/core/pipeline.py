@@ -113,6 +113,7 @@ def candidate_generation_batched(
     alive: jax.Array | None = None,
     *,
     with_stats: bool = False,
+    nprobe_t: jax.Array | None = None,
 ):
     """(B, K, nq) scores -> (B, candidate_cap) sorted unique pids, -1 pad.
 
@@ -126,34 +127,54 @@ def candidate_generation_batched(
     per-lane ``(B,)`` count of the DISTINCT tombstoned passages the alive
     mask removed (clamped at ``candidate_cap`` distinct dead pids — the
     same static bound the live candidates get).
+
+    ``nprobe_t`` is an optional TRACED effective probe count
+    ``<= nprobe`` (``exec.bucketed``): ``jax.lax.top_k`` is prefix-stable
+    (``top_k(x, m)[:n] == top_k(x, n)`` for ``n <= m`` — ties break
+    toward the lower index in both), so zeroing the IVF walk for probe
+    ranks ``>= nprobe_t`` yields the EXACT candidate set a static
+    ``nprobe=nprobe_t`` program produces, while the program shape stays
+    keyed on the ``nprobe`` bucket.
     """
     B = s_cq.shape[0]
     _, cids = jax.lax.top_k(jnp.swapaxes(s_cq, 1, 2), nprobe)  # (B, nq, np)
     cids = cids.reshape(B, -1)  # (B, nq*nprobe)
     starts = index.ivf_offsets[cids]
     lens = index.ivf_lens[cids]
+    if nprobe_t is not None:
+        # probe rank of each flattened (token, probe) slot; masked probes
+        # get a zero-length IVF window -> contribute no pids at all
+        nq = s_cq.shape[2]
+        rank = jnp.tile(jnp.arange(nprobe, dtype=jnp.int32), nq)
+        lens = jnp.where(rank[None, :] < nprobe_t, lens, 0)
     pos = jnp.arange(index.ivf_list_cap, dtype=jnp.int32)
     idx = starts[..., None] + pos[None, None, :]
     valid = pos[None, None, :] < lens[..., None]
     idx = jnp.where(valid, idx, 0)
-    pids = jnp.where(valid, index.ivf_pids[idx], -1)  # (B, nq*np, cap)
+    # pads are ``num_passages`` so they sort PAST every real pid through
+    # the unique truncation (same reasoning as ``plaid.candidate_generation``
+    # — a -1 pad sorts first and evicts the highest pid at a full cap)
+    n = index.num_passages
+    pids = jnp.where(valid, index.ivf_pids[idx], n)  # (B, nq*np, cap)
     dead_pids = None
     if alive is not None:
-        safe = jnp.where(pids >= 0, pids, 0)
-        dead = (pids >= 0) & ~alive[safe]
-        dead_pids = jnp.where(dead, safe, -1)  # raw pid where tombstoned
-        pids = jnp.where((pids >= 0) & alive[safe], pids, -1)
+        real = pids < n
+        safe = jnp.where(real, pids, 0)
+        dead = real & ~alive[safe]
+        dead_pids = jnp.where(dead, safe, n)  # raw pid where tombstoned
+        pids = jnp.where(real & alive[safe], pids, n)
     uniq = jax.vmap(
-        functools.partial(jnp.unique, size=candidate_cap, fill_value=-1)
+        functools.partial(jnp.unique, size=candidate_cap, fill_value=n)
     )
     candidates = uniq(pids.reshape(B, -1))
+    candidates = jnp.where(candidates < n, candidates, -1)
     if not with_stats:
         return candidates
     if dead_pids is None:
         alive_dropped = jnp.zeros(B, jnp.int32)
     else:
         uniq_dead = uniq(dead_pids.reshape(B, -1))
-        alive_dropped = (uniq_dead >= 0).sum(axis=1).astype(jnp.int32)
+        alive_dropped = (uniq_dead < n).sum(axis=1).astype(jnp.int32)
     return candidates, alive_dropped
 
 
@@ -263,6 +284,9 @@ def select_finalists_impl(
     keep_blocks: bool = True,  # also return (codes4, tok_valid4) — the
     # per-finalist candidate blocks the UNFUSED stage 4 consumes; the fused
     # megakernel reads CSR windows directly, so fused callers pass False
+    nprobe_t: jax.Array | None = None,  # TRACED effective caps <= the
+    ndocs_t: jax.Array | None = None,  # static params.nprobe/ndocs (see
+    # exec.bucketed: a cap grid reuses one program per pow2 bucket)
 ):
     """Stages 1-3 of the funnel: pick the (B, n3) finalist passages.
 
@@ -293,13 +317,19 @@ def select_finalists_impl(
         index, qs, p.score_dtype, p.stage1_dtype
     )  # (B, K, nq)
     cand_out = candidate_generation_batched(
-        index, s_cq, p.nprobe, p.candidate_cap, alive, with_stats=funnel
+        index, s_cq, p.nprobe, p.candidate_cap, alive, with_stats=funnel,
+        nprobe_t=nprobe_t,
     )  # (B, cap); tombstoned passages never reach stage 2
     if funnel:
         candidates, alive_dropped = cand_out
         # distinct centroids the top-nprobe probe touched: recomputes the
         # (tiny) stage-1 top_k, which XLA CSEs with candidate generation's
         _, cids_f = jax.lax.top_k(jnp.swapaxes(s_cq, 1, 2), p.nprobe)
+        if nprobe_t is not None:
+            # probes past the traced cap collapse onto each token's top-1
+            # centroid so the distinct count matches a static nprobe_t run
+            rank_f = jnp.arange(p.nprobe, dtype=jnp.int32)[None, None, :]
+            cids_f = jnp.where(rank_f < nprobe_t, cids_f, cids_f[..., :1])
         cids_sorted = jnp.sort(cids_f.reshape(B, -1), axis=1)
         probed_centroids = (
             1 + (cids_sorted[:, 1:] != cids_sorted[:, :-1]).sum(axis=1)
@@ -323,11 +353,31 @@ def select_finalists_impl(
     # ---- Stage 3: full centroid interaction on the survivors
     codes3 = jnp.take_along_axis(codes_blk, idx2[..., None], axis=1)
     cand2 = jnp.take_along_axis(candidates, idx2, axis=1)
+    if ndocs_t is not None:
+        # Traced stage-2 cap: approx2's real entries are >= 0 and its pads
+        # are NEG, so top_k's prefix stability means positions < n2_t of
+        # idx2 are EXACTLY what a static ndocs=ndocs_t program selects;
+        # masking the tail to -1 makes the survivor set identical.
+        nd_t = jnp.minimum(
+            jnp.asarray(ndocs_t, jnp.int32), jnp.int32(p.candidate_cap)
+        )
+        rank2 = jnp.arange(n2, dtype=jnp.int32)[None, :]
+        cand2 = jnp.where(rank2 < nd_t, cand2, -1)
     approx3 = interaction(s_cq, codes3, q_masks, None)
     approx3 = jnp.where(cand2 >= 0, approx3, NEG)
     n3 = min(max(p.ndocs // 4, p.k), n2)
     _, idx3 = jax.lax.top_k(approx3, n3)  # (B, n3)
     final_pids = jnp.take_along_axis(cand2, idx3, axis=1)  # (B, n3)
+    if ndocs_t is not None:
+        # stage-3 keeps max(ndocs // 4, k) of its n2 survivors — apply the
+        # same rule at the traced cap (n3 >= n3_t always, so the static
+        # top_k above already ordered the prefix identically)
+        n3_t = jnp.minimum(
+            jnp.maximum(jnp.asarray(ndocs_t, jnp.int32) // 4, jnp.int32(p.k)),
+            nd_t,
+        )
+        rank3 = jnp.arange(n3, dtype=jnp.int32)[None, :]
+        final_pids = jnp.where(rank3 < n3_t, final_pids, -1)
 
     if keep_blocks:
         codes4 = jnp.take_along_axis(codes3, idx3[..., None], axis=1)
@@ -492,6 +542,8 @@ def run_pipeline_impl(
     # flag: one extra compile the first time it is flipped, zero after)
     interpret: bool | None = None,  # Pallas mode; None = platform default
     alive: jax.Array | None = None,  # (Nd,) bool; False = tombstoned passage
+    nprobe_t: jax.Array | None = None,  # TRACED effective nprobe/ndocs caps
+    ndocs_t: jax.Array | None = None,  # (see exec.bucketed + select_finalists)
 ):
     """Unjitted pipeline body — composable under ``shard_map`` / outer jits
     (``engine_sharded`` runs this per shard).  Callers outside a tracing
@@ -529,6 +581,8 @@ def run_pipeline_impl(
         interpret=interpret,
         alive=alive,
         keep_blocks=not params.fused,
+        nprobe_t=nprobe_t,
+        ndocs_t=ndocs_t,
     )
     exact = exact_stage4_impl(
         index,
@@ -563,6 +617,8 @@ def run_pipeline(
     funnel: bool = False,
     interpret: bool | None = None,
     alive: jax.Array | None = None,
+    nprobe_t=None,
+    ndocs_t=None,
 ):
     """The one compiled entry point for batched (B >= 1) PLAID search.
 
@@ -577,8 +633,17 @@ def run_pipeline(
     ``run_pipeline_impl``); updating tombstones never recompiles.
     ``funnel=True`` appends an ``obs.FunnelStats`` aux output (static flag:
     one extra compile when first flipped, zero retraces after).
+    ``nprobe_t`` / ``ndocs_t`` are optional TRACED effective caps below the
+    static ``params.nprobe`` / ``params.ndocs`` shape bounds — the pow2
+    cap-bucketing machinery (``repro.exec.bucketed``) sweeps them with
+    zero recompiles per bucket, and the masked result is identical to a
+    static program built at those caps (``tests/test_eval.py``).
     """
     params = dataclasses.replace(params, t_cs=0.0)  # not a cache key
+    if nprobe_t is not None:
+        nprobe_t = jnp.asarray(nprobe_t, jnp.int32)
+    if ndocs_t is not None:
+        ndocs_t = jnp.asarray(ndocs_t, jnp.int32)
     return run_pipeline_jit(
         index,
         qs,
@@ -589,4 +654,6 @@ def run_pipeline(
         funnel=funnel,
         interpret=interpret,
         alive=alive,
+        nprobe_t=nprobe_t,
+        ndocs_t=ndocs_t,
     )

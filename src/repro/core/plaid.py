@@ -106,8 +106,14 @@ def clamp_params(params: SearchParams, n_passages: int) -> SearchParams:
 def candidate_generation(
     index: PlaidIndex, s_cq: jax.Array, nprobe: int, candidate_cap: int
 ) -> jax.Array:
-    """Return (candidate_cap,) sorted unique passage ids, padded with -1."""
+    """Return (candidate_cap,) sorted unique passage ids, -1 pads at the
+    tail.  Pads are ``num_passages`` (past every real pid) through the
+    sorted-unique truncation so they can never displace a real candidate —
+    a -1 pad sorts FIRST and would silently evict the highest pid whenever
+    the unique count reaches the cap, making ``candidate_cap =
+    num_passages`` lossy by exactly one passage."""
     nq = s_cq.shape[1]
+    n = index.num_passages
     # top-nprobe centroids per query token (scores are (K, nq))
     _, cids = jax.lax.top_k(s_cq.T, nprobe)  # (nq, nprobe)
     cids = cids.reshape(-1)  # (nq*nprobe,)
@@ -117,8 +123,9 @@ def candidate_generation(
     idx = starts[:, None] + pos[None, :]
     valid = pos[None, :] < lens[:, None]
     idx = jnp.where(valid, idx, 0)
-    pids = jnp.where(valid, index.ivf_pids[idx], -1)  # (nq*nprobe, cap)
-    return jnp.unique(pids.reshape(-1), size=candidate_cap, fill_value=-1)
+    pids = jnp.where(valid, index.ivf_pids[idx], n)  # (nq*nprobe, cap)
+    cand = jnp.unique(pids.reshape(-1), size=candidate_cap, fill_value=n)
+    return jnp.where(cand < n, cand, -1)
 
 
 # --------------------------------------------------------------------------

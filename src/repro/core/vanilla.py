@@ -60,8 +60,14 @@ def _vanilla_search(
     idx = starts[:, None] + pos[None, :]
     valid = pos[None, :] < lens[:, None]
     idx = jnp.where(valid, idx, 0)
-    eids = jnp.where(valid, index.eivf_eids[idx], -1).reshape(-1)
-    eids = jnp.unique(eids, size=ncandidates, fill_value=-1)
+    # pads are ``num_tokens`` (sorting past every real eid) through the
+    # unique truncation — a -1 pad sorts first and would evict the highest
+    # eid whenever the unique count reaches the cap (see
+    # ``plaid.candidate_generation``)
+    nt = index.num_tokens
+    eids = jnp.where(valid, index.eivf_eids[idx], nt).reshape(-1)
+    eids = jnp.unique(eids, size=ncandidates, fill_value=nt)
+    eids = jnp.where(eids < nt, eids, -1)
 
     # ---- 2. decompress candidate embeddings & rank them (the costly prune)
     safe = jnp.where(eids >= 0, eids, 0)
@@ -75,8 +81,10 @@ def _vanilla_search(
     kept_eids = eids[keep_idx]
 
     # ---- 3. passage set + full padded decompression + exact MaxSim
-    pids = jnp.where(kept_eids >= 0, index.tok_pid[kept_eids], -1)
-    pids = jnp.unique(pids, size=ndocs_cap, fill_value=-1)
+    npass = index.num_passages
+    pids = jnp.where(kept_eids >= 0, index.tok_pid[kept_eids], npass)
+    pids = jnp.unique(pids, size=ndocs_cap, fill_value=npass)
+    pids = jnp.where(pids < npass, pids, -1)
     codes_blk, tok_valid = scoring.gather_doc_tokens(
         index.codes,
         index.doc_offsets,

@@ -1,0 +1,61 @@
+"""``repro.eval`` — the retrieval-quality harness.
+
+The certification layer the approximations ship through: every knob that
+trades work for quality (``t_cs`` pruning, ``nprobe``/``ndocs`` caps,
+int8/bf16 stage 1, the fused tail, tiered staging, live deltas, token
+pruning) is measured here against real IR metrics instead of only
+rank-identity to internal oracles.
+
+* :mod:`repro.eval.metrics` — vectorized recall@k / MRR@k / success@k /
+  nDCG@k over ranked pid arrays;
+* :mod:`repro.eval.qrels`   — pluggable relevance-judgment sources
+  (deterministic synthetic-labeled generator first, MS MARCO / TREC
+  qrels loader second);
+* :mod:`repro.eval.sweep`   — t_cs × nprobe × ndocs grids through the
+  traced-dynamic-scalar machinery (zero recompiles within a pow2 cap
+  bucket, asserted), per-point (work, latency, quality) records, the
+  computed Pareto frontier, and lossless-caps backend certification.
+"""
+from repro.eval.metrics import (
+    DEFAULT_KS,
+    compute_metrics,
+    mrr_at_k,
+    ndcg_at_k,
+    recall_at_k,
+    relevance_gains,
+    success_at_k,
+)
+from repro.eval.qrels import (
+    QuerySet,
+    load_trec_qrels,
+    synthetic_query_set,
+    trec_query_set,
+)
+from repro.eval.sweep import (
+    GridPoint,
+    SweepRecord,
+    certify_backends,
+    default_grid,
+    pareto_frontier,
+    sweep_quality,
+)
+
+__all__ = [
+    "DEFAULT_KS",
+    "GridPoint",
+    "QuerySet",
+    "SweepRecord",
+    "certify_backends",
+    "compute_metrics",
+    "default_grid",
+    "load_trec_qrels",
+    "mrr_at_k",
+    "ndcg_at_k",
+    "pareto_frontier",
+    "recall_at_k",
+    "relevance_gains",
+    "success_at_k",
+    "sweep_quality",
+    "synthetic_query_set",
+    "trec_query_set",
+]

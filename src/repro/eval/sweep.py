@@ -1,0 +1,361 @@
+"""Latency/quality Pareto sweeps + lossless-caps backend certification.
+
+Reproduces the PLAID reproducibility study's analysis (MacAvaney &
+Tonellotto 2024): the t_cs × nprobe × ndocs surface forms a genuine
+Pareto frontier, and naive settings fall off of it.  The sweep runs the
+whole grid through :class:`repro.exec.bucketed.BucketedCapEngine`, so
+
+* t_cs points are TRACED — a t_cs sweep recompiles zero times;
+* nprobe/ndocs points compile once per pow2 cap bucket and reuse that
+  program for every point inside it (the engine's zero-retrace ledger is
+  asserted after every sweep).
+
+Each grid point yields a :class:`SweepRecord` with the full metric dict
+(``repro.eval.metrics``), measured wall-clock latency, and a
+DETERMINISTIC ``work`` score — analytic funnel arithmetic (stage-1 dot +
+gathered candidate tokens + stage-4 rescore volume) computed from the
+in-graph :class:`repro.obs.funnel.FunnelStats` counters.  CI gates the
+frontier on ``(work, quality)``, never on wall-clock: work is a pure
+function of (corpus, queries, grid point), identical on every machine,
+while latency is reported as informational context.
+
+:func:`certify_backends` is the second half of the harness: at LOSSLESS
+caps (nprobe = num_centroids, t_cs = -inf, ndocs/candidate_cap >= corpus)
+every shipped approximation — fused tail, int8/bf16 stage 1, tiered
+staging, live deltas, every registry backend — must reproduce the exact
+float32 resident baseline's metrics to within 1e-6.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.eval.metrics import DEFAULT_KS, compute_metrics
+from repro.eval.qrels import QuerySet
+
+#: "minus infinity" pruning threshold (keeps every centroid; matches the
+#: lossless-caps convention the rank-identity tests use)
+T_CS_OFF = -1e9
+
+#: recall@k tolerance for the certification gate
+CERT_TOLERANCE = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPoint:
+    """One sweep setting.  ``t_cs`` is traced; the caps are bucket-mapped."""
+
+    t_cs: float
+    nprobe: int
+    ndocs: int
+
+    @property
+    def case(self) -> str:
+        t = "off" if self.t_cs <= T_CS_OFF else f"{self.t_cs:g}"
+        return f"t{t}_p{self.nprobe}_d{self.ndocs}"
+
+
+@dataclasses.dataclass
+class SweepRecord:
+    """Per-point sweep output: setting, cost axes, quality metrics."""
+
+    t_cs: float
+    nprobe: int
+    ndocs: int
+    bucket_nprobe: int
+    bucket_ndocs: int
+    work: float  # deterministic analytic funnel work (CI-gated axis)
+    latency_ms: float  # measured wall-clock (informational only)
+    metrics: dict  # {"recall@10": ..., "mrr@10": ..., ...}
+    on_frontier: bool = False
+
+    @property
+    def case(self) -> str:
+        return GridPoint(self.t_cs, self.nprobe, self.ndocs).case
+
+    def as_dict(self) -> dict:
+        d = dict(
+            t_cs=self.t_cs,
+            nprobe=self.nprobe,
+            ndocs=self.ndocs,
+            bucket_nprobe=self.bucket_nprobe,
+            bucket_ndocs=self.bucket_ndocs,
+            work=self.work,
+            latency_ms=self.latency_ms,
+            on_frontier=self.on_frontier,
+        )
+        d.update({k.replace("@", "_at_"): v for k, v in self.metrics.items()})
+        return d
+
+
+def work_score(funnel_stats, index, nq: int) -> float:
+    """Deterministic per-query work: analytic funnel arithmetic.
+
+    ``stage-1`` one C·Qᵀ dot (K·d·nq MACs) + ``stage 2-3`` score-matrix
+    lookups over every gathered candidate token (2 interaction passes ×
+    gathered_tokens × nq) + ``stage 4`` exact rescore of the survivors'
+    padded token blocks (survivors × doc_maxlen × d × nq MACs).  Computed
+    from the in-graph FunnelStats counters, so it is a pure function of
+    (corpus, queries, grid point) — machine-invariant, unlike latency,
+    which is why the Pareto gate runs on this axis.
+    """
+    gathered = float(np.mean(np.asarray(funnel_stats.gathered_tokens)))
+    survivors = float(np.mean(np.asarray(funnel_stats.stage3_survivors)))
+    stage1 = index.num_centroids * index.dim * nq
+    stage23 = 2.0 * gathered * nq
+    stage4 = survivors * index.doc_maxlen * index.dim * nq
+    return float(stage1 + stage23 + stage4)
+
+
+def default_grid(index, k: int = 10) -> list[GridPoint]:
+    """A small t_cs × nprobe × ndocs grid scaled to the index.
+
+    Deliberately includes non-pow2 cap values so the bucket machinery's
+    masking path is exercised (they share programs with their pow2
+    neighbors), and a lossless corner (t_cs off, max caps) so the
+    frontier's quality ceiling is anchored.
+    """
+    K = index.num_centroids
+    n = index.num_passages
+    nprobes = sorted({1, min(2, K), min(3, K), min(8, K)})
+    ndocs = sorted(
+        {
+            max(k, n // 8),
+            max(k, (3 * n) // 8),  # non-pow2 on purpose
+            min(n, max(4 * k, n // 2)),
+            n,
+        }
+    )
+    t_css = (T_CS_OFF, 0.25, 0.45)
+    return [
+        GridPoint(t, p, d) for t in t_css for p in nprobes for d in ndocs
+    ]
+
+
+def sweep_quality(
+    index,
+    query_set: QuerySet,
+    *,
+    k: int = 10,
+    grid: list[GridPoint] | None = None,
+    ks=DEFAULT_KS,
+    impl: str = "ref",
+    measure_latency: bool = True,
+) -> tuple[list[SweepRecord], "BucketedCapEngine"]:
+    """Run the grid through the bucketed engine -> per-point records.
+
+    Returns ``(records, engine)``; the engine's zero-retrace-within-bucket
+    assertion has already been checked, and its ``n_programs`` counter is
+    the compile bill for the whole grid (at most one program per pow2
+    bucket × funnel flag).
+    """
+    from repro.core import plaid
+    from repro.exec.bucketed import BucketedCapEngine
+
+    if grid is None:
+        grid = default_grid(index, k)
+    params = plaid.SearchParams(
+        k=k,
+        candidate_cap=index.num_passages,
+        impl=impl,
+        score_dtype="float32",
+    )
+    engine = BucketedCapEngine(index, params)
+    qs = np.asarray(query_set.queries, np.float32)
+    nq = qs.shape[1]
+    records = []
+    for point in grid:
+        out = engine.search_batch(
+            qs, None, point.t_cs, nprobe=point.nprobe, ndocs=point.ndocs,
+            funnel=True,
+        )
+        _, pids, fstats = out
+        metrics = compute_metrics(np.asarray(pids), query_set.qrels, ks)
+        latency_ms = float("nan")
+        if measure_latency:
+            import jax
+
+            t0 = time.perf_counter()
+            out2 = engine.search_batch(
+                qs, None, point.t_cs, nprobe=point.nprobe,
+                ndocs=point.ndocs, funnel=True,
+            )
+            jax.block_until_ready(out2[1])
+            latency_ms = (time.perf_counter() - t0) * 1e3 / qs.shape[0]
+        np_b, nd_b = engine.bucket(point.nprobe, point.ndocs)
+        records.append(
+            SweepRecord(
+                t_cs=point.t_cs,
+                nprobe=point.nprobe,
+                ndocs=point.ndocs,
+                bucket_nprobe=np_b,
+                bucket_ndocs=nd_b,
+                work=work_score(fstats, index, nq),
+                latency_ms=latency_ms,
+                metrics=metrics,
+            )
+        )
+    engine.assert_zero_retrace_within_bucket()
+    return records, engine
+
+
+def pareto_frontier(
+    records: list[SweepRecord],
+    *,
+    metric: str = "recall@10",
+) -> list[SweepRecord]:
+    """Mark + return the (work, metric) Pareto frontier of a sweep.
+
+    A record is on the frontier iff no other record has <= its work AND
+    > its quality (less work at strictly better quality dominates; equal
+    work keeps only the best quality).  Returned sorted by work
+    ascending; every record's ``on_frontier`` flag is set in place.
+    """
+    for r in records:
+        r.on_frontier = False
+    by_work = sorted(records, key=lambda r: (r.work, -r.metrics[metric]))
+    frontier: list[SweepRecord] = []
+    best = -np.inf
+    for r in by_work:
+        q = r.metrics[metric]
+        if q > best:
+            r.on_frontier = True
+            frontier.append(r)
+            best = q
+    return frontier
+
+
+# --------------------------------------------------------------------------
+# lossless-caps certification of every shipped approximation
+# --------------------------------------------------------------------------
+def lossless_params(index, k: int = 10, **overrides):
+    """Facade SearchParams at lossless caps for ``index``: every candidate
+    survives every stage, so stage-4's exact MaxSim fully determines the
+    ranking and any two correct engines must agree."""
+    from repro import retrieval
+
+    n = index.num_passages
+    return retrieval.SearchParams(
+        k=k,
+        nprobe=index.num_centroids,
+        t_cs=T_CS_OFF,
+        ndocs=n,
+        candidate_cap=n,
+        **overrides,
+    )
+
+
+def _ranked_pids(retriever, qs) -> np.ndarray:
+    return np.asarray(retriever.search_batch(qs).pids)
+
+
+def certify_backends(
+    index,
+    query_set: QuerySet,
+    *,
+    docs=None,
+    k: int = 10,
+    ks=DEFAULT_KS,
+    threshold: float = CERT_TOLERANCE,
+    backends: list[str] | None = None,
+) -> tuple[list[dict], list[str]]:
+    """Certify every registry backend + approximation variant at lossless
+    caps against the exact float32 resident baseline.
+
+    Variants: every registered backend name, plus the param-level
+    approximations on the plaid backend (``fused``, ``stage1_dtype`` in
+    bf16/int8) and — when ``docs`` is provided — a ``live-delta`` variant
+    whose corpus is split into a frozen-centroid base plus an ingested
+    delta segment (the online-ingest path, exercised with REAL delta
+    segments rather than a single wrapped base).
+
+    Returns ``(records, failures)``: one record per variant with its full
+    metric dict and recall@k delta vs the baseline; ``failures`` lists
+    human-readable messages for any variant whose recall@k fell more than
+    ``threshold`` below the baseline (the CI quality gate).
+    """
+    from repro import retrieval
+
+    qs = np.asarray(query_set.queries, np.float32)
+    qrels = query_set.qrels
+    base_params = lossless_params(index, k)
+    key = f"recall@{k}"
+
+    baseline = retrieval.from_index(index, backend="plaid", params=base_params)
+    base_pids = _ranked_pids(baseline, qs)
+    base_metrics = compute_metrics(base_pids, qrels, ks)
+    records = [
+        dict(
+            variant="baseline-exact-f32",
+            backend="plaid",
+            metrics=base_metrics,
+            delta=0.0,
+            passed=True,
+        )
+    ]
+    failures: list[str] = []
+
+    def check(variant: str, backend: str, retriever) -> None:
+        pids = _ranked_pids(retriever, qs)
+        metrics = compute_metrics(pids, qrels, ks)
+        delta = metrics[key] - base_metrics[key]
+        passed = delta >= -threshold
+        records.append(
+            dict(
+                variant=variant, backend=backend, metrics=metrics,
+                delta=float(delta), passed=bool(passed),
+            )
+        )
+        if not passed:
+            failures.append(
+                f"{variant}: {key} {metrics[key]:.6f} is "
+                f"{-delta:.2e} below the exact baseline "
+                f"{base_metrics[key]:.6f} at lossless caps "
+                f"(tolerance {threshold:g})"
+            )
+
+    names = backends if backends is not None else retrieval.list_backends()
+    for name in names:
+        if name == "plaid":
+            continue  # the baseline itself
+        params = base_params
+        if name == "vanilla":
+            # vanilla's candidate unit is EMBEDDINGS, not passages: its
+            # lossless stage-1 bound is the token count
+            params = lossless_params(index, k)
+            params = dataclasses.replace(
+                params, candidate_cap=index.num_tokens
+            )
+        check(name, name, retrieval.from_index(
+            index, backend=name, params=params
+        ))
+
+    # param-level approximations through the plaid backend
+    for variant, overrides in (
+        ("plaid-fused", dict(fused=True)),
+        ("plaid-stage1-bf16", dict(stage1_dtype="bfloat16")),
+        ("plaid-stage1-int8", dict(stage1_dtype="int8")),
+    ):
+        check(variant, "plaid", retrieval.from_index(
+            index, backend="plaid",
+            params=lossless_params(index, k, **overrides),
+        ))
+
+    # live with a REAL delta segment: frozen-centroid base over a corpus
+    # prefix + online ingest of the remainder (global pids stay 0..n-1)
+    if docs is not None and len(docs) >= 4:
+        from repro.core.index import build_index
+
+        n_base = len(docs) // 2
+        base_index = build_index(
+            docs[:n_base], centroids=index.centroids, codec=index.codec
+        )
+        live = retrieval.from_index(
+            base_index, backend="live", params=base_params
+        )
+        live.add_passages(docs[n_base:])
+        check("live-delta", "live", live)
+
+    return records, failures

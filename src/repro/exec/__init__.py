@@ -17,11 +17,14 @@ Modules:
   composing both axes (sharded base × stacked deltas)
 * :mod:`repro.exec.tiered`   — beyond-HBM partition group (device-resident
   funnel + host-resident payloads, two-phase gather per partition)
+* :mod:`repro.exec.bucketed` — pow2-bucketed static-cap dispatch: dynamic
+  ``nprobe``/``ndocs`` sweeps at O(log) compiles (traced cap masking)
 
 ``repro.core.engine_sharded`` and ``repro.live.engine`` are thin adapters
 over this package.
 """
 from repro.exec.plan import ExecutionPlan
+from repro.exec.bucketed import BucketedCapEngine
 from repro.exec.live import LiveExecutor, mesh_for_shards
 from repro.exec.segments import (
     SegmentBucket,
@@ -37,6 +40,7 @@ from repro.exec.sharded import make_sharded_search
 from repro.exec.tiered import TieredExecutor, partition_tiered
 
 __all__ = [
+    "BucketedCapEngine",
     "ExecutionPlan",
     "LiveExecutor",
     "mesh_for_shards",

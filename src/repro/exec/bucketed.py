@@ -1,0 +1,131 @@
+"""Pow2-bucketed static-cap dispatch: sweep ``nprobe``/``ndocs`` cheaply.
+
+``SearchParams.nprobe`` and ``SearchParams.ndocs`` are STATIC shape caps —
+a naive t_cs × nprobe × ndocs quality grid recompiles the pipeline once
+per (nprobe, ndocs) point, which is exactly the recompile-per-point trap
+the traced ``t_cs`` was designed out of.  This module closes the gap for
+the cap axes with the same pow2 discipline every padded axis in the repo
+uses (``exec.segments.pow2_bucket``, serving batch buckets):
+
+* the STATIC program is built at the pow2 bucket of the requested cap
+  (clamped to its lossless ceiling: ``num_centroids`` for nprobe, the
+  corpus-clamped ``candidate_cap`` for ndocs), so a full grid compiles at
+  most ``log2(K) * log2(cap)`` programs;
+* the REQUESTED cap rides in as the traced ``nprobe_t`` / ``ndocs_t``
+  operands of ``core.pipeline.run_pipeline``, which mask the bucket
+  program down to it.
+
+The masked result is IDENTICAL (scores and pids) to a static program
+built at the requested caps, because every selection stage is a
+``jax.lax.top_k`` and top_k is prefix-stable — ``top_k(x, m)[..., :n] ==
+top_k(x, n)`` for ``n <= m``, with ties breaking toward the lower index
+in both — so masking the tail of a larger top-k reproduces the smaller
+one exactly (pinned against per-point static programs in
+``tests/test_eval.py``).
+
+:class:`BucketedCapEngine` also keeps the trace ledger for the harness's
+zero-retrace-within-bucket assertion: a (bucket, batch-shape, funnel)
+signature that compiles more than once is a bug, not a slowdown.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import pipeline, plaid
+from repro.core.index import PlaidIndex
+from repro.exec.segments import pow2_bucket
+
+
+class BucketedCapEngine:
+    """Whole-corpus PLAID search at DYNAMIC (nprobe, ndocs) caps.
+
+    One engine instance serves every grid point: ``search_batch(...,
+    nprobe=, ndocs=)`` picks the pow2 bucket program and threads the
+    requested caps through as traced operands.  ``t_cs`` stays traced as
+    ever, so a full t_cs sweep inside one bucket is zero recompiles.
+    """
+
+    def __init__(self, index: PlaidIndex, params: plaid.SearchParams):
+        self.index = index
+        self.base_params = plaid.clamp_params(params, index.num_passages)
+        self._seen: set[tuple] = set()  # program signatures already traced
+        self.retraces_within_bucket = 0
+
+    # ---- bucket arithmetic ----------------------------------------------
+    def effective_caps(self, nprobe: int, ndocs: int) -> tuple[int, int]:
+        """Requested caps clamped to their lossless ceilings (matching
+        ``clamp_params`` + the top_k bound on nprobe)."""
+        np_eff = max(1, min(int(nprobe), self.index.num_centroids))
+        nd_eff = max(1, min(int(ndocs), self.base_params.candidate_cap))
+        return np_eff, nd_eff
+
+    def bucket(self, nprobe: int, ndocs: int) -> tuple[int, int]:
+        """The pow2 (nprobe, ndocs) bucket a requested point compiles in."""
+        np_eff, nd_eff = self.effective_caps(nprobe, ndocs)
+        return (
+            pow2_bucket(np_eff, hi=self.index.num_centroids),
+            pow2_bucket(nd_eff, hi=self.base_params.candidate_cap),
+        )
+
+    def params_for(self, nprobe: int, ndocs: int) -> plaid.SearchParams:
+        np_b, nd_b = self.bucket(nprobe, ndocs)
+        return dataclasses.replace(self.base_params, nprobe=np_b, ndocs=nd_b)
+
+    # ---- search ----------------------------------------------------------
+    def search_batch(
+        self,
+        qs,
+        q_masks=None,
+        t_cs=None,
+        *,
+        nprobe: int,
+        ndocs: int,
+        funnel: bool = False,
+    ):
+        """Batched search at the requested (nprobe, ndocs, t_cs) point.
+
+        Returns ``run_pipeline``'s output at the BUCKET's shapes — ranked
+        (scores, pids[, FunnelStats]) whose rank prefix equals a static
+        program at the requested caps; slots past the traced cap carry
+        pid -1 / NEG, which every consumer already treats as padding.
+        """
+        qs = jnp.asarray(qs, jnp.float32)
+        if q_masks is None:
+            q_masks = jnp.ones(qs.shape[:2], jnp.float32)
+        t = self.base_params.t_cs if t_cs is None else t_cs
+        np_eff, nd_eff = self.effective_caps(nprobe, ndocs)
+        params_b = self.params_for(nprobe, ndocs)
+        key = (params_b.nprobe, params_b.ndocs, bool(funnel), qs.shape)
+        before = pipeline.trace_count()
+        out = pipeline.run_pipeline(
+            self.index,
+            qs,
+            q_masks,
+            t,
+            params_b,
+            funnel=funnel,
+            nprobe_t=np_eff,
+            ndocs_t=nd_eff,
+        )
+        if key in self._seen:
+            self.retraces_within_bucket += pipeline.trace_count() - before
+        self._seen.add(key)
+        return out
+
+    # ---- trace accounting ------------------------------------------------
+    @property
+    def n_programs(self) -> int:
+        """Distinct (bucket, batch-shape, funnel) programs traced so far."""
+        return len(self._seen)
+
+    def assert_zero_retrace_within_bucket(self) -> None:
+        """The harness's compile-discipline gate: a grid point landing in
+        an already-traced bucket must NOT have retraced the pipeline."""
+        if self.retraces_within_bucket:
+            raise AssertionError(
+                f"{self.retraces_within_bucket} pipeline retrace(s) inside "
+                "already-compiled cap buckets — a traced operand leaked "
+                "into the jit cache key"
+            )

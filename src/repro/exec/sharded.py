@@ -85,11 +85,11 @@ def index_shardings(mesh, index: PlaidIndex):
             name: (rep if name in _REPLICATED_FIELDS else doc)
             for name in index_as_dict(index)
         },
-        dim=index.dim,
-        nbits=index.nbits,
-        doc_maxlen=index.doc_maxlen,
-        ivf_list_cap=index.ivf_list_cap,
-        eivf_list_cap=index.eivf_list_cap,
+        **{
+            f.name: getattr(index, f.name)
+            for f in dataclasses.fields(PlaidIndex)
+            if f.metadata.get("static")
+        },
     )
 
 

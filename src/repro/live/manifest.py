@@ -66,6 +66,18 @@ ARRAY_FIELDS = tuple(
 STATIC_FIELDS = tuple(
     f.name for f in dataclasses.fields(PlaidIndex) if f.metadata.get("static")
 )
+#: dataclass defaults for static fields — manifests written before a
+#: static field existed (e.g. ``prune_fraction``) load with its default
+#: instead of KeyError-ing; new writers always stamp the full set.
+_STATIC_DEFAULTS = {
+    f.name: f.default
+    for f in dataclasses.fields(PlaidIndex)
+    if f.metadata.get("static")
+}
+
+
+def _static_from_meta(static_meta: dict) -> dict:
+    return {k: static_meta.get(k, _STATIC_DEFAULTS[k]) for k in STATIC_FIELDS}
 
 #: O(num_tokens) payload fields a tiered segment stores as raw mmap-able
 #: ``.npy`` files instead of ``arrays.npz`` members.  ``codes`` and
@@ -191,7 +203,7 @@ def read_tiered_segment(seg_dir: str, static_meta: dict):
     payloads = {
         f: read_tiered_payload(seg_dir, f) for f in ("codes", "residuals")
     }
-    static = {k: static_meta[k] for k in STATIC_FIELDS}
+    static = _static_from_meta(static_meta)
     return arrays, static, payloads
 
 
@@ -209,7 +221,7 @@ def read_segment(seg_dir: str, static_meta: dict) -> PlaidIndex:
         arrays["centroids_q"], arrays["centroids_scale"] = (
             quantize_centroids(arrays["centroids"])
         )
-    return PlaidIndex(**arrays, **{k: static_meta[k] for k in STATIC_FIELDS})
+    return PlaidIndex(**arrays, **_static_from_meta(static_meta))
 
 
 # --------------------------------------------------------------------------

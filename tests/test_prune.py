@@ -1,0 +1,218 @@
+"""Build-time token pruning (``repro.build.prune``): mask semantics, the
+``prune_fraction`` knob through monolithic + streaming builds, footprint
+proportionality against the ``kernels.costs`` model, and manifest
+round-trips of the new static field."""
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import retrieval
+from repro.build import build_index_streaming, emit
+from repro.build.prune import prune_chunk, prune_mask, token_importance
+from repro.core import index as index_mod
+from repro.data import synthetic as syn
+from repro.kernels import costs
+from repro.live.manifest import load_segmented
+
+
+def _corpus(n=40, dim=16, seed=0):
+    docs, _ = syn.embedding_corpus(n, dim=dim, seed=seed)
+    emb = np.concatenate([np.asarray(d, np.float32) for d in docs])
+    doc_lens = np.array([len(d) for d in docs], np.int64)
+    return docs, emb, doc_lens
+
+
+# --------------------------------------------------------------------------
+# mask / importance semantics
+# --------------------------------------------------------------------------
+def test_importance_shapes_and_validation():
+    _, emb, doc_lens = _corpus()
+    for method in ("attention", "norm"):
+        s = token_importance(emb, doc_lens, method=method)
+        assert s.shape == (emb.shape[0],)
+        assert np.all(np.isfinite(s))
+    with pytest.raises(ValueError, match="unknown importance method"):
+        token_importance(emb, doc_lens, method="entropy")
+    with pytest.raises(ValueError, match="doc_lens sum"):
+        token_importance(emb, doc_lens[:-1])
+
+
+def test_norm_method_drops_smallest_norm_tokens():
+    emb = np.ones((4, 8), np.float32)
+    emb[2] *= 0.01  # the obvious victim
+    keep = prune_mask(emb, np.array([4]), fraction=0.25, method="norm")
+    np.testing.assert_array_equal(keep, [True, True, False, True])
+
+
+def test_mask_deterministic_fraction_and_floor():
+    _, emb, doc_lens = _corpus()
+    a = prune_mask(emb, doc_lens, fraction=0.3)
+    b = prune_mask(emb, doc_lens, fraction=0.3)
+    np.testing.assert_array_equal(a, b)
+    starts = np.concatenate([[0], np.cumsum(doc_lens)])
+    for di, n in enumerate(doc_lens):
+        kept = int(a[starts[di] : starts[di] + n].sum())
+        assert kept == int(n) - min(int(0.3 * int(n)), int(n) - 1)
+        assert kept >= 1
+    with pytest.raises(ValueError, match="fraction"):
+        prune_mask(emb, doc_lens, fraction=1.0)
+
+
+def test_single_token_docs_never_pruned():
+    emb = np.random.default_rng(0).normal(size=(5, 8)).astype(np.float32)
+    keep = prune_mask(emb, np.array([1, 1, 1, 1, 1]), fraction=0.9)
+    assert keep.all()
+
+
+def test_prune_chunk_preserves_order_and_chunk_invariance():
+    _, emb, doc_lens = _corpus(n=30)
+    whole_emb, whole_lens = prune_chunk(emb, doc_lens, fraction=0.25)
+    # surviving tokens keep their original relative order
+    keep = prune_mask(emb, doc_lens, fraction=0.25)
+    np.testing.assert_array_equal(whole_emb, emb[keep])
+    assert int(whole_lens.sum()) == whole_emb.shape[0]
+    # doc-local: pruning per chunk (cut on doc boundaries) == whole-corpus
+    cut = 13
+    tok_cut = int(doc_lens[:cut].sum())
+    e1, l1 = prune_chunk(emb[:tok_cut], doc_lens[:cut], fraction=0.25)
+    e2, l2 = prune_chunk(emb[tok_cut:], doc_lens[cut:], fraction=0.25)
+    np.testing.assert_array_equal(np.concatenate([e1, e2]), whole_emb)
+    np.testing.assert_array_equal(np.concatenate([l1, l2]), whole_lens)
+
+
+def test_fraction_zero_is_identity():
+    _, emb, doc_lens = _corpus()
+    e, l = prune_chunk(emb, doc_lens, fraction=0.0)
+    assert e is emb and l is doc_lens
+
+
+# --------------------------------------------------------------------------
+# the knob through real builds
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def corpora():
+    docs, _ = syn.embedding_corpus(48, dim=16, seed=3)
+    return docs
+
+
+def test_pruned_build_shrinks_payload_proportionally(corpora):
+    docs = corpora
+    full = index_mod.build_index(docs, nbits=2, kmeans_iters=2, seed=0)
+    pruned = index_mod.build_index(
+        docs, nbits=2, kmeans_iters=2, seed=0, prune_fraction=0.25
+    )
+    assert pruned.prune_fraction == 0.25
+    assert pruned.num_tokens < full.num_tokens
+    assert pruned.num_passages == full.num_passages
+    pd = int(np.asarray(full.residuals).shape[1])
+    byte_ratio = costs.resident_payload_bytes(
+        num_tokens=pruned.num_tokens, pd=pd
+    ) / costs.resident_payload_bytes(num_tokens=full.num_tokens, pd=pd)
+    token_ratio = pruned.num_tokens / full.num_tokens
+    assert byte_ratio == pytest.approx(token_ratio, abs=1e-12)
+    # CSR invariants survive pruning
+    assert np.all(np.diff(np.asarray(pruned.tok_pid)) >= 0)
+    assert int(np.asarray(pruned.doc_lens).sum()) == pruned.num_tokens
+
+
+def test_prune_zero_build_is_bit_identical(corpora):
+    docs = corpora
+    a = index_mod.build_index(docs, nbits=2, kmeans_iters=2, seed=0)
+    b = index_mod.build_index(
+        docs, nbits=2, kmeans_iters=2, seed=0, prune_fraction=0.0
+    )
+    for f in dataclasses.fields(index_mod.PlaidIndex):
+        if f.metadata.get("static"):
+            assert getattr(a, f.name) == getattr(b, f.name)
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, f.name)),
+                np.asarray(getattr(b, f.name)), err_msg=f.name,
+            )
+
+
+def test_streaming_pruned_build_matches_monolithic(corpora):
+    docs = corpora
+    mono = index_mod.build_index(
+        docs, nbits=2, kmeans_iters=2, seed=0, prune_fraction=0.25
+    )
+    stream = build_index_streaming(
+        docs, nbits=2, kmeans_iters=2, seed=0, prune_fraction=0.25,
+        chunk_docs=7,
+    )
+    for name in ("codes", "residuals", "doc_lens", "ivf_pids", "tok_pid"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(mono, name)),
+            np.asarray(getattr(stream, name)), err_msg=name,
+        )
+    assert stream.prune_fraction == 0.25
+
+
+def test_streaming_rejects_bad_prune_args(corpora):
+    with pytest.raises(ValueError, match="fraction"):
+        build_index_streaming(corpora, prune_fraction=1.5)
+    with pytest.raises(ValueError, match="method"):
+        build_index_streaming(corpora, prune_method="entropy")
+
+
+def test_pruned_index_round_trips_manifest(corpora):
+    docs = corpora
+    idx = index_mod.build_index(
+        docs, nbits=2, kmeans_iters=2, seed=0, prune_fraction=0.25
+    )
+    with tempfile.TemporaryDirectory() as d:
+        emit(idx, d, layout="v2")
+        segments, *_ = load_segmented(d)
+        (loaded,) = segments
+        assert loaded.prune_fraction == 0.25
+        np.testing.assert_array_equal(
+            np.asarray(loaded.codes), np.asarray(idx.codes)
+        )
+        # a pruned index searches fine end to end
+        qs, _ = syn.queries_from_docs(docs, 4, seed=1)
+        r = retrieval.from_index(
+            loaded, backend="plaid",
+            params=retrieval.SearchParams(
+                k=5, nprobe=loaded.num_centroids, t_cs=-1e9,
+                ndocs=loaded.num_passages,
+                candidate_cap=loaded.num_passages,
+            ),
+        )
+        pids = np.asarray(r.search_batch(np.asarray(qs, np.float32)).pids)
+        assert pids.shape == (4, 5)
+        assert (pids >= 0).all()
+
+
+def test_legacy_manifest_defaults_prune_fraction(corpora):
+    """Manifests written before the field existed must load with the
+    dataclass default (0.0), not crash on the missing key."""
+    import json
+    import os
+
+    docs = corpora
+    idx = index_mod.build_index(docs, nbits=2, kmeans_iters=2, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        emit(idx, d, layout="v2")
+        # strip the key from every segment's static metadata, as an old
+        # writer would have produced
+        for root, _dirs, files in os.walk(d):
+            for fn in files:
+                if not fn.endswith(".json"):
+                    continue
+                p = os.path.join(root, fn)
+                with open(p) as f:
+                    meta = json.load(f)
+                changed = False
+                for section in (
+                    meta.get("static"), meta.get("static_meta"), meta
+                ):
+                    if isinstance(section, dict) and "prune_fraction" in section:
+                        section.pop("prune_fraction")
+                        changed = True
+                if changed:
+                    with open(p, "w") as f:
+                        json.dump(meta, f)
+        segments, *_ = load_segmented(d)
+        assert segments[0].prune_fraction == 0.0
